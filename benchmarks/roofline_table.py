@@ -1,0 +1,54 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table (markdown + CSV)
+and emit one CSV row per cell for benchmarks.run."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import record
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16", variant: str = "baseline") -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}__{variant}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def markdown_table(mesh: str = "pod16x16", variant: str = "baseline") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | bound | "
+            "useful frac | roofline frac | mem/dev GiB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh, variant):
+        if c["status"] == "skipped":
+            arch, shape = c["cell"].split("__")[:2]
+            rows.append(f"| {arch} | {shape} | — | — | — | skipped | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2e} | "
+            f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{c['memory']['peak_memory'] / 2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def run() -> None:
+    for c in load_cells():
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        record(f"roofline_{r['arch']}_{r['shape']}",
+               r["t_bound"] * 1e6,
+               f"dominant={r['dominant']};"
+               f"roofline_frac={r['roofline_fraction']:.3f};"
+               f"useful_frac={r['useful_fraction']:.2f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (and writes results/benchmarks.csv).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from . import (common, cpu_compare, microkernel, multi_core,  # noqa: E402
+               roofline_table, scalability, single_core)
+
+SUITES = {
+    "fig3": microkernel.run,
+    "fig4": single_core.run,
+    "fig5": multi_core.run,
+    "fig6": scalability.run,
+    "fig7": cpu_compare.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names " + str(list(SUITES)))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in names:
+        SUITES[name]()
+    out = pathlib.Path(__file__).resolve().parents[1] / "results"
+    out.mkdir(exist_ok=True)
+    common.dump_csv(str(out / "benchmarks.csv"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig. 6 — scalability of ftIMM 1 -> 8 cores on the three 20480-sized
+irregular GEMMs.  Paper finding: sub-linear scaling (memory-bound), and the
+K-parallel case (T2/T3 with N=32) scales worst because reduction overhead
+grows with cores.
+
+``derived``: modeled speedup at each core count (the figure's y-axis)."""
+from __future__ import annotations
+
+from repro.core.gemm import plan_distributed, plan_gemm
+
+from .common import record
+
+CASES = [
+    ("t1_20480x32x32", 20480 * 32, 32, 32),      # tall-skinny x small
+    ("t2_32x20480_ish", 32, 20480 * 32, 32),     # skinny-tall
+    ("t3_20480x20480x32", 20480, 20480, 32),
+]
+
+
+def run() -> None:
+    for name, m, k, n in CASES:
+        t1 = plan_gemm(m, k, n).est.t_total
+        for cores in (1, 2, 4, 8):
+            if cores == 1:
+                speed, strat = 1.0, "single"
+            else:
+                d = plan_distributed(m, k, n, cores)
+                speed, strat = t1 / d.t_total, d.strategy
+            record(f"fig6_scalability_{name}_c{cores}", 0.0,
+                   f"modeled_speedup={speed:.2f};strategy={strat}")

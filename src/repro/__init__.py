@@ -1,0 +1,3 @@
+"""repro: ftIMM (irregular-shaped GEMM on software-managed-memory cores)
+as a production JAX/Pallas training + serving framework for TPU pods."""
+__version__ = "0.1.0"

@@ -1,0 +1,138 @@
+"""Sharded, async, atomic checkpointing with elastic restore.
+
+Layout:
+    <dir>/step_000120/
+        META.json            — step, leaf paths/shapes/dtypes, config name
+        <leaf-path>.npy      — one file per pytree leaf (host-gathered)
+        DONE                 — commit marker (write is atomic via tmp+rename)
+
+* async: ``save`` snapshots leaves to host memory, returns immediately and
+  writes on a background thread (off the training critical path); ``wait``
+  joins.  Failure mid-write never corrupts the previous checkpoint (commit
+  marker + directory rename).
+* elastic restore: leaves are loaded from disk and ``jax.device_put`` with
+  whatever shardings the NEW mesh prescribes — restoring a run saved on a
+  (16,16) mesh onto (8,16) (node failure) or (2,16,16) (scale-up) is the
+  same code path.  Tested in tests/test_checkpoint.py.
+* multi-host note: this writes full leaves from host 0's view (fine for the
+  dry-run scale); a per-process shard writer would slot in at ``_to_host``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, jax.Array]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def name(path):
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        return _SEP.join(parts)
+
+    return {name(p): v for p, v in flat}
+
+
+class Checkpointer:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------ save ------------------------------
+
+    def save(self, step: int, state: dict, *, meta: dict | None = None,
+             blocking: bool = False) -> None:
+        leaves = _flatten(state)
+        host = {k: np.asarray(v) for k, v in leaves.items()}  # snapshot
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, meta or {}), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict, meta: dict) -> None:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        index = {}
+        for name, arr in host.items():
+            fn = name.replace(_SEP, "__") + ".npy"
+            np.save(tmp / fn, arr)
+            index[name] = {"file": fn, "shape": list(arr.shape),
+                           "dtype": str(arr.dtype)}
+        with open(tmp / "META.json", "w") as f:
+            json.dump({"step": step, "leaves": index, "meta": meta}, f)
+        (tmp / "DONE").touch()
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ----------------------------- restore ----------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if (p / "DONE").exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None) -> tuple[int, dict]:
+        """Restore into the structure of ``template``; ``shardings`` (same
+        pytree structure, optional) re-shards onto the CURRENT mesh —
+        elastic resume after mesh changes."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "META.json").read_text())
+        names = _flatten(template)
+        shard_map_ = _flatten(shardings) if shardings is not None else {}
+
+        out = {}
+        for name in names:
+            info = meta["leaves"][name]
+            arr = np.load(d / info["file"])
+            sh = shard_map_.get(name)
+            out[name] = (jax.device_put(arr, sh) if sh is not None
+                         else jax.numpy.asarray(arr))
+        # unflatten back into template structure
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+
+        def name_of(path):
+            return _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                             for k in path)
+
+        leaves = [out[name_of(p)] for p, _ in paths]
+        return step, jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,12 @@
+"""mamba2-370m [ssm]: attention-free SSD (state-space duality).
+[arXiv:2405.21060; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    num_layers=48, d_model=1024, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128,
+    supports_long_context=True,    # O(1)-state decode
+    source="arXiv:2405.21060",
+)

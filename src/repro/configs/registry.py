@@ -1,0 +1,31 @@
+"""--arch registry: one config module per assigned architecture."""
+from __future__ import annotations
+
+from .base import ModelConfig, smoke_config
+from .whisper_base import CONFIG as _whisper
+from .zamba2_7b import CONFIG as _zamba2
+from .qwen3_1p7b import CONFIG as _qwen17
+from .minitron_4b import CONFIG as _minitron
+from .qwen3_8b import CONFIG as _qwen8
+from .gemma3_4b import CONFIG as _gemma3
+from .llama4_scout_17b_a16e import CONFIG as _llama4
+from .mixtral_8x7b import CONFIG as _mixtral
+from .mamba2_370m import CONFIG as _mamba2
+from .llava_next_34b import CONFIG as _llava
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _whisper, _zamba2, _qwen17, _minitron, _qwen8,
+        _gemma3, _llama4, _mixtral, _mamba2, _llava,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return smoke_config(ARCHS[name[:-len("-smoke")]])
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: ftIMM — irregular-shaped GEMM with
+# auto-specialized kernels, two parallelization strategies, and CMR-driven
+# dynamic adjusting — lives in core.gemm.
+from . import gemm
+
+__all__ = ["gemm"]

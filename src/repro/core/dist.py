@@ -1,0 +1,82 @@
+"""Trace-time distribution context.
+
+Model code consults ``current_dist()`` to decide whether to use explicit
+shard_map paths (e.g. sequence-parallel flash-decode attention — the paper's
+K-parallel strategy across chips).  Set by launchers / dryrun via
+``use_dist``; None means single-device semantics (smoke tests, examples).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    sp_decode: bool = True          # K-parallel (flash-decode) for decode attn
+    moe_buf_shard: bool = False     # shard MoE dispatch buffers over dp
+    ssm_head_shard: bool = False    # shard SSD head dim over model
+    rms_bf16: bool = False          # fusion-friendly rms_norm (no f32 stream)
+    sp_inputs: bool = False         # pin AG points: gather residual at ln1/ln2
+
+    @property
+    def dp_size(self) -> int:
+        return int(__import__("math").prod(
+            self.mesh.shape[a] for a in self.dp_axes))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+
+_CURRENT: DistContext | None = None
+
+
+def current_dist() -> DistContext | None:
+    return _CURRENT
+
+
+def shard_act(x, *dims: str | None):
+    """Constrain an activation's sharding under the current DistContext.
+
+    dims: per-dimension logical axis — "dp" (data axes), "model", or None.
+    No-op outside a distribution context (smoke tests / single device).
+    GSPMD left alone tends to replicate gather outputs (token embeddings)
+    and then the whole residual stream; pinning (B, S, D) -> (dp, None/model
+    -seq, None) at block boundaries keeps activations distributed — the same
+    role the paper's explicit per-core DMA ownership plays.
+    """
+    ctx = _CURRENT
+    if ctx is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    parts = []
+    for d, size in zip(dims, x.shape):
+        if d == "dp":
+            n = ctx.dp_size
+            parts.append(ctx.dp_axes if (n > 1 and size % n == 0) else None)
+        elif d == "model":
+            n = ctx.model_size
+            parts.append(ctx.model_axis if (n > 1 and size % n == 0) else None)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*parts)))
+
+
+@contextlib.contextmanager
+def use_dist(ctx: DistContext | None):
+    global _CURRENT
+    old = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield
+    finally:
+        _CURRENT = old

@@ -1,0 +1,116 @@
+"""Framework-wide GEMM entry point.
+
+Every dense contraction in the model stack routes through ``matmul`` /
+``project``: the shape is classified (paper §III-A), the CMR tuner picks the
+strategy + blocks (paper §IV-C), and the call dispatches to
+
+  * the specialized Pallas ftIMM kernel on TPU (or in interpret mode when
+    explicitly requested, e.g. kernel tests), wrapped in a custom VJP whose
+    backward GEMMs are themselves ftIMM-planned — dW = x.T @ dy is the
+    paper's T2 shape and gets the K-oriented treatment automatically;
+  * an XLA ``dot_general`` path on CPU (used by the multi-pod dry-run so
+    ``cost_analysis`` reflects the true FLOPs/bytes) with identical
+    fp32-accumulation semantics.
+
+Backend selection: ``REPRO_GEMM_BACKEND`` env var ("pallas" | "xla" |
+"pallas_interpret"), else pallas on TPU and xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.ftimm import ops as _ops
+from ...kernels.ftimm import ref as _ref
+from .tuner import plan_gemm
+
+_REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
+
+
+def _backend() -> str:
+    env = os.environ.get("REPRO_GEMM_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _mkn(trans: str, a_shape, b_shape):
+    if trans == "nn":
+        (m, k), (_, n) = a_shape, b_shape
+    elif trans == "tn":
+        (k, m), (_, n) = a_shape, b_shape
+    else:
+        (m, k), (n, _) = a_shape, b_shape
+    return m, k, n
+
+
+def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
+                 interpret: bool) -> jax.Array:
+    m, k, n = _mkn(trans, a.shape, b.shape)
+    in_bytes = jnp.dtype(a.dtype).itemsize
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    plan = plan_gemm(m, k, n, in_bytes, out_bytes)
+    return _ops.gemm(
+        a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
+        **plan.kernel_kwargs(),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_fn(trans: str, out_dtype_name: str, interpret: bool):
+    """Build the custom-VJP'd Pallas matmul for one (trans, dtype) combo."""
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(a, b):
+        return _run_planned(a, b, trans, out_dtype, interpret)
+
+    def fwd(a, b):
+        return f(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        run = lambda x, y, t, dt: _run_planned(x, y, t, dt, interpret)  # noqa: E731
+        if trans == "nn":          # y = a @ b
+            da = run(g, b, "nt", a.dtype)
+            db = run(a, g, "tn", b.dtype)   # T2: K = tokens >> M ~ N
+        elif trans == "tn":        # y = a.T @ b, a: (K, M)
+            da = run(b, g, "nt", a.dtype)   # (K,N)@(N,M) -> (K,M)
+            db = run(a, g, "nn", b.dtype)   # (K,M)@(M,N) -> (K,N)
+        else:                      # y = a @ b.T, b: (N, K)
+            da = run(g, b, "nn", a.dtype)   # (M,N)@(N,K) -> (M,K)
+            db = run(g, a, "tn", b.dtype)   # g.T @ a -> (N,K)
+        return da, db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
+           out_dtype=None, backend: str | None = None) -> jax.Array:
+    """2-D GEMM through the ftIMM planner. fp32 accumulation always."""
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    backend = backend or _backend()
+    if backend == "xla":
+        return _REF[trans](a, b, out_dtype)
+    if backend == "pallas":
+        return _pallas_fn(trans, out_dtype.name, False)(a, b)
+    if backend == "pallas_interpret":
+        return _pallas_fn(trans, out_dtype.name, True)(a, b)
+    raise ValueError(f"unknown gemm backend: {backend}")
+
+
+def project(x: jax.Array, w: jax.Array, *, out_dtype=None,
+            backend: str | None = None) -> jax.Array:
+    """(..., D) @ (D, N) -> (..., N): flattens leading dims into the paper's
+    M dimension (tokens — typically the tall axis of T1/T3)."""
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    y = matmul(x.reshape(m, x.shape[-1]), w, out_dtype=out_dtype,
+               backend=backend)
+    return y.reshape(*lead, w.shape[-1])

@@ -1,0 +1,90 @@
+"""Cross-chip ftIMM: the paper's two multi-core strategies over a JAX mesh.
+
+Paper Alg. 4 (M-parallel): DSP cores split the M loop; the shared B panel
+sits in GSM.  Here: shard A's M rows over a mesh axis, replicate B, no
+steady-state collective.
+
+Paper Alg. 5 (K-parallel): cores split the K loop and reduce partial C
+through GSM.  Here: shard the contraction dim over the axis and ``psum`` the
+fp32 partials over ICI.  This is the strategy that wins when M and N are both
+small but K is huge — exactly the shape of long-context decode attention
+(see ``repro.serve.decode``: flash-decoding == ftIMM K-parallel).
+
+Strategy selection uses the same CMR-with-collective-term scoring as the
+paper's dynamic adjusting (``tuner.plan_distributed``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .dispatch import matmul
+from .tuner import plan_distributed
+
+
+def choose_strategy(m: int, k: int, n: int, num_cores: int,
+                    in_bytes: int = 4) -> str:
+    return plan_distributed(m, k, n, num_cores, in_bytes).strategy
+
+
+def dist_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    strategy: str | None = None,
+    out_dtype=None,
+    backend: str | None = None,
+) -> jax.Array:
+    """C = A(M,K) @ B(K,N) parallelized over ``mesh[axis]``.
+
+    Operands may be global arrays with any sharding; shard_map re-shards to
+    the strategy's layout.  Output is M-sharded (m_parallel) or replicated
+    (k_parallel) over ``axis``.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    nc = mesh.shape[axis]
+    if strategy is None:
+        strategy = choose_strategy(m, k, n, nc, jnp.dtype(a.dtype).itemsize)
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+
+    if strategy == "m_parallel":
+        pad_m = (-m) % nc
+        a_p = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(axis, None), P(None, None)),
+            out_specs=P(axis, None),
+        )
+        def f(a_l, b_l):
+            return matmul(a_l, b_l, out_dtype=out_dtype, backend=backend)
+
+        out = f(a_p, b_p := b)
+        return out[:m] if pad_m else out
+
+    if strategy == "k_parallel":
+        pad_k = (-k) % nc
+        a_p = jnp.pad(a, ((0, 0), (0, pad_k))) if pad_k else a
+        b_p = jnp.pad(b, ((0, pad_k), (0, 0))) if pad_k else b
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(None, axis), P(axis, None)),
+            out_specs=P(None, None),
+        )
+        def f(a_l, b_l):
+            partial_c = matmul(a_l, b_l, out_dtype=jnp.float32,
+                               backend=backend)
+            # Paper Alg. 5 line 12: reduce partial C among cores (GSM -> ICI).
+            return jax.lax.psum(partial_c, axis)
+
+        return f(a_p, b_p).astype(out_dtype)
+
+    raise ValueError(f"unknown strategy: {strategy}")

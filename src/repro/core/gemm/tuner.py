@@ -1,0 +1,171 @@
+"""Dynamic adjusting (paper §IV-C): choose parallelization strategy and block
+sizes per GEMM shape, at trace time, from the CMR model.
+
+The paper fixes initial block sizes from CMR + capacity, then adjusts them to
+the actual matrix shape at run time, and picks M-parallel vs K-parallel from
+the shape (K-parallel iff M and N are both small and K is large, because only
+splitting K can occupy all 8 DSP cores).  Here:
+
+  * single-core blocks (bm, bn, bk, dim_order) come from enumerating aligned
+    candidates and scoring with ``cmr.estimate`` under the VMEM budget,
+  * the cross-chip strategy (M-shard vs K-shard+psum) is scored with an added
+    ICI collective term (``plan_distributed``), mirroring Eqs. 1-4's
+    num_core terms,
+  * plans are LRU-cached per shape — the paper's "dynamic adjusting" happens
+    once per (M, K, N, dtype) and is free afterwards.
+
+``tgemm_plan`` reproduces the TGEMM strawman the paper compares against: one
+fixed micro-kernel/block configuration regardless of shape, with implicit
+padding of N (its waste shows up in ``est.flops_padded`` / traffic).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+from .cmr import TPU_V5E, PlanEstimate, TpuSpec, cdiv, ceil_to, estimate
+from .shapes import GemmClass, classify
+
+
+@dataclass(frozen=True)
+class GemmPlan:
+    bm: int
+    bn: int
+    bk: int
+    nsplit: int = 1                 # in-kernel split-K factor
+    dim_order: str = "mn"
+    gemm_class: GemmClass = GemmClass.REGULAR
+    est: PlanEstimate | None = None
+
+    def kernel_kwargs(self) -> dict:
+        return dict(bm=self.bm, bn=self.bn, bk=self.bk,
+                    nsplit=self.nsplit, dim_order=self.dim_order)
+
+
+@dataclass(frozen=True)
+class DistPlan:
+    """Cross-chip strategy for one GEMM (paper's two parallelization modes)."""
+    strategy: str                   # "m_parallel" | "k_parallel"
+    num_cores: int
+    local: GemmPlan                 # per-chip plan for the local shard shape
+    t_collective: float             # modeled ICI reduction cost (s)
+    t_total: float
+
+
+def _bm_candidates(m: int, sublane: int) -> list[int]:
+    cands = [c for c in (128, 256, 512, 1024) if c <= ceil_to(m, sublane)]
+    if m < 128:
+        cands.append(ceil_to(m, sublane))
+    return sorted(set(cands)) or [ceil_to(m, sublane)]
+
+
+def _bn_candidates(n: int, lane: int) -> list[int]:
+    top = ceil_to(n, lane)
+    cands = [c for c in (128, 256, 512) if c <= top]
+    if top <= 1024:
+        cands.append(top)
+    return sorted(set(cands)) or [top]
+
+
+def _bk_candidates(k: int) -> list[int]:
+    top = ceil_to(k, 128)
+    cands = [c for c in (128, 256, 512, 1024, 2048) if c <= top]
+    if top <= 4096:
+        cands.append(top)   # full-K residency — enables gk == 1 reuse
+    return sorted(set(cands)) or [top]
+
+
+@functools.lru_cache(maxsize=8192)
+def plan_gemm(
+    m: int, k: int, n: int,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    spec: TpuSpec = TPU_V5E,
+) -> GemmPlan:
+    """Pick the best single-core tiling for C(M,N) += A(M,K) B(K,N)."""
+    cls = classify(m, k, n)
+    sublane = spec.sublane(in_bytes)
+    best: GemmPlan | None = None
+    for bm in _bm_candidates(m, sublane):
+        for bn in _bn_candidates(n, spec.lane):
+            for bk in _bk_candidates(k):
+                for order in ("mn", "nm"):
+                    e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
+                                 dim_order=order, in_bytes=in_bytes,
+                                 out_bytes=out_bytes, spec=spec)
+                    if e.vmem_bytes > spec.vmem_budget:
+                        continue
+                    cand = GemmPlan(bm=bm, bn=bn, bk=bk, dim_order=order,
+                                    gemm_class=cls, est=e)
+                    if best is None or _better(cand, best):
+                        best = cand
+    if best is None:  # degenerate: nothing fit; shrink to minimum tiles
+        bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
+        e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
+                     in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+        best = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
+    return best
+
+
+def _better(a: GemmPlan, b: GemmPlan) -> bool:
+    ta, tb = a.est.t_total, b.est.t_total
+    if abs(ta - tb) > 0.02 * max(ta, tb):
+        return ta < tb
+    # Tie-break as the paper does: prefer larger bk (more accumulator reuse),
+    # then smaller padding waste.
+    if a.bk != b.bk:
+        return a.bk > b.bk
+    return a.est.flops_padded < b.est.flops_padded
+
+
+@functools.lru_cache(maxsize=8192)
+def plan_distributed(
+    m: int, k: int, n: int,
+    num_cores: int,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    spec: TpuSpec = TPU_V5E,
+) -> DistPlan:
+    """Choose M-parallel vs K-parallel across ``num_cores`` chips.
+
+    M-parallel (paper Alg. 4): shard M; B replicated; no steady-state
+    collective.  K-parallel (paper Alg. 5): shard K; partial C's reduced —
+    modeled as a ring all-reduce of the fp32 partials over ICI.
+    """
+    sublane = spec.sublane(in_bytes)
+
+    m_local = max(cdiv(m, num_cores), 1)
+    pm = plan_gemm(ceil_to(m_local, sublane), k, n, in_bytes, out_bytes, spec)
+    # Load imbalance when m doesn't fill the cores evenly / at all.
+    waste_m = (cdiv(m, num_cores) * num_cores) / max(m, 1)
+    t_m = pm.est.t_total * waste_m
+
+    k_local = max(cdiv(k, num_cores), 1)
+    pk = plan_gemm(m, ceil_to(k_local, 128), n, in_bytes, out_bytes, spec)
+    ring = 2.0 * (num_cores - 1) / num_cores
+    t_red = ring * (m * n * 4) / (spec.ici_bw_per_link * spec.ici_links)
+    t_k = pk.est.t_total + t_red
+
+    # Paper §IV-C: K-parallel "brings additional overhead of reduction" and
+    # is reserved for shapes where M cannot occupy the cores — require a
+    # clear modeled win before accepting the reduction strategy.
+    if t_m <= t_k * 1.15:
+        return DistPlan("m_parallel", num_cores, pm, 0.0, t_m)
+    return DistPlan("k_parallel", num_cores, pk, t_red, t_k)
+
+
+def tgemm_plan(m: int, k: int, n: int,
+               in_bytes: int = 4, out_bytes: int = 4,
+               spec: TpuSpec = TPU_V5E) -> GemmPlan:
+    """The TGEMM baseline (paper Alg. 1): ONE fixed blocking for all shapes —
+    (m_g=512, k_g=512, n_a=96, m_s=6) on FT-m7032; the TPU analogue keeps a
+    fixed regular-GEMM tile (256, 256, 256) and pads everything into it."""
+    bm, bn, bk = 256, 256, 256
+    e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
+                 in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+    return GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=classify(m, k, n), est=e)
+
+
+def clear_plan_cache() -> None:
+    plan_gemm.cache_clear()
+    plan_distributed.cache_clear()

@@ -1,0 +1,5 @@
+from .kernel import ftimm_gemm, ftimm_gemm_splitk
+from .ops import gemm
+from . import ref
+
+__all__ = ["ftimm_gemm", "ftimm_gemm_splitk", "gemm", "ref"]

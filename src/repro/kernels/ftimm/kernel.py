@@ -1,0 +1,211 @@
+"""ftIMM Pallas TPU kernels: shape-specialized tiled GEMM.
+
+Paper mapping (Yin et al., 2022):
+
+* The paper auto-generates assembly micro-kernels per (m_s, k_a, n_a) so that
+  small-N GEMMs neither waste AM space nor compute padded lanes.  Here the
+  "generator" is a parametric ``pl.pallas_call`` factory: block shapes
+  (bm, bn, bk), the grid order, and the split-K factor are free parameters
+  chosen by the CMR tuner (``repro.core.gemm``), and Mosaic plays the role of
+  the assembler.  The DMA ping-pong double buffering of the paper is the
+  Pallas grid pipeline (automatic double-buffering of input blocks between
+  sequential grid steps).
+
+* M-parallel strategy (paper Alg. 4)  -> ``ftimm_gemm``: grid over
+  (M/bm, N/bn) "parallel" dims with the K loop innermost ("arbitrary"), the
+  fp32 accumulator resident in VMEM scratch across K steps (the role GSM/AM
+  reuse plays in the paper).
+
+* K-parallel strategy (paper Alg. 5)  -> ``ftimm_gemm_splitk``: the grid
+  splits K into ``nsplit`` independent partial products; partials land in an
+  fp32 buffer that is reduced afterwards (the paper reduces through GSM; on
+  TPU the reduction is an XLA add — and across chips it is a psum over ICI,
+  see ``repro.core.gemm.distributed``).
+
+All kernels accumulate in fp32 regardless of input dtype.  Block shapes must
+be multiples of the TPU register tiling — (8,128) fp32 / (16,128) bf16 — a
+constraint the tuner enforces; the kernels themselves only require that the
+(padded) operand shapes divide into the blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DimOrder = Literal["mn", "nm"]
+
+
+def _accum_body(a_blk, b_blk, c_ref, acc_ref, *, k, nk, dims):
+    """Shared accumulate-and-flush epilogue across all kernel variants."""
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_blk, b_blk, (dims, ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+def _nn_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk):
+    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref,
+                k=pl.program_id(2), nk=nk, dims=((1,), (0,)))
+
+
+def _tn_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk):
+    # A is (K, M): contract dim 0 of both operands.
+    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref,
+                k=pl.program_id(2), nk=nk, dims=((0,), (0,)))
+
+
+def _nt_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk):
+    # B is (N, K): contract dim 1 of both operands.
+    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref,
+                k=pl.program_id(2), nk=nk, dims=((1,), (1,)))
+
+
+_KERNELS = {"nn": _nn_kernel, "tn": _tn_kernel, "nt": _nt_kernel}
+
+
+def _specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder):
+    """BlockSpecs for each operand layout under a given grid order.
+
+    Grid is (outer, inner, k) with k innermost so the fp32 accumulator block
+    is revisited across K steps (paper: C_a stays in AM during the k_g loop).
+    ``order`` decides whether the M or the N dimension is the outer parallel
+    loop — the paper's loop-order-for-reuse discussion: the operand indexed
+    by the *inner* dim is re-fetched per outer step, the other is reused.
+    """
+    if order == "mn":
+        i_of = lambda i, j, k: i   # noqa: E731
+        j_of = lambda i, j, k: j   # noqa: E731
+    else:
+        i_of = lambda i, j, k: j   # noqa: E731
+        j_of = lambda i, j, k: i   # noqa: E731
+    if trans == "nn":
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i_of(i, j, k), k))
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j_of(i, j, k)))
+    elif trans == "tn":
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, k: (k, i_of(i, j, k)))
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j_of(i, j, k)))
+    elif trans == "nt":
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i_of(i, j, k), k))
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, k: (j_of(i, j, k), k))
+    else:  # pragma: no cover
+        raise ValueError(trans)
+    c_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i_of(i, j, k), j_of(i, j, k)))
+    return a_spec, b_spec, c_spec
+
+
+def _mkn(trans: str, a_shape, b_shape):
+    if trans == "nn":
+        (m, k), (_, n) = a_shape, b_shape
+    elif trans == "tn":
+        (k, m), (_, n) = a_shape, b_shape
+    else:  # nt
+        (m, k), (n, _) = a_shape, b_shape
+    return m, k, n
+
+
+def ftimm_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    trans: str = "nn",
+    dim_order: DimOrder = "mn",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """M-parallel ftIMM GEMM. Shapes must already be padded to block multiples.
+
+    trans: "nn" A(M,K)@B(K,N); "tn" A(K,M).T@B(K,N); "nt" A(M,K)@B(N,K).T.
+    """
+    m, k, n = _mkn(trans, a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, k, n, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+    gm, gn, gk = m // bm, n // bn, k // bk
+    grid = (gm, gn, gk) if dim_order == "mn" else (gn, gm, gk)
+    a_spec, b_spec, c_spec = _specs(trans, bm, bn, bk, dim_order)
+    return pl.pallas_call(
+        functools.partial(_KERNELS[trans], nk=gk),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def _splitk_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims):
+    _accum_body(a_ref[...], b_ref[...], c_ref.at[0], acc_ref,
+                k=pl.program_id(3), nk=nk, dims=dims)
+
+
+def ftimm_gemm_splitk(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    nsplit: int,
+    trans: str = "nn",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """K-parallel ftIMM GEMM (paper Alg. 5).
+
+    Returns the REDUCED (M, N) result; the fp32 partials buffer
+    (nsplit, M, N) is produced by the kernel and summed outside it — the
+    TPU analogue of the paper's reduction of per-core partial C through GSM.
+    K must divide into nsplit * bk-multiples.
+    """
+    m, k, n = _mkn(trans, a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    assert k % nsplit == 0, (k, nsplit)
+    ks = k // nsplit
+    assert m % bm == 0 and n % bn == 0 and ks % bk == 0, (m, ks, n, bm, bn, bk)
+    gm, gn, gk = m // bm, n // bn, ks // bk
+    dims = {"nn": ((1,), (0,)), "tn": ((0,), (0,)), "nt": ((1,), (1,))}[trans]
+
+    # Index maps: split s owns K blocks [s*gk, (s+1)*gk).
+    if trans == "nn":
+        a_spec = pl.BlockSpec((bm, bk), lambda s, i, j, k: (i, s * gk + k))
+        b_spec = pl.BlockSpec((bk, bn), lambda s, i, j, k: (s * gk + k, j))
+    elif trans == "tn":
+        a_spec = pl.BlockSpec((bk, bm), lambda s, i, j, k: (s * gk + k, i))
+        b_spec = pl.BlockSpec((bk, bn), lambda s, i, j, k: (s * gk + k, j))
+    else:  # nt
+        a_spec = pl.BlockSpec((bm, bk), lambda s, i, j, k: (i, s * gk + k))
+        b_spec = pl.BlockSpec((bn, bk), lambda s, i, j, k: (j, s * gk + k))
+    c_spec = pl.BlockSpec((1, bm, bn), lambda s, i, j, k: (s, i, j))
+
+    partials = pl.pallas_call(
+        functools.partial(_splitk_kernel, nk=gk, dims=dims),
+        grid=(nsplit, gm, gn, gk),
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=jax.ShapeDtypeStruct((nsplit, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+    return jnp.sum(partials, axis=0).astype(out_dtype)

@@ -1,0 +1,90 @@
+"""jit'd public wrappers around the ftIMM Pallas kernels.
+
+Handles what the paper calls the "implicit padding" problem explicitly: the
+wrapper pads operands up to the chosen block multiples, runs the specialized
+kernel, and slices the result.  The *tuner* (``repro.core.gemm``) is
+responsible for choosing blocks that minimize this padding waste — the very
+thing the paper's auto-generated micro-kernels achieve over TGEMM's fixed
+(m_s=6, n_a=96) kernel.
+
+On non-TPU backends the kernels run in interpret mode (Python emulation of
+the kernel body) — correct but slow; the framework's model code therefore
+routes through ``repro.core.gemm.dispatch`` which picks the XLA path on CPU
+and the Pallas path on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, shape) -> jax.Array:
+    pads = [(0, t - s) for s, t in zip(x.shape, shape)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm", "bn", "bk", "nsplit", "trans", "dim_order", "out_dtype", "interpret",
+    ),
+)
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    nsplit: int = 1,
+    trans: str = "nn",
+    dim_order: str = "mn",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """General entry: pads, dispatches to the M-parallel or split-K kernel,
+    un-pads.  ``nsplit > 1`` selects the K-parallel strategy."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    out_dtype = out_dtype or a.dtype
+    m, k, n = _k._mkn(trans, a.shape, b.shape)
+
+    bm_, bn_, bk_ = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 128)), bk
+    mp, np_, = _ceil_to(m, bm_), _ceil_to(n, bn_)
+    kp = _ceil_to(k, bk_ * nsplit) if nsplit > 1 else _ceil_to(k, bk_)
+    kp = max(kp, bk_ * nsplit)
+
+    if trans == "nn":
+        a_p, b_p = _pad_to(a, (mp, kp)), _pad_to(b, (kp, np_))
+    elif trans == "tn":
+        a_p, b_p = _pad_to(a, (kp, mp)), _pad_to(b, (kp, np_))
+    elif trans == "nt":
+        a_p, b_p = _pad_to(a, (mp, kp)), _pad_to(b, (np_, kp))
+    else:
+        raise ValueError(trans)
+
+    if nsplit > 1:
+        out = _k.ftimm_gemm_splitk(
+            a_p, b_p, bm=bm_, bn=bn_, bk=bk_, nsplit=nsplit, trans=trans,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+    else:
+        out = _k.ftimm_gemm(
+            a_p, b_p, bm=bm_, bn=bn_, bk=bk_, trans=trans,
+            dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
+        )
+    return out[:m, :n]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the ftIMM GEMM kernels.
+
+These are the ground truth every Pallas kernel in ``kernel.py`` is validated
+against (interpret mode on CPU, Mosaic on TPU). They mirror the paper's
+C += A x B semantics for the three irregular shapes plus the transposed
+variants the training backward pass needs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_nn(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B with A:(M,K), B:(K,N) -> (M,N); fp32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def matmul_tn(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A.T @ B with A:(K,M), B:(K,N) -> (M,N); the paper's T2 layout.
+
+    This is the shape of dW = x.T @ dy in training (K = tokens >> M ~ N).
+    """
+    out_dtype = out_dtype or a.dtype
+    return jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def matmul_nt(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B.T with A:(M,K), B:(N,K) -> (M,N)."""
+    out_dtype = out_dtype or a.dtype
+    return jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def matmul_splitk(a: jax.Array, b: jax.Array, nsplit: int, out_dtype=None) -> jax.Array:
+    """Reference for the K-parallel strategy: partial products over K chunks
+    reduced at the end (the paper's Alg. 5 GSM reduction)."""
+    out_dtype = out_dtype or a.dtype
+    m, k = a.shape
+    _, n = b.shape
+    assert k % nsplit == 0, (k, nsplit)
+    ks = k // nsplit
+    partials = jnp.stack(
+        [
+            jax.lax.dot_general(
+                a[:, s * ks:(s + 1) * ks],
+                b[s * ks:(s + 1) * ks, :],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            for s in range(nsplit)
+        ]
+    )
+    return jnp.sum(partials, axis=0).astype(out_dtype)

@@ -1,0 +1,171 @@
+"""Sharding rules: param / batch / cache PartitionSpecs for the production mesh.
+
+2-D strategy (DESIGN.md §6):
+  * TP over ``model`` on heads/d_ff/vocab/expert-ffn dims,
+  * ZeRO-3/FSDP over the data axes (``data`` or ``(pod, data)``) on the
+    opposite dim — params are all-gathered at use, gradients reduce-scattered
+    (XLA GSPMD inserts the collectives; they land in the roofline's
+    collective term).
+  * A dim is sharded only if divisible by the axis size, else replicated
+    (e.g. whisper's tiny dims on a 16-way axis).
+
+Cache sharding implements the paper's K-parallel layout: attention-cache
+sequence dims are sharded over ``model`` so decode runs as flash-decode
+(attention.flash_decode); SSM state shards its head dim.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+_REPLICATED = {
+    "ln1", "ln2", "ln_cross", "ln", "norm", "final_norm", "enc_norm",
+    "A_log", "D_skip", "dt_bias", "conv_b", "q_norm", "k_norm", "step",
+}
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "patch_proj",
+        "frame_proj"}            # (in=dp, out=model)
+_ROW = {"wo", "w_down", "out_proj"}   # (in=model, out=dp)
+_STACKED = {"layers", "encoder"}
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+def _maybe(dim: int, axes, mesh: Mesh):
+    """Shard ``dim`` over ``axes`` only when divisible."""
+    if axes is None:
+        return None
+    n = axis_size(mesh, axes)
+    return axes if (n > 1 and dim % n == 0) else None
+
+
+def _leaf_spec(path_names: list[str], shape, mesh: Mesh) -> P:
+    name = path_names[-1]
+    stacked = int(any(p in _STACKED for p in path_names[:-1]))
+    dims = shape[stacked:]
+    dp = dp_axes(mesh)
+    dp = dp if dp else None
+
+    def spec(*parts):
+        return P(*([None] * stacked), *parts)
+
+    if name in _REPLICATED or len(dims) == 0:
+        return spec(*([None] * len(dims)))
+    if name == "embed":
+        return P(_maybe(dims[0], "model", mesh), _maybe(dims[1], dp, mesh))
+    if name == "router":
+        return spec(_maybe(dims[0], dp, mesh), None)
+    if name == "conv_w":
+        return spec(None, _maybe(dims[1], "model", mesh))
+    if name in _COL:
+        if len(dims) == 3:     # moe experts (E, D, F)
+            return spec(None, _maybe(dims[1], dp, mesh),
+                        _maybe(dims[2], "model", mesh))
+        return spec(_maybe(dims[0], dp, mesh), _maybe(dims[1], "model", mesh))
+    if name in _ROW:
+        if len(dims) == 3:     # moe experts (E, F, D)
+            return spec(None, _maybe(dims[1], "model", mesh),
+                        _maybe(dims[2], dp, mesh))
+        return spec(_maybe(dims[0], "model", mesh), _maybe(dims[1], dp, mesh))
+    # default: replicate
+    return spec(*([None] * len(dims)))
+
+
+def param_specs(params_shape, mesh: Mesh, *, zero_stage: int = 3,
+                moe_ep: bool = False, moe_ep_axis: str = "dp"):
+    """PartitionSpec tree matching a param (or optimizer-state) pytree.
+
+    zero_stage: 3 -> weights 2-D sharded (TP x FSDP, all-gather at use);
+                0/1 -> weights TP-sharded only, replicated over the data
+                axes (ZeRO-1 shards just the optimizer state: pass
+                zero_stage=3 for the opt tree and 0 for params).
+    moe_ep: shard MoE expert weights on the EXPERT dim over the data axes
+            (expert parallelism — tokens move via all-to-all instead of
+            expert weights via all-gather).
+    """
+    def walk(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        names = [str(n) for n in names]
+        spec = _leaf_spec(names, leaf.shape, mesh)
+        name = names[-1]
+        stacked = int(any(p in _STACKED for p in names[:-1]))
+        dims = leaf.shape[stacked:]
+        dp = dp_axes(mesh) or None
+        if moe_ep and name in (_COL | _ROW) and len(dims) == 3:
+            # Expert parallelism: experts over ``moe_ep_axis``; the other
+            # weight dim ZeRO-sharded over dp when EP rides the model axis.
+            e_ax = dp if moe_ep_axis == "dp" else "model"
+            other = dp if moe_ep_axis != "dp" else None
+            parts = [None] * stacked + [_maybe(dims[0], e_ax, mesh),
+                                        None, None]
+            if name in _COL:   # (E, D, F)
+                parts[stacked + 1] = _maybe(dims[1], other, mesh)
+                parts[stacked + 2] = (_maybe(dims[2], "model", mesh)
+                                      if moe_ep_axis == "dp" else None)
+            else:              # (E, F, D)
+                parts[stacked + 1] = (_maybe(dims[1], "model", mesh)
+                                      if moe_ep_axis == "dp" else None)
+                parts[stacked + 2] = _maybe(dims[2], other, mesh)
+            return P(*parts)
+        if zero_stage < 3:
+            # strip dp axes from weight specs (keep TP)
+            cleaned = tuple(None if p is not None and p != "model" else p
+                            for p in spec)
+            return P(*cleaned)
+        return spec
+    return jax.tree_util.tree_map_with_path(walk, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh: Mesh):
+    dp = dp_axes(mesh) or None
+
+    def per_leaf(path, leaf):
+        b = leaf.shape[0]
+        lead = _maybe(b, dp, mesh)
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh):
+    """Decode/prefill cache: B over dp, sequence over model (K-parallel),
+    SSM head dim over model."""
+    dp = dp_axes(mesh) or None
+
+    def walk(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        s = leaf.shape
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            # (L|G, B, S, KVH, hd): seq over model
+            return P(None, _maybe(s[1], dp, mesh),
+                     _maybe(s[2], "model", mesh), None, None)
+        if name == "h":        # (L, B, H, P, N)
+            return P(None, _maybe(s[1], dp, mesh),
+                     _maybe(s[2], "model", mesh), None, None)
+        if name == "ssm_h":
+            return P(None, _maybe(s[1], dp, mesh),
+                     _maybe(s[2], "model", mesh), None, None)
+        if name in ("conv", "ssm_conv"):   # (L, B, W-1, C)
+            return P(None, _maybe(s[1], dp, mesh), None,
+                     _maybe(s[3], "model", mesh))
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_shape)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b-smoke \
+        --steps 20 [--seq 128 --batch 8] [--mesh 2x4] [--ckpt /tmp/ck]
+
+On real hardware the same entry runs under ``jax.distributed.initialize``
+(multi-host); in this container a ``--mesh AxB`` spawns that many host
+devices (set before jax import via XLA_FLAGS)."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4 = (data, model)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mesh:
+        n = 1
+        for part in args.mesh.split("x"):
+            n *= int(part)
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
+
+    import jax
+
+    from ..configs import get_config
+    from ..configs.base import ShapeConfig
+    from ..optim.adamw import OptConfig
+    from ..train.trainer import Trainer
+    from .mesh import make_mesh
+    from .sharding import (batch_specs, param_specs, to_shardings)
+    from .dryrun import abstract_state, input_specs
+
+    cfg = get_config(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    mesh = None
+    shardings = {}
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(dims)] if len(dims) == 2 else ("data",)
+        mesh = make_mesh(dims, axes)
+        params_s, opt_s = abstract_state(cfg, shape, with_opt=True)
+        batch_s = input_specs(cfg, shape)
+        with mesh:
+            shardings = {
+                "params": to_shardings(param_specs(params_s, mesh), mesh),
+                "opt": to_shardings(param_specs(opt_s, mesh), mesh),
+                "batch": to_shardings(batch_specs(cfg, batch_s, mesh), mesh),
+            }
+            shardings["batch_leaves"] = shardings["batch"]
+
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                        total_steps=args.steps)
+    trainer = Trainer(cfg, shape, opt_cfg, mesh=mesh, shardings=shardings,
+                      seed=args.seed, ckpt_dir=args.ckpt)
+    trainer.run(args.steps)
+    print("training done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from . import attention, layers, moe, model, ssm, transformer
+from .model import (decode_step, forward_train, init_params, loss_fn,
+                    make_cache, prefill)
+
+__all__ = [
+    "attention", "layers", "moe", "model", "ssm", "transformer",
+    "decode_step", "forward_train", "init_params", "loss_fn", "make_cache",
+    "prefill",
+]

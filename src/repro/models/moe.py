@@ -1,0 +1,105 @@
+"""Mixture-of-Experts MLP with top-k routing and capacity-based dispatch.
+
+Two of the paper's irregular GEMM types appear here as first-class hot spots:
+
+  * the router ``tokens x d_model x num_experts`` is T1 exactly — N = 8..16
+    experts is far inside the paper's N <= 96 regime;
+  * each expert's (capacity x d_model x d_ff/TP) GEMMs are T3 per shard.
+
+Dispatch is Switch-style with a static per-expert capacity so shapes stay
+jit-friendly: tokens beyond capacity are dropped (weight 0), routed tokens
+are scatter-packed into an (E, C, D) buffer, expert GEMMs run as one
+einsum (sharded TP on d_ff, optionally EP on the expert dim), and results
+gather back with the gate weights applied.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dist import current_dist, shard_act
+from ..core.gemm import project
+
+
+def init_moe_params(key, d_model: int, d_ff: int, num_experts: int,
+                    dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    s_in = (2.0 / d_model) ** 0.5
+    s_out = (2.0 / d_ff) ** 0.5
+    return {
+        "router": jax.random.normal(ks[0], (d_model, num_experts), dtype) * s_in,
+        "w_gate": jax.random.normal(ks[1], (num_experts, d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (num_experts, d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (num_experts, d_ff, d_model), dtype) * s_out,
+    }
+
+
+def capacity(num_tokens: int, num_experts: int, top_k: int,
+             capacity_factor: float = 1.25) -> int:
+    c = int(num_tokens * top_k * capacity_factor / num_experts)
+    return max(8, -(-c // 8) * 8)  # pad to sublane multiple
+
+
+def moe_mlp(
+    x: jax.Array,                  # (T, D) flat tokens
+    params: dict,
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (T, D), aux_loss scalar)."""
+    t, d = x.shape
+    e = num_experts
+    c = capacity(t, e, top_k, capacity_factor)
+    xc = x.astype(compute_dtype)
+
+    # Router: the T1 irregular GEMM (T >> D ~ E). fp32 for routing stability.
+    logits = project(xc, params["router"].astype(compute_dtype),
+                     out_dtype=jnp.float32)                      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)               # (T, K)
+    if top_k > 1:
+        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # Load-balancing aux loss (Switch/Mixtral style).
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(gate_idx[:, 0], e)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # Position of each (token, k) within its expert's capacity bucket.
+    flat_idx = gate_idx.reshape(-1)                              # (T*K,)
+    sel = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)           # (T*K, E)
+    pos_in_e = jnp.cumsum(sel, axis=0) - 1                       # rank within expert
+    pos = jnp.take_along_axis(pos_in_e, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < c
+    slot = jnp.where(keep, flat_idx * c + pos, e * c)            # drop -> OOB
+
+    # Scatter-pack tokens into the (E*C, D) buffer (paper: each "core"
+    # receives its private A panel).
+    tok_idx = jnp.repeat(jnp.arange(t), top_k)
+    buf = jnp.zeros((e * c, d), compute_dtype)
+    buf = buf.at[slot].add(xc[tok_idx], mode="drop")
+    buf = buf.reshape(e, c, d)
+    ctx = current_dist()
+    if ctx is not None and ctx.moe_buf_shard:
+        # dispatch buffers replicated by default (GSPMD scatter inference);
+        # shard capacity over dp — the paper's "each core owns its private
+        # A panel" at the MoE level
+        buf = shard_act(buf, None, "dp", None)
+
+    # Expert GEMMs (T3 per shard): one batched einsum per projection.
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
+        jnp.einsum("ecd,edf->ecf", buf, wu)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e * c, d)
+
+    # Gather back and combine with gate weights.
+    y_tok = jnp.take(y_buf, jnp.minimum(slot, e * c - 1), axis=0)
+    y_tok = y_tok * (keep * gate_w.reshape(-1))[:, None].astype(compute_dtype)
+    y = jnp.sum(y_tok.reshape(t, top_k, d), axis=1)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+The chunked SSD algorithm is GEMM-dominated with N = dstate (64/128) — the
+paper's small-N regime — so its inner contractions are exactly the irregular
+shapes ftIMM targets (noted in DESIGN.md §3).  Layout follows the reference:
+d_inner = 2*d_model, headdim P = 64, n_groups = 1, conv width 4, scalar decay
+A per head.
+
+Train/prefill: chunked scan (chunk Q=256) — intra-chunk dense masked GEMMs +
+inter-chunk state recurrence via lax.scan.
+Decode: O(1) recurrent update of (h, conv_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dist import current_dist, shard_act
+from .layers import dense, rms_norm
+
+CONV_WIDTH = 4
+HEADDIM = 64
+
+
+def ssm_dims(d_model: int, ssm_state: int):
+    d_inner = 2 * d_model
+    nheads = d_inner // HEADDIM
+    return d_inner, nheads, ssm_state
+
+
+def init_ssm_params(key, d_model: int, ssm_state: int, dtype=jnp.float32) -> dict:
+    d_inner, nheads, n = ssm_dims(d_model, ssm_state)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    s_in = (2.0 / d_model) ** 0.5
+    proj_out = 2 * d_inner + 2 * n + nheads
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, proj_out), dtype) * s_in,
+        "conv_w": jax.random.normal(ks[1], (CONV_WIDTH, conv_ch), dtype) * 0.5,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(dtype)),
+        "D_skip": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.full((nheads,), -2.0, dtype),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": jax.random.normal(ks[3], (d_inner, d_model), dtype)
+                    * (2.0 / d_inner) ** 0.5,
+    }
+
+
+def _split_proj(zxbcdt, d_inner: int, n: int, nheads: int):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + n]
+    c = zxbcdt[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with taps w:(W, C)."""
+    out = jnp.zeros_like(x)
+    for i in range(CONV_WIDTH):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * w[CONV_WIDTH - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_forward(
+    x: jax.Array,              # (B, S, D_model)
+    params: dict,
+    *,
+    ssm_state: int,
+    chunk: int = 256,
+    compute_dtype=jnp.bfloat16,
+    initial_state: jax.Array | None = None,
+    unroll: bool = False,
+):
+    """Chunked SSD scan. Returns (y (B,S,D), final_state (B,H,P,N))."""
+    bsz, s, d_model = x.shape
+    d_inner, nheads, n = ssm_dims(d_model, ssm_state)
+    p = HEADDIM
+
+    zxbcdt = dense(x, params["in_proj"], compute_dtype)
+    z, xs, b, c, dt = _split_proj(zxbcdt, d_inner, n, nheads)
+    xbc = _causal_conv(jnp.concatenate([xs, b, c], axis=-1),
+                       params["conv_w"].astype(compute_dtype),
+                       params["conv_b"].astype(compute_dtype))
+    xs = xbc[..., :d_inner].reshape(bsz, s, nheads, p)
+    b = xbc[..., d_inner:d_inner + n]                     # (B,S,N) groups=1
+    c = xbc[..., d_inner + n:]
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = xs.shape[1] // chunk
+    q = chunk
+
+    ctx = current_dist()
+    if ctx is not None and ctx.ssm_head_shard:
+        # shard the SSD head dim over the model axis: the (B, Q, Q, H)
+        # intra-chunk decay/score tensors shrink by the TP degree
+        xs = shard_act(xs, "dp", None, "model", None)
+        dt = shard_act(dt, "dp", None, "model")
+
+    # chunk-major: (nc, B, Q, ...)
+    xs_c = xs.reshape(bsz, nc, q, nheads, p).swapaxes(0, 1)
+    b_c = b.reshape(bsz, nc, q, n).swapaxes(0, 1)
+    c_c = c.reshape(bsz, nc, q, n).swapaxes(0, 1)
+    dt_c = dt.reshape(bsz, nc, q, nheads).swapaxes(0, 1)
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((bsz, nheads, p, n), jnp.float32))
+
+    def chunk_step(h, xs_):
+        x_q, b_q, c_q, dt_q = xs_
+        x_f = x_q.astype(jnp.float32)
+        b_f = b_q.astype(jnp.float32)
+        c_f = c_q.astype(jnp.float32)
+        da = dt_q * a                                    # (B,Q,H) log-decay
+        lcum = jnp.cumsum(da, axis=1)                    # (B,Q,H)
+        # intra-chunk: M[i,j] = exp(L_i - L_j) for j <= i.  Mask BEFORE the
+        # exp: entries with j > i have positive diff and would overflow to
+        # inf — fine in forward (where -> 0) but the VJP of where still
+        # propagates inf * 0 = nan into the dt/A_log gradients.
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,Q,Q,H)
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        diff = jnp.where(causal[None, :, :, None], diff, -1e30)
+        m = jnp.exp(diff)
+        cb = jnp.einsum("bin,bjn->bij", c_f, b_f)         # (B,Q,Q)
+        xdt = x_f * dt_q[..., None]                       # (B,Q,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp",
+                             cb, m, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp",
+                             c_f, h, jnp.exp(lcum))
+        # state update: h' = exp(sum da) h + sum_j exp(L_Q - L_j) xdt_j b_j
+        decay_tot = jnp.exp(lcum[:, -1, :])               # (B,H)
+        w = jnp.exp(lcum[:, -1:, :] - lcum)               # (B,Q,H)
+        h_new = (decay_tot[:, :, None, None] * h
+                 + jnp.einsum("bjh,bjhp,bjn->bhpn", w, xdt, b_f))
+        return h_new, (y_intra + y_inter)
+
+    # Recompute the (B, Q, Q, H) decay/score intermediates in backward
+    # instead of saving them per chunk step.
+    h_final, y_c = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                                (xs_c, b_c, c_c, dt_c),
+                                unroll=True if unroll else 1)
+    y = y_c.swapaxes(0, 1).reshape(bsz, nc * q, nheads, p)[:, :s]
+    y = y + xs[:, :s] * params["D_skip"].astype(compute_dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(compute_dtype)
+    y = y * jax.nn.silu(z[:, :s])
+    y = rms_norm(y, params["norm"])
+    return dense(y, params["out_proj"], compute_dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,              # (B, 1, D_model)
+    params: dict,
+    state: dict,               # {"h": (B,H,P,N) f32, "conv": (B,W-1,C)}
+    *,
+    ssm_state: int,
+    compute_dtype=jnp.bfloat16,
+):
+    """O(1) recurrent decode. Returns (y (B,1,D), new_state)."""
+    bsz, _, d_model = x.shape
+    d_inner, nheads, n = ssm_dims(d_model, ssm_state)
+    p = HEADDIM
+
+    zxbcdt = dense(x[:, 0], params["in_proj"], compute_dtype)
+    z, xs, b, c, dt = _split_proj(zxbcdt, d_inner, n, nheads)
+    xbc = jnp.concatenate([xs, b, c], axis=-1)            # (B, C)
+
+    conv = state["conv"]                                   # (B, W-1, C)
+    w = params["conv_w"].astype(compute_dtype)
+    window = jnp.concatenate([conv, xbc[:, None, :]], axis=1)  # (B, W, C)
+    xbc_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, w)
+        + params["conv_b"].astype(compute_dtype))
+    new_conv = window[:, 1:]
+
+    xs = xbc_out[:, :d_inner].reshape(bsz, nheads, p)
+    b = xbc_out[:, d_inner:d_inner + n].astype(jnp.float32)
+    c = xbc_out[:, d_inner + n:].astype(jnp.float32)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+
+    h = state["h"]
+    decay = jnp.exp(dt * a)                                # (B,H)
+    xdt = xs.astype(jnp.float32) * dt[..., None]           # (B,H,P)
+    h_new = decay[:, :, None, None] * h + jnp.einsum("bhp,bn->bhpn", xdt, b)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c)
+    y = y + xs.astype(jnp.float32) * params["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_inner).astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"])
+    out = dense(y, params["out_proj"], compute_dtype)
+    return out[:, None, :], {"h": h_new, "conv": new_conv}
+
+
+def init_ssm_state(bsz: int, d_model: int, ssm_state: int,
+                   dtype=jnp.bfloat16) -> dict:
+    d_inner, nheads, n = ssm_dims(d_model, ssm_state)
+    conv_ch = d_inner + 2 * n
+    return {
+        "h": jnp.zeros((bsz, nheads, HEADDIM, n), jnp.float32),
+        "conv": jnp.zeros((bsz, CONV_WIDTH - 1, conv_ch), dtype),
+    }

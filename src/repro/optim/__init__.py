@@ -1,0 +1,5 @@
+from .adamw import OptConfig, apply_updates, global_norm, init_opt_state, schedule
+from .compression import compress_allreduce, init_error_state
+
+__all__ = ["OptConfig", "apply_updates", "global_norm", "init_opt_state",
+           "schedule", "compress_allreduce", "init_error_state"]

@@ -1,0 +1,39 @@
+"""Error-feedback int8 gradient compression for the data-parallel all-reduce.
+
+Beyond-paper distributed-optimization feature (DESIGN.md §6): gradients are
+quantized to int8 *before* the DP psum so the all-reduce moves 1/4 of the
+fp32 bytes over ICI/DCI, with per-tensor scale agreement via one scalar
+psum(max) and residual error carried to the next step (error feedback keeps
+the scheme convergent — EF-SGD/EF21 literature).
+
+Overflow safety: each device clips its quantized values to +-(127 // n) so
+the integer all-reduce over n devices cannot wrap.  Used inside shard_map
+(see train.train_step.make_compressed_grad_sync).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_allreduce(g: jax.Array, err: jax.Array, axis,
+                       num_devices: int) -> tuple[jax.Array, jax.Array]:
+    """All-reduce-mean one gradient tensor in int8 with error feedback.
+    Must be called inside shard_map over ``axis``.
+    Returns (mean_gradient fp32, new_error fp32)."""
+    gf = g.astype(jnp.float32) + err
+    # Shared scale: global max|g| via a scalar fp32 psum (cheap).
+    local_max = jnp.max(jnp.abs(gf))
+    global_max = jax.lax.pmax(local_max, axis)
+    level = max(127 // max(num_devices, 1), 1)
+    scale = jnp.maximum(global_max, 1e-30) / level
+    q = jnp.clip(jnp.round(gf / scale), -level, level).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    q_sum = jax.lax.psum(q, axis)                   # s8 on the wire
+    mean = q_sum.astype(jnp.float32) * scale / num_devices
+    return mean, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

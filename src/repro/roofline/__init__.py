@@ -1,0 +1,5 @@
+from .analysis import Roofline, build_roofline, collective_bytes
+from .perf_model import forward_perf, step_perf
+
+__all__ = ["Roofline", "build_roofline", "collective_bytes",
+           "forward_perf", "step_perf"]

@@ -1,0 +1,220 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs  / (chips x peak FLOP/s)
+    memory     = HLO_bytes  / (chips x HBM bw)
+    collective = coll_bytes / (chips x links x link bw)
+
+``cost_analysis`` supplies FLOPs/bytes.  Collective bytes are NOT in
+cost_analysis: we parse the post-optimization HLO text and sum tensor sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Convention (documented in EXPERIMENTS.md): per-op wire
+bytes = result-tensor bytes, x2 for all-reduce (reduce + broadcast phases of
+a ring).  HLO totals are whole-program (all chips); cost_analysis FLOPs are
+already whole-program, so both are divided by chip count.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, asdict
+
+from ..core.gemm.cmr import TPU_V5E, TpuSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# e.g. "%ag = bf16[2,1024,512]{2,1,0} all-gather(...)" possibly with a
+# tuple result "( f32[..], f32[..] )".
+_LINE_RE = re.compile(
+    r"=\s*(?P<ret>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(
+    r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w\.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = ""
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Loop-aware collective byte totals per op type.
+
+    Scan-over-layers puts per-layer collectives inside HLO while bodies,
+    which appear ONCE in the text; we recover true totals by multiplying a
+    body's collectives by its loop trip count (read from the s32 constant in
+    the loop's condition computation), recursively for nested scans.
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    trip: dict[str, int] = {}        # condition comp -> trip count
+    for name, lines in comps.items():
+        consts = [int(c) for ln in lines for c in _CONST_RE.findall(ln)]
+        if consts:
+            trip[name] = max(consts)
+
+    def comp_totals(name: str, mult: float, out, counts, seen):
+        if name not in comps or name in seen:
+            return
+        seen = seen | {name}
+        for line in comps[name]:
+            m = _LINE_RE.search(line)
+            if m and (m.group("op") + "-done") not in line:
+                out[m.group("op")] += _tensor_bytes(m.group("ret")) * mult
+                counts[m.group("op")] += mult
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                comp_totals(body, mult * trip.get(cond, 1), out, counts, seen)
+                continue
+            c = _CALL_RE.search(line)
+            if c:
+                comp_totals(c.group(1), mult, out, counts, seen)
+
+    out = {op: 0.0 for op in _COLL_OPS}
+    counts = {op: 0.0 for op in _COLL_OPS}
+    comp_totals(entry or max(comps, key=lambda k: len(comps[k]), default=""),
+                1.0, out, counts, frozenset())
+    out_all = dict(out)
+    out_all.update({f"n_{k}": counts[k] for k in counts})
+    return out_all
+
+
+@dataclass
+class Roofline:
+    """Per-device three-term roofline for one (arch x shape x mesh) cell.
+
+    * flops/bytes: analytic perf model (repro.roofline.perf_model — validated
+      against fully-unrolled compiled probes), global / chips.
+    * collective wire bytes: loop-aware parse of the compiled per-device HLO
+      (scan bodies multiplied by trip counts); convention: result-tensor
+      bytes per op, x2 for all-reduce (ring reduce + broadcast phases).
+    * raw_cost: XLA cost_analysis as-is (per-device, loop bodies counted
+      once) for reference.
+    """
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device_hbm: float
+    coll_bytes_wire: float
+    coll_by_type: dict = field(default_factory=dict)
+    raw_cost: dict = field(default_factory=dict)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    model_flops: float = 0.0            # 6*N_active*D (train) / 2*N*D (inf)
+    peak_memory_per_device: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Ideal step time with perfect overlap = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / compiled-equivalent FLOPs (catches remat/padding)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL FLOPs / (chips * peak * t_bound): fraction of fleet bf16
+        peak spent on useful model math at the modeled bound."""
+        if not self.t_bound:
+            return 0.0
+        spec = TPU_V5E
+        return self.model_flops / (self.chips * spec.peak_flops_bf16
+                                   * self.t_bound)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(dominant=self.dominant, t_bound=self.t_bound,
+                 useful_fraction=self.useful_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def build_roofline(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    analytic_flops: float, analytic_bytes: float,
+    cost: dict, coll: dict, model_flops: float,
+    memory_stats: dict | None = None,
+    spec: TpuSpec = TPU_V5E,
+) -> Roofline:
+    wire = (2.0 * coll.get("all-reduce", 0.0)
+            + coll.get("all-gather", 0.0)
+            + coll.get("reduce-scatter", 0.0)
+            + coll.get("all-to-all", 0.0)
+            + coll.get("collective-permute", 0.0))
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=analytic_flops / chips,
+        bytes_per_device_hbm=analytic_bytes / chips,
+        coll_bytes_wire=wire, coll_by_type=coll,
+        raw_cost={k: cost.get(k) for k in
+                  ("flops", "bytes accessed", "transcendentals")
+                  if k in cost},
+        model_flops=model_flops,
+    )
+    r.t_compute = r.flops_per_device / spec.peak_flops_bf16
+    r.t_memory = r.bytes_per_device_hbm / spec.hbm_bw
+    r.t_collective = wire / (spec.ici_links * spec.ici_bw_per_link)
+    if memory_stats:
+        r.peak_memory_per_device = memory_stats.get("peak_memory", 0.0)
+    return r
+
+
+def model_flops_estimate(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params, D = tokens);
+    2*N*D for inference forward."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * shape.tokens
+    if kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence

@@ -1,0 +1,130 @@
+"""Collective dissection: loop-aware per-op listing for the perf loop.
+
+    PYTHONPATH=src python -m repro.roofline.dissect --arch qwen3-8b \
+        --shape train_4k [--variant baseline] [--top 20]
+
+Prints each collective with its wire bytes x trip count and the HLO
+metadata op_name (which maps back to the JAX source op), so hypotheses in
+EXPERIMENTS.md §Perf cite actual offenders instead of guesses.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+
+from .analysis import (_CALL_RE, _CONST_RE, _LINE_RE, _WHILE_RE,
+                       _split_computations, _tensor_bytes)
+
+
+def dissect(hlo_text: str, top: int = 25) -> list[tuple]:
+    comps, entry = _split_computations(hlo_text)
+    trip = {}
+    for name, lines in comps.items():
+        consts = [int(c) for ln in lines for c in _CONST_RE.findall(ln)]
+        if consts:
+            trip[name] = max(consts)
+
+    rows = []
+
+    def walk(name, mult, seen):
+        if name not in comps or name in seen:
+            return
+        seen = seen | {name}
+        for line in comps[name]:
+            m = _LINE_RE.search(line)
+            if m and (m.group("op") + "-done") not in line:
+                byts = _tensor_bytes(m.group("ret"))
+                meta = re.search(r'op_name="([^"]+)"', line)
+                rows.append((byts * mult, m.group("op"), byts, mult,
+                             (meta.group(1) if meta else "?")[:110]))
+            w = _WHILE_RE.search(line)
+            if w:
+                walk(w.group(2), mult * trip.get(w.group(1), 1), seen)
+                continue
+            c = _CALL_RE.search(line)
+            if c:
+                walk(c.group(1), mult, seen)
+
+    walk(entry, 1.0, frozenset())
+    return sorted(rows, reverse=True)[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    from ..launch import dryrun as D
+    from ..configs import SHAPES, get_config
+    from ..core.dist import DistContext, use_dist
+    from ..launch.mesh import make_production_mesh
+    from ..launch.sharding import (batch_specs, cache_specs, dp_axes,
+                                   param_specs, to_shardings)
+    from ..optim.adamw import OptConfig
+    from ..train.train_step import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+    import jax
+    import jax.numpy as jnp
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    knobs = dict(D.VARIANTS[args.variant])
+    zero_stage = knobs.pop("zero_stage", 3)
+    moe_ep = knobs.pop("moe_ep", False)
+    mesh = make_production_mesh()
+    dist = DistContext(mesh=mesh, dp_axes=dp_axes(mesh), model_axis="model",
+                       **knobs)
+    with use_dist(dist), mesh:
+        batch = D.input_specs(cfg, shape)
+        b_shard = to_shardings(batch_specs(cfg, batch, mesh), mesh)
+        if shape.kind == "train":
+            params, opt = D.abstract_state(cfg, shape, True)
+            jitted = jax.jit(
+                make_train_step(cfg, OptConfig()),
+                in_shardings=(
+                    to_shardings(param_specs(params, mesh,
+                                             zero_stage=zero_stage,
+                                             moe_ep=moe_ep), mesh),
+                    to_shardings(param_specs(opt, mesh, zero_stage=3,
+                                             moe_ep=moe_ep), mesh),
+                    b_shard),
+                donate_argnums=(0, 1))
+            hlo = jitted.lower(params, opt, batch).compile().as_text()
+        else:
+            from ..models.model import make_cache
+            params, _ = D.abstract_state(cfg, shape, False)
+            cache = jax.eval_shape(
+                lambda: make_cache(cfg, shape.global_batch, shape.seq_len))
+            p_sh = to_shardings(param_specs(params, mesh,
+                                            zero_stage=zero_stage,
+                                            moe_ep=moe_ep), mesh)
+            c_sh = to_shardings(cache_specs(cfg, cache, mesh), mesh)
+            if shape.kind == "prefill":
+                jitted = jax.jit(make_prefill_step(cfg),
+                                 in_shardings=(p_sh, b_shard, c_sh),
+                                 donate_argnums=(2,))
+                hlo = jitted.lower(params, batch, cache).compile().as_text()
+            else:
+                jitted = jax.jit(
+                    make_serve_step(cfg),
+                    in_shardings=(p_sh, c_sh, b_shard["tokens"], None),
+                    donate_argnums=(1,))
+                hlo = jitted.lower(params, cache, batch["tokens"],
+                                   jax.ShapeDtypeStruct((), jnp.int32)
+                                   ).compile().as_text()
+
+    total = 0.0
+    for tot, op, byts, mult, meta in dissect(hlo, args.top):
+        total += tot
+        print(f"{tot/2**30:9.3f} GiB  {op:19s} x{mult:5.0f} "
+              f"({byts/2**20:9.2f} MiB each)  {meta}")
+    print(f"TOTAL(top {args.top}): {total/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Analytic FLOP / HBM-byte accounting per (arch x shape x step-kind).
+
+Why analytic: XLA's ``cost_analysis`` on the compiled module is per-device
+and counts each while-loop body ONCE (scan-over-layers => ~L x undercount),
+and exposes no per-op breakdown to correct it.  This module reproduces the
+dot-FLOP accounting of every operation in ``repro.models`` (the code is
+ours, so the bookkeeping is exact for matmuls), and is VALIDATED against
+``cost_analysis`` of fully-unrolled reduced configs in
+``tests/test_perf_model.py`` — agreement within a few % on every family.
+
+Bytes are a documented engineering approximation (sum of operand/result
+streams of the major ops at the HBM level), exact for the decode cells
+(weights + KV cache reads dominate) and conservative for train/prefill.
+
+All numbers are GLOBAL (whole fleet); divide by chip count for per-device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.moe import capacity as moe_capacity
+from ..models.ssm import CONV_WIDTH, HEADDIM, ssm_dims
+
+
+@dataclass
+class Perf:
+    flops: float = 0.0               # matmul(+attention) flops, forward
+    bytes_hbm: float = 0.0           # HBM traffic (global)
+    breakdown: dict = field(default_factory=dict)
+
+    def add(self, name: str, flops: float = 0.0, byts: float = 0.0):
+        self.flops += flops
+        self.bytes_hbm += byts
+        d = self.breakdown.setdefault(name, [0.0, 0.0])
+        d[0] += flops
+        d[1] += byts
+
+
+def _keff(s_q: int, kv_len: int, window: int, causal: bool,
+          decode: bool) -> float:
+    """Mean effective KV length per query under the window encoding."""
+    if decode:
+        full = kv_len
+        if window > 0:
+            return min(window, full)
+        if window < 0:
+            return min(-window, full)   # current chunk tail
+        return full
+    if not causal:
+        return kv_len
+    if window > 0:
+        return min(window, (s_q + 1) / 2)
+    if window < 0:
+        return min(-window / 2, (s_q + 1) / 2)
+    return (s_q + 1) / 2
+
+
+def _attn(perf: Perf, cfg: ModelConfig, n_layers_by_window: dict[int, int],
+          b: int, s_q: int, kv_len: int, *, causal=True, decode=False,
+          cross=False, cdt=2):
+    d, hd = cfg.d_model, cfg.head_dim_
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    t = b * s_q
+    for window, n_l in n_layers_by_window.items():
+        keff = _keff(s_q, kv_len, window, causal, decode)
+        if not cross:
+            proj_f = 2 * t * d * (nq * hd) + 2 * 2 * t * d * (nkv * hd)
+        else:
+            proj_f = 2 * t * d * (nq * hd)   # cross K/V projected separately
+        proj_f += 2 * t * (nq * hd) * d      # output proj
+        score_f = 2 * b * nq * hd * s_q * keff * 2   # qk^T and p@v
+        byts = (proj_f / (2 * d) * cdt * 2           # act streams in/out
+                + 2 * b * keff * nkv * hd * cdt * n_l * 0)  # kv read counted below
+        kv_bytes = 2 * b * min(keff * 2, kv_len) * nkv * hd * cdt
+        perf.add("attn_proj", proj_f * n_l, byts * n_l)
+        perf.add("attn_score", score_f * n_l, kv_bytes * n_l)
+
+
+def _mlp(perf: Perf, cfg: ModelConfig, n_l: int, t: int, cdt=2):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.num_experts:
+        perf.add("router", 2 * t * d * cfg.num_experts * n_l,
+                 t * d * cdt * n_l)
+        # exact dispatch-buffer size incl. min-capacity clamp and rounding
+        # (the padding overhead is the paper's TGEMM-waste phenomenon: tiny
+        # decode batches pay E x C_min slots regardless of tokens)
+        cap_tokens = cfg.num_experts * moe_capacity(
+            t, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+        perf.add("moe_mlp", 6 * cap_tokens * d * f * n_l,
+                 (2 * cap_tokens * d * cdt + 3 * d * f * cdt
+                  * cfg.num_experts) * n_l)
+    else:
+        perf.add("mlp", 6 * t * d * f * n_l,
+                 (2 * t * d * cdt + 3 * d * f * cdt) * n_l)
+
+
+def _ssm(perf: Perf, cfg: ModelConfig, n_l: int, b: int, s: int,
+         decode: bool, cdt=2):
+    d = cfg.d_model
+    di, hh, n = ssm_dims(d, cfg.ssm_state)
+    p = HEADDIM
+    t = b * s
+    proj_out = 2 * di + 2 * n + hh
+    perf.add("ssm_proj", (2 * t * d * proj_out + 2 * t * di * d) * n_l,
+             (2 * t * d * cdt + (d * proj_out + di * d) * 4) * n_l)
+    perf.add("ssm_conv", 2 * t * CONV_WIDTH * (di + 2 * n) * n_l,
+             t * (di + 2 * n) * cdt * n_l)
+    if decode:
+        # h' = decay h + x (x) b ; y = C.h : ~4 flops per state element
+        perf.add("ssm_state", 4 * t * hh * p * n * n_l,
+                 2 * t * hh * p * n * 4 * n_l)   # state read+write f32
+    else:
+        q = cfg.ssm_chunk
+        intra = 2 * t * q * n + 2 * t * q * hh * p   # cb + y_intra
+        inter = 3 * 2 * t * hh * p * n               # y_inter/state upd/decay
+        perf.add("ssm_ssd", (intra + inter) * n_l,
+                 (t * hh * p * cdt * 3) * n_l)
+
+
+def forward_perf(cfg: ModelConfig, b: int, s: int, kind: str) -> Perf:
+    """kind: train | prefill | decode (decode: s = cache len, one new tok)."""
+    perf = Perf()
+    decode = kind == "decode"
+    t = b * (1 if decode else s)
+    s_q = 1 if decode else s
+    kv_len = s
+    cdt = 2
+
+    wins: dict[int, int] = {}
+    for w in cfg.windows():
+        wins[w] = wins.get(w, 0) + 1
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        if fam == "vlm" and not decode:
+            s_q = s + cfg.num_patches
+            t = b * s_q
+            kv_len = s_q
+        _attn(perf, cfg, wins, b, s_q, kv_len, decode=decode, cdt=cdt)
+        _mlp(perf, cfg, cfg.num_layers, t, cdt)
+        if fam == "encdec":
+            se = cfg.encoder_seq
+            te = b * se
+            if not decode:
+                # encoder runs at train/prefill only (cross-KV then cached)
+                _attn(perf, cfg, {0: cfg.encoder_layers}, b, se, se,
+                      causal=False, cdt=cdt)
+                _mlp(perf, cfg, cfg.encoder_layers, te, cdt)
+                perf.add("frame_proj", 2 * te * cfg.d_model ** 2)
+                perf.add("cross_kv", 2 * te * cfg.d_model
+                         * (2 * cfg.num_kv_heads * cfg.head_dim_)
+                         * cfg.num_layers)
+            _attn(perf, cfg, {0: cfg.num_layers}, b, s_q, se,
+                  causal=False, decode=decode, cross=True, cdt=cdt)
+    elif fam == "ssm":
+        _ssm(perf, cfg, cfg.num_layers, b, 1 if decode else s, decode, cdt)
+    elif fam == "hybrid":
+        _ssm(perf, cfg, cfg.num_layers, b, 1 if decode else s, decode, cdt)
+        g = cfg.num_layers // cfg.attn_every
+        _attn(perf, cfg, {0: g}, b, s_q, kv_len, decode=decode, cdt=cdt)
+        _mlp(perf, cfg, g, t, cdt)
+    if cfg.num_patches and not decode:
+        perf.add("patch_proj", 2 * b * cfg.num_patches * cfg.d_model ** 2)
+
+    # coarse elementwise terms (norms/residuals/rope/softmax) — small at
+    # production scale, keeps validation tight at reduced scale
+    n_l = cfg.num_layers
+    perf.add("elementwise", 25.0 * t * cfg.d_model * n_l)
+    if cfg.num_heads:
+        for window, nw in wins.items():
+            keff = _keff(s_q, kv_len, window, True, decode)
+            perf.add("elementwise",
+                     6.0 * b * cfg.num_heads * s_q * keff * nw)
+    if fam in ("ssm", "hybrid"):
+        perf.add("elementwise",
+                 4.0 * b * (1 if decode else s) * cfg.ssm_chunk
+                 * (2 * cfg.d_model // 64) * n_l)
+
+    # unembed: all positions for train, last position otherwise
+    t_logits = t if kind == "train" else b
+    perf.add("unembed", 2 * t_logits * cfg.d_model * cfg.vocab_padded,
+             t_logits * cfg.vocab_padded * 4)
+    perf.add("embed", 0.0, t * cfg.d_model * cdt)
+    return perf
+
+
+def step_perf(cfg: ModelConfig, shape: ShapeConfig) -> Perf:
+    """Whole-step perf: training includes backward + remat recompute +
+    optimizer; decode/prefill are forward-only."""
+    kind = shape.kind
+    fwd = forward_perf(cfg, shape.global_batch, shape.seq_len, kind)
+    if kind != "train":
+        # weights are read once per step regardless of batch
+        n_params = cfg.param_count()
+        pbytes = 2 if cfg.param_dtype == "bfloat16" else 4
+        fwd.add("weights", 0.0, n_params * pbytes)
+        if kind == "decode":
+            # cache READS are already counted per-layer in attn_score /
+            # ssm_state; this bucket is the one-token cache WRITE only
+            fwd.add("kv_cache_write", 0.0,
+                    _cache_bytes(cfg, shape) / max(shape.seq_len, 1))
+        return fwd
+    mult = {"none": 3.0, "dots": 3.4, "full": 4.0}[cfg.remat]
+    inner_ckpt = {"attn_score", "ssm_ssd"}   # jax.checkpoint'd inner scans
+    out = Perf()
+    for k, (f, by) in fwd.breakdown.items():
+        m = mult + 1.0 if k in inner_ckpt else mult
+        out.add(k, f * m, by * (m - 1.0))
+    n_params = cfg.param_count()
+    # params read fwd+bwd, grads written+read, adam m/v read+write, p write
+    out.add("weights_opt", 10.0 * n_params, 12.0 * n_params * 4)
+    # layer-scan residual checkpoints: save + 2 reads, bf16
+    t = shape.tokens
+    out.add("residual_ckpt", 0.0, 3.0 * cfg.num_layers * t * cfg.d_model * 2)
+    return out
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        c = 2 * cfg.num_layers * b * s * kvh * hd * 2
+        if cfg.family == "encdec":
+            c += 2 * cfg.num_layers * b * cfg.encoder_seq * kvh * hd * 2
+        return c
+    di, hh, n = ssm_dims(cfg.d_model, cfg.ssm_state)
+    ssm = cfg.num_layers * b * (hh * HEADDIM * n * 4
+                                + (CONV_WIDTH - 1) * (di + 2 * n) * 2)
+    if cfg.family == "hybrid":
+        g = cfg.num_layers // cfg.attn_every
+        ssm += 2 * g * b * s * kvh * hd * 2
+    return ssm

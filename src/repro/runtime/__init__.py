@@ -1,0 +1,5 @@
+from .fault_tolerance import (ElasticPlan, HeartbeatMonitor, HostFailure,
+                              TrainSupervisor, plan_elastic_mesh)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "HostFailure",
+           "TrainSupervisor", "plan_elastic_mesh"]

@@ -1,0 +1,4 @@
+from .engine import Request, ServeEngine
+from ..models.attention import flash_decode
+
+__all__ = ["Request", "ServeEngine", "flash_decode"]

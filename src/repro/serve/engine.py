@@ -1,0 +1,133 @@
+"""Batched serving engine: slot-based continuous batching over jitted
+prefill / decode steps.
+
+The engine owns a fixed pool of B cache slots.  Requests are admitted into
+free slots (prefill writes that slot's cache region), and a single fused
+``decode_step`` advances every active slot one token per tick — finished
+slots are freed and refilled, so decode batches stay full (the serving-side
+analogue of keeping all DSP cores busy).  Sampling is greedy or temperature.
+
+Decode attention runs as flash-decode (paper K-parallel) whenever a
+DistContext is active — see models.attention.flash_decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, make_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = make_cache(cfg, batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)       # filled length/slot
+        self.active: list[Request | None] = [None] * batch_slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
+        self._prefill_cache: dict[int, object] = {}
+
+    # -------------------------- request plumbing ------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_one(self, slot: int, req: Request) -> None:
+        s = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.encoder_seq, self.cfg.d_model), jnp.float32)
+        if self.cfg.num_patches:
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.num_patches, self.cfg.d_model), jnp.float32)
+        fn = self._prefill_cache.get(s)
+        if fn is None:
+            fn = jax.jit(functools.partial(prefill, cfg=self.cfg))
+            self._prefill_cache[s] = fn
+        one_cache = make_cache(self.cfg, 1, self.max_len)
+        logits, one_cache = fn(self.params, batch=batch, cache=one_cache)
+        # copy slot cache in
+        self.cache = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, axis=self._batch_axis(big)),
+            self.cache, one_cache)
+        tok = self._sample(logits, req)
+        req.out_tokens.append(int(tok[0]))
+        self.pos[slot] = s + (self.cfg.num_patches or 0)
+        self.active[slot] = req
+
+    def _batch_axis(self, leaf) -> int:
+        # cache leaves: (L|G, B, ...) stacked — batch axis is 1
+        return 1
+
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / req.temperature, axis=-1))
+
+    # ------------------------------ stepping -----------------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.b):
+            if self.active[slot] is None and self.queue:
+                self._prefill_one(slot, self.queue.pop(0))
+
+    def step(self) -> int:
+        """One decode tick across all active slots; returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        last = np.zeros((self.b, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None and r.out_tokens:
+                last[i, 0] = r.out_tokens[-1]
+        # single fused decode over all slots (pos varies per slot: use max —
+        # per-slot masks come from each slot's own valid length)
+        pos = jnp.int32(int(self.pos.max()))
+        logits, self.cache = self._decode(
+            self.params, tokens=jnp.asarray(last), cache=self.cache, pos=pos)
+        n_active = 0
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = self._sample(logits[i:i + 1], r)
+            r.out_tokens.append(int(tok[0]))
+            self.pos[i] += 1
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                r.done = True
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        while self.queue or any(r is not None for r in self.active):
+            self.step()
+        return requests

@@ -1,0 +1,4 @@
+from .train_step import make_prefill_step, make_serve_step, make_train_step
+from .trainer import Trainer
+
+__all__ = ["make_prefill_step", "make_serve_step", "make_train_step", "Trainer"]

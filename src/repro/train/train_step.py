@@ -1,0 +1,68 @@
+"""Train / serve step factories used by the trainer, the dry-run and tests."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, loss_fn, prefill
+from ..optim.adamw import OptConfig, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    accum_steps: int = 1, aux_weight: float = 0.01):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``accum_steps > 1`` splits the batch into microbatches scanned
+    sequentially (gradient accumulation) — the standard way to overlap the
+    DP gradient reduction of microbatch i with the backward of i+1.
+    """
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, aux_weight=aux_weight), has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, cfg, batch)
+        metrics["total_loss"] = loss
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            grads, metrics = single(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                grads, metrics = single(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics_all = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+        params, opt_state, stats = apply_updates(params, grads, opt_state,
+                                                 opt_cfg)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        logits, cache = prefill(params, cfg, batch, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token greedy decode step (the dry-run's ``serve_step``)."""
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = decode_step(params, cfg, tokens, cache, pos)
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32), cache
+    return serve_step

@@ -1,0 +1,105 @@
+"""Training loop: jitted step + prefetching data + async checkpoints +
+heartbeat/straggler hooks.  Works identically on 1 device (examples/tests)
+and on a production mesh (launch/train.py passes mesh + shardings)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.dist import DistContext, use_dist
+from ..data.pipeline import Prefetcher, SyntheticLM
+from ..models.model import init_params
+from ..optim.adamw import OptConfig, init_opt_state
+from .train_step import make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 opt_cfg: OptConfig | None = None, *,
+                 mesh=None, shardings=None, seed: int = 0,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 monitor=None, log_every: int = 10):
+        self.cfg = cfg
+        self.shape = shape
+        self.opt_cfg = opt_cfg or OptConfig()
+        self.mesh = mesh
+        self.shardings = shardings or {}
+        self.seed = seed
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.monitor = monitor
+        self.log_every = log_every
+        self.metrics_log: list[dict] = []
+
+        self.dataset = SyntheticLM(cfg, shape, seed=seed)
+        self._step_fn = None
+
+    def _build(self):
+        step = make_train_step(self.cfg, self.opt_cfg)
+        kw = {}
+        if self.shardings:
+            kw = dict(in_shardings=(self.shardings.get("params"),
+                                    self.shardings.get("opt"),
+                                    self.shardings.get("batch")))
+        self._step_fn = jax.jit(step, donate_argnums=(0, 1), **kw)
+
+    def init_state(self):
+        key = jax.random.PRNGKey(self.seed)
+        params = init_params(self.cfg, key)
+        opt = init_opt_state(params)
+        return params, opt
+
+    def restore_or_init(self):
+        params, opt = self.init_state()
+        start = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            start, state = self.ckpt.restore(
+                {"params": params, "opt": opt},
+                shardings=({"params": self.shardings.get("params"),
+                            "opt": self.shardings.get("opt")}
+                           if self.shardings else None))
+            params, opt = state["params"], state["opt"]
+            start += 1
+        return start, params, opt
+
+    def run(self, num_steps: int, host: str = "host0"):
+        ctx = None
+        if self.mesh is not None:
+            from ..launch.sharding import dp_axes
+            ctx = DistContext(mesh=self.mesh, dp_axes=dp_axes(self.mesh),
+                              model_axis="model")
+        with use_dist(ctx):
+            if self._step_fn is None:
+                self._build()
+            start, params, opt = self.restore_or_init()
+            prefetch = Prefetcher(self.dataset,
+                                  self.shardings.get("batch_leaves"),
+                                  start_step=start)
+            t0 = time.time()
+            try:
+                for _ in range(start, num_steps):
+                    step_i, batch = prefetch.next()
+                    params, opt, metrics = self._step_fn(params, opt, batch)
+                    if self.monitor is not None:
+                        self.monitor.beat(host, step_i)
+                    if step_i % self.log_every == 0 or step_i == num_steps - 1:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        m["step"] = step_i
+                        m["wall_s"] = round(time.time() - t0, 2)
+                        self.metrics_log.append(m)
+                        print(f"step {step_i:5d} loss={m['loss']:.4f} "
+                              f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}")
+                    if (self.ckpt and step_i > 0
+                            and step_i % self.ckpt_every == 0):
+                        self.ckpt.save(step_i, {"params": params, "opt": opt})
+            finally:
+                prefetch.close()
+                if self.ckpt:
+                    self.ckpt.save(num_steps - 1,
+                                   {"params": params, "opt": opt},
+                                   blocking=True)
+            return params, opt

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (reduced same-family configs): one forward/
+train step on CPU asserting output shapes + no NaNs, and prefill+decode
+consistency against teacher-forced full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 24
+
+
+def _batch(cfg):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 2, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, S), 2, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.num_patches:
+        batch["patch_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_patches, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        M.loss_fn, has_aux=True)(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.all(np.isfinite(np.asarray(g, np.float32)))
+                          for g in leaves)
+    logits, _ = M.forward_train(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_matches_forward(arch):
+    """Greedy decode after prefill must reproduce the teacher-forced logits
+    of the full forward at the same position (cache correctness)."""
+    import dataclasses
+    cfg = get_config(arch + "-smoke")
+    if cfg.num_experts:
+        # ample capacity: token-dropping depends on the batch composition,
+        # which legitimately differs between prefill(S) and forward(S+1)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+
+    # teacher-forced reference: logits at position S-1 given toks[:, :S]
+    full_logits, _ = M.forward_train(params, cfg, batch)
+    ref = full_logits[:, S - 1]
+
+    # prefill of toks[:, :S] — last-position logits must match
+    cache = M.make_cache(cfg, B, S + 8)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = toks
+    got, cache = M.prefill(params, cfg, pre_batch, cache)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+    # one decode step with the argmax token: compare against a fresh
+    # teacher-forced forward over S+1 tokens
+    nxt = jnp.argmax(got, -1)[:, None].astype(jnp.int32)
+    pos = jnp.int32(S + (cfg.num_patches or 0))
+    dec_logits, _ = M.decode_step(params, cfg, nxt, cache, pos)
+
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([toks, nxt], axis=1)
+    batch2.pop("labels", None)
+    full2, _ = M.forward_train(params, cfg, batch2)
+    ref2 = full2[:, S]
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(ref2, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_vocab_padding_masked():
+    cfg = get_config("whisper-base-smoke")
+    assert cfg.vocab_padded % cfg.vocab_pad_multiple == 0
+    params = M.init_params(cfg, KEY)
+    logits, _ = M.forward_train(params, cfg, _batch(cfg))
+    pad = np.asarray(logits, np.float32)[..., cfg.vocab_size:]
+    if pad.size:
+        assert np.all(pad <= -1e29)
+
+
+def test_window_pattern_cycles():
+    cfg = get_config("gemma3-4b")
+    w = cfg.windows()
+    assert len(w) == cfg.num_layers
+    assert w[:6] == (1024, 1024, 1024, 1024, 1024, 0)
+    assert w[6] == 1024
+
+
+def test_param_count_sane():
+    """Full configs should land near their nominal sizes."""
+    approx = {
+        "qwen3-8b": (7e9, 10e9),
+        "qwen3-1.7b": (1.5e9, 2.5e9),
+        "mamba2-370m": (0.25e9, 0.55e9),
+        "mixtral-8x7b": (40e9, 50e9),
+        "llava-next-34b": (30e9, 40e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = get_config(name).param_count()
+        assert lo < n < hi, (name, n)
+    # MoE active < total
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()

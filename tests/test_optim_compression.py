@@ -1,0 +1,45 @@
+"""Error-feedback int8 gradient compression: exactness of the integer psum,
+error-feedback convergence, and wire dtype (s8 on the all-reduce)."""
+from helpers import run_with_devices
+
+
+def test_compressed_allreduce_accuracy_and_wire_dtype():
+    run_with_devices("""
+import functools
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim.compression import compress_allreduce, init_error_state
+
+mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+N = 8
+
+@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
+                   out_specs=(P("dp"), P("dp")))
+def step(g, err):
+    mean, new_err = compress_allreduce(g[0], err[0], "dp", N)
+    return mean[None], new_err[None]
+
+key = jax.random.PRNGKey(0)
+g = jax.random.normal(key, (N, 64, 32)) * 0.01
+err = jnp.zeros((N, 64, 32))
+true_mean = jnp.mean(g, axis=0)
+
+# single step: quantized mean close to true mean
+mean, err1 = jax.jit(step)(g, err)
+m0 = np.asarray(mean)[0]
+rel = np.abs(m0 - np.asarray(true_mean)).max() / np.abs(np.asarray(true_mean)).max()
+assert rel < 0.2, rel
+
+# error feedback: accumulated mean over T steps converges to T * true mean
+acc = np.zeros((64, 32)); e = err
+for t in range(20):
+    mean, e = jax.jit(step)(g, e)
+    acc += np.asarray(mean)[0]
+err_rel = np.abs(acc / 20 - np.asarray(true_mean)).max() / np.abs(np.asarray(true_mean)).max()
+assert err_rel < 0.03, err_rel
+
+# the wire carries s8: check the compiled HLO
+hlo = jax.jit(step).lower(g, err).compile().as_text()
+assert any("s8[" in l and "all-reduce" in l for l in hlo.splitlines()), "no s8 all-reduce"
+print("OK")
+""", n_devices=8)

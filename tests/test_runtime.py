@@ -1,0 +1,76 @@
+"""Fault tolerance: heartbeats, stragglers, elastic planning, supervisor."""
+import pytest
+
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, HostFailure,
+                                           TrainSupervisor, plan_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_dead_host_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1"], dead_after=10, clock=clk)
+    clk.t = 5
+    mon.beat("h0", 1)
+    clk.t = 12
+    assert mon.dead_hosts() == ["h1"]
+
+
+def test_straggler_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1", "h2"], straggler_factor=2.0,
+                           clock=clk)
+    for step in range(1, 6):
+        clk.t = step * 1.0
+        mon.beat("h0", step)
+        mon.beat("h1", step)
+    for step in range(1, 6):
+        mon.hosts["h2"].step_times.append(5.0)   # 5x median
+        mon.hosts["h2"].last_step = step
+    assert mon.stragglers() == ["h2"]
+
+
+def test_elastic_plan_preserves_tp():
+    p = plan_elastic_mesh(240, model_parallel=16, global_batch=256)
+    assert p.model == 16
+    assert p.data <= 15 and 256 % p.data == 0
+    assert p.chips == p.data * 16 <= 240
+
+
+def test_elastic_plan_batch_divisibility():
+    p = plan_elastic_mesh(7 * 16, model_parallel=16, global_batch=256)
+    assert 256 % p.data == 0      # dp=7 rejected -> 4
+    assert p.data == 4
+
+
+def test_elastic_plan_too_few_chips():
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, model_parallel=16, global_batch=64)
+
+
+def test_supervisor_retry_shrink(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    import jax.numpy as jnp
+    ck = Checkpointer(tmp_path)
+    attempts = []
+
+    def run_fn(start_step, mesh_shape):
+        attempts.append((start_step, mesh_shape))
+        if len(attempts) == 1:
+            ck.save(10, {"w": jnp.zeros(3)}, blocking=True)
+            raise HostFailure(lost_chips=64)
+        return 100
+
+    sup = TrainSupervisor(checkpointer=ck, model_parallel=16,
+                          global_batch=256, total_chips=256)
+    assert sup.run(run_fn) == 100
+    assert attempts[0] == (0, (16, 16))
+    # after losing 64 chips: 192 survive -> dp=12 (256%12!=0 -> 8) => (8,16)
+    assert attempts[1][1] == (8, 16)
+    assert attempts[1][0] == 11   # resumes AFTER the checkpoint

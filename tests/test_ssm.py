@@ -1,0 +1,104 @@
+"""Mamba2 SSD: the chunked scan must equal the naive per-timestep recurrence
+(the state-space duality), and decode must continue prefill exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (HEADDIM, init_ssm_params, init_ssm_state,
+                              ssd_decode_step, ssd_forward, ssm_dims)
+
+KEY = jax.random.PRNGKey(5)
+D_MODEL, NSTATE = 64, 16
+
+
+def naive_ssd(x, params, ssm_state):
+    """Per-timestep recurrence oracle (no chunking)."""
+    from repro.models.ssm import _causal_conv, _split_proj, CONV_WIDTH
+    from repro.models.layers import dense, rms_norm
+    bsz, s, d_model = x.shape
+    di, hh, n = ssm_dims(d_model, ssm_state)
+    p = HEADDIM
+    cdt = jnp.float32
+    zxbcdt = dense(x, params["in_proj"], cdt)
+    z, xs, b, c, dt = _split_proj(zxbcdt, di, n, hh)
+    xbc = _causal_conv(jnp.concatenate([xs, b, c], -1),
+                       params["conv_w"].astype(cdt),
+                       params["conv_b"].astype(cdt))
+    xs = xbc[..., :di].reshape(bsz, s, hh, p)
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    h = jnp.zeros((bsz, hh, p, n))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * a)                       # (B,H)
+        xdt = xs[:, t] * dt[:, t][..., None]                # (B,H,P)
+        h = decay[:, :, None, None] * h + jnp.einsum(
+            "bhp,bn->bhpn", xdt, b[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, c[:, t]))
+    y = jnp.stack(ys, 1) + xs * params["D_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"])
+    return dense(y, params["out_proj"], cdt), h
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (40, 16), (16, 16)])
+def test_chunked_ssd_equals_recurrence(s, chunk):
+    params = init_ssm_params(KEY, D_MODEL, NSTATE)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, s, D_MODEL)) * 0.5
+    y, h = ssd_forward(x, params, ssm_state=NSTATE, chunk=chunk,
+                       compute_dtype=jnp.float32)
+    y_ref, h_ref = naive_ssd(x, params, NSTATE)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(h, h_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_continues_prefill():
+    """prefill(x[:, :t]) then decode(x[:, t]) == forward(x[:, :t+1])[-1]."""
+    params = init_ssm_params(KEY, D_MODEL, NSTATE)
+    s = 24
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (1, s + 1, D_MODEL)) * 0.5
+
+    y_full, _ = ssd_forward(x, params, ssm_state=NSTATE, chunk=8,
+                            compute_dtype=jnp.float32)
+
+    # prefill first s tokens -> state; then one decode step
+    y_pre, h = ssd_forward(x[:, :s], params, ssm_state=NSTATE, chunk=8,
+                           compute_dtype=jnp.float32)
+    # reconstruct conv state from the last W-1 raw conv inputs
+    from repro.models.ssm import _split_proj, CONV_WIDTH
+    from repro.models.layers import dense
+    di, hh, n = ssm_dims(D_MODEL, NSTATE)
+    zxbcdt = dense(x[:, :s], params["in_proj"], jnp.float32)
+    _, xs_raw, b_raw, c_raw, _ = _split_proj(zxbcdt, di, n, hh)
+    conv_in = jnp.concatenate([xs_raw, b_raw, c_raw], -1)
+    state = {"h": h, "conv": conv_in[:, s - (CONV_WIDTH - 1):s]}
+    y_dec, _ = ssd_decode_step(x[:, s:s + 1], params, state,
+                               ssm_state=NSTATE, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, s],
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_initial_state_threading():
+    """ssd_forward(x2, initial_state=state(x1)) == tail of ssd_forward(x1x2).
+
+    The causal conv is set to an identity tap so the split point carries no
+    conv history (state threading isolated; the production prefill->decode
+    conv-tail path is covered by test_decode_continues_prefill)."""
+    params = init_ssm_params(KEY, D_MODEL, NSTATE)
+    cw = jnp.zeros_like(params["conv_w"]).at[-1].set(1.0)
+    params = dict(params, conv_w=cw, conv_b=jnp.zeros_like(params["conv_b"]))
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (1, 32, D_MODEL)) * 0.5
+    y_full, h_full = ssd_forward(x, params, ssm_state=NSTATE, chunk=8,
+                                 compute_dtype=jnp.float32)
+    _, h1 = ssd_forward(x[:, :16], params, ssm_state=NSTATE, chunk=8,
+                        compute_dtype=jnp.float32)
+    # NOTE: conv state crosses the split too; use a conv-safe split point by
+    # feeding overlapping context and comparing the strictly interior part.
+    y2, h2 = ssd_forward(x[:, 16:], params, ssm_state=NSTATE, chunk=8,
+                         compute_dtype=jnp.float32, initial_state=h1)
+    np.testing.assert_allclose(h2, h_full, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(y2, y_full[:, 16:], rtol=5e-3, atol=5e-3)

@@ -1,0 +1,86 @@
+"""Training loop: loss decreases, grad accumulation is equivalent, optimizer
+math matches a reference implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state, schedule
+from repro.train.train_step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_loss_decreases():
+    cfg = get_config("qwen3-1.7b-smoke")
+    shape = ShapeConfig("t", seq_len=64, global_batch=4, kind="train")
+    ds = SyntheticLM(cfg, shape, seed=0)
+    params = M.init_params(cfg, KEY)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=2,
+                                                  total_steps=30)))
+    losses = []
+    for i in range(25):
+        batch = {k: jnp.asarray(v) for k, v in ds.host_batch(i).items()}
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[::6]
+
+
+def test_grad_accumulation_equivalence():
+    cfg = get_config("mamba2-370m-smoke")
+    shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+    ds = SyntheticLM(cfg, shape, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in ds.host_batch(0).items()}
+
+    params = M.init_params(cfg, KEY)
+    opt = init_opt_state(params)
+    oc = OptConfig(lr=1e-3)
+    p1, _, m1 = jax.jit(make_train_step(cfg, oc, accum_steps=1))(
+        params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, oc, accum_steps=2))(
+        params, init_opt_state(params), batch)
+    # same data, same update (microbatch mean == full-batch mean here since
+    # loss is token-mean over equal-sized microbatches)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_adamw_reference_math():
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    cfg = OptConfig(lr=0.01, beta1=0.9, beta2=0.999, eps=1e-8,
+                    weight_decay=0.0, warmup_steps=0, total_steps=10,
+                    min_lr_ratio=1.0, clip_norm=1e9)
+    st = init_opt_state(p)
+    new_p, st, stats = apply_updates(p, g, st, cfg)
+    # hand-rolled adam step 1
+    m = 0.1 * np.array([0.1, 0.2, -0.3])
+    v = 0.001 * np.array([0.1, 0.2, -0.3]) ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.999)
+    want = np.array([1.0, -2.0, 3.0]) - 0.01 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_schedule_warmup_cosine():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                    min_lr_ratio=0.1)
+    assert float(schedule(jnp.int32(5), cfg)) == 0.5
+    assert abs(float(schedule(jnp.int32(10), cfg)) - 1.0) < 1e-6
+    end = float(schedule(jnp.int32(110), cfg))
+    assert abs(end - 0.1) < 1e-3
+
+
+def test_grad_clip():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    cfg = OptConfig(clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    st = init_opt_state(p)
+    _, _, stats = apply_updates(p, g, st, cfg)
+    assert float(stats["grad_norm"]) == 200.0
