@@ -1,0 +1,80 @@
+"""JAX version compatibility layer.
+
+Policy: the repo targets the *pinned* container JAX (0.4.x line) while
+staying forward-compatible with newer releases.  Every API that moved or was
+renamed between 0.4.x and 0.5+/0.6+ is wrapped HERE, once, and the rest of
+the codebase imports from ``repro.core.compat`` — never version-checks
+inline.  Wrapped surfaces:
+
+  * ``shard_map``        — ``jax.shard_map`` (new) vs
+                           ``jax.experimental.shard_map.shard_map`` (0.4.x).
+  * ``make_mesh``        — ``jax.make_mesh`` grew an ``axis_types`` kwarg and
+                           ``jax.sharding.AxisType`` only exists on newer
+                           releases; we always want plain Auto axes.
+  * ``normalize_cost_analysis`` — ``Compiled.cost_analysis()`` returns a
+                           list-of-dict on 0.4.x and a flat dict on newer
+                           versions.
+  * ``pallas_compiler_params`` — ``pltpu.CompilerParams`` is the new name of
+                           ``pltpu.TPUCompilerParams``.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+# --- shard_map -------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                     # jax >= 0.5
+    shard_map = jax.shard_map
+else:                                             # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+# --- mesh construction -----------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None) -> jax.sharding.Mesh:
+    """Portable ``jax.make_mesh`` with Auto axis types on every version."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# --- compiled cost analysis ------------------------------------------------
+
+def normalize_cost_analysis(cost) -> dict:
+    """``Compiled.cost_analysis()`` -> one flat dict on every version.
+
+    jax 0.4.x returns ``[{...}]`` (one dict per program); newer versions
+    return the dict directly.  Missing/empty analyses normalize to ``{}``.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: dict = {}
+        for entry in cost:
+            if entry:
+                merged.update(entry)
+        return merged
+    return dict(cost)
+
+
+def cost_analysis(compiled) -> dict:
+    """Run + normalize ``compiled.cost_analysis()``."""
+    return normalize_cost_analysis(compiled.cost_analysis())
+
+
+# --- pallas compiler params ------------------------------------------------
+
+def pallas_compiler_params(**kwargs):
+    """Build TPU Pallas compiler params under either class name."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -157,6 +157,75 @@ def estimate(
     )
 
 
+def estimate_batched(
+    g: int, m: int, k: int, n: int,
+    *,
+    bm: int, bn: int, bk: int,
+    dim_order: str = "mn",
+    shared_a: bool = False,
+    shared_b: bool = False,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    spec: TpuSpec = TPU_V5E,
+) -> PlanEstimate:
+    """Model one tiling of the batched GEMM C(g) += A(g) B(g), g in [0, G).
+
+    Grid is (g, outer, inner, K) with the batch dim outermost.  Per-entry
+    traffic follows the same index-map-constancy reuse rule as ``estimate``;
+    batched operands then re-fetch for every batch entry (their index map
+    carries ``g``), while a *shared* operand (2-D, no batch dim — the grouped
+    case) is counted once when the pipeline can actually keep it resident:
+    its index map must be globally constant, i.e. a single block in every
+    grid dim it reads (gk == 1 and its own outer extent == 1).  Otherwise the
+    shared panel re-streams per batch entry exactly like the paper's
+    re-fetched operand in the non-cached loop order.
+    """
+    mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
+    gm, gn, gk = mp // bm, np_ // bn, kp // bk
+
+    flops_useful = 2.0 * g * m * n * k
+    flops_padded = 2.0 * g * mp * np_ * kp
+
+    # Per-batch-entry traffic under index-map-constancy reuse (cf. estimate).
+    if gk == 1:
+        if dim_order == "mn":   # i outer: A resident across the j sweep
+            ta_entry = mp * kp * in_bytes
+            tb_entry = kp * np_ * gm * in_bytes
+        else:                   # j outer: B resident across the i sweep
+            ta_entry = mp * kp * gn * in_bytes
+            tb_entry = kp * np_ * in_bytes
+    else:
+        ta_entry = mp * kp * gn * in_bytes
+        tb_entry = kp * np_ * gm * in_bytes
+
+    a_resident = shared_a and gm == 1 and gk == 1
+    b_resident = shared_b and gn == 1 and gk == 1
+    traffic_a = (mp * kp * in_bytes) if a_resident else ta_entry * g
+    traffic_b = (kp * np_ * in_bytes) if b_resident else tb_entry * g
+    traffic_c = g * mp * np_ * out_bytes
+    hbm_bytes = traffic_a + traffic_b + traffic_c
+
+    frac = upper_bound_fraction(mp, np_, kp, spec)
+    peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)
+    t_compute = flops_padded / peak
+    t_memory = hbm_bytes / spec.hbm_bw
+
+    # VMEM footprint is per grid step — independent of G (batch blocks are 1
+    # entry deep), identical to the 2-D kernel's.
+    vmem = (2 * (bm * bk + bk * bn) * in_bytes
+            + bm * bn * 4
+            + 2 * bm * bn * out_bytes)
+    return PlanEstimate(
+        flops_useful=flops_useful,
+        flops_padded=flops_padded,
+        hbm_bytes=hbm_bytes,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        vmem_bytes=vmem,
+        mxu_fraction=frac,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Paper Eqs. 1-4 (verbatim), used by benchmarks/ to reproduce the paper's
 # block-size reasoning for FT-m7032 next to the TPU-adapted model above.

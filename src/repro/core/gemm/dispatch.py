@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
-from .tuner import plan_gemm
+from .tuner import plan_batched_gemm, plan_gemm
 
 _REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
 
@@ -101,6 +101,122 @@ def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
     if backend == "pallas_interpret":
         return _pallas_fn(trans, out_dtype.name, True)(a, b)
     raise ValueError(f"unknown gemm backend: {backend}")
+
+
+def _ref_batched(a: jax.Array, b: jax.Array, trans: str,
+                 out_dtype) -> jax.Array:
+    """XLA oracle for batched/grouped GEMM with fp32 accumulation.  Either
+    operand may be 2-D (shared across the batch)."""
+    al = "gmk" if a.ndim == 3 else "mk"
+    bl = "gkn" if b.ndim == 3 else "kn"
+    if trans == "tn":
+        al = al.replace("mk", "km")
+    elif trans == "nt":
+        bl = bl.replace("kn", "nk")
+    elif trans != "nn":
+        raise ValueError(trans)
+    out = jnp.einsum(f"{al},{bl}->gmn", a, b,
+                     preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+def _batched_mkns(trans: str, a: jax.Array, b: jax.Array):
+    m, k, n = _mkn(trans, a.shape[-2:], b.shape[-2:])
+    shared = "a" if a.ndim == 2 else ("b" if b.ndim == 2 else "none")
+    g = b.shape[0] if shared == "a" else a.shape[0]
+    return g, m, k, n, shared
+
+
+def _run_planned_batched(a: jax.Array, b: jax.Array, trans: str, out_dtype,
+                         backend: str) -> jax.Array:
+    """Plan one batched/grouped GEMM and run it on the selected backend.
+
+    The planner runs on EVERY backend (it is trace-time-only work and keeps
+    the plan cache an accurate census of the workload's irregular shapes);
+    only the execution engine differs: XLA dot_general on CPU, the batched
+    Pallas kernel on TPU / in interpret mode."""
+    g, m, k, n, shared = _batched_mkns(trans, a, b)
+    in_bytes = jnp.dtype(a.dtype).itemsize
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    plan = plan_batched_gemm(g, m, k, n, in_bytes, out_bytes, shared)
+    if backend == "xla":
+        return _ref_batched(a, b, trans, out_dtype)
+    return _ops.batched_gemm(
+        a, b, bm=plan.bm, bn=plan.bn, bk=plan.bk, dim_order=plan.dim_order,
+        trans=trans, out_dtype=out_dtype,
+        interpret=(backend == "pallas_interpret"),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_fn(trans: str, out_dtype_name: str, backend: str):
+    """Custom-VJP'd batched matmul for one (trans, dtype, backend) combo.
+
+    Both backward GEMMs are themselves planned batched GEMMs: for the
+    grouped MoE forward (E, C, D) @ (E, D, F), dW = x^T dy contracts the
+    capacity dim — the paper's T2 shape per expert — and dx is the N<=128
+    "nt" GEMM; routing them through ``_run_planned_batched`` is what makes
+    the backward pass see the CMR tuner at all."""
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(a, b):
+        return _run_planned_batched(a, b, trans, out_dtype, backend)
+
+    def fwd(a, b):
+        return f(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        run = lambda x, y, t, dt: _run_planned_batched(  # noqa: E731
+            x, y, t, dt, backend)
+        if trans == "nn":          # y_g = a_g @ b_g
+            da = run(g, b, "nt", a.dtype)
+            if b.ndim == 2:
+                # Shared weight: dW = sum_g x_g^T dy_g == ONE flat T2 GEMM
+                # over all G*M rows — no (G, K, N) intermediate.
+                return da, matmul(
+                    a.reshape(-1, a.shape[-1]), g.reshape(-1, g.shape[-1]),
+                    trans="tn", out_dtype=b.dtype, backend=backend)
+            db = run(a, g, "tn", b.dtype)   # T2 per group: K = capacity
+        elif trans == "tn":        # y_g = a_g.T @ b_g, a: (G, K, M)
+            da = run(b, g, "nt", a.dtype)
+            db = run(a, g, "nn", b.dtype)
+        else:                      # y_g = a_g @ b_g.T, b: (G, N, K)
+            da = run(g, b, "nn", a.dtype)
+            db = run(g, a, "tn", b.dtype)
+        if a.ndim == 2:            # shared a: gradients sum over the batch
+            da = jnp.sum(da, axis=0).astype(a.dtype)
+        if b.ndim == 2:
+            db = jnp.sum(db, axis=0).astype(b.dtype)
+        return da, db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def batched_matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
+                   out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Batched GEMM (G, M, K) @ (G, K, N) -> (G, M, N) through the ftIMM
+    planner; fp32 accumulation always.  Either operand may be 2-D (shared
+    across the batch).  The attention BMMs flatten their (batch, kv-head)
+    dims into G and route here instead of raw einsum."""
+    assert a.ndim == 3 or b.ndim == 3, (a.shape, b.shape)
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    backend = backend or _backend()
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown gemm backend: {backend}")
+    return _batched_fn(trans, out_dtype.name, backend)(a, b)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, trans: str = "nn",
+                   out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Grouped GEMM: per-group panels where one operand may be shared —
+    the MoE expert projections (E, C, D) @ (E, D, F) -> (E, C, F).  Same
+    engine as ``batched_matmul``; kept as a distinct entry point so call
+    sites read as what they are (experts, not batches)."""
+    return batched_matmul(x, w, trans=trans, out_dtype=out_dtype,
+                          backend=backend)
 
 
 def project(x: jax.Array, w: jax.Array, *, out_dtype=None,

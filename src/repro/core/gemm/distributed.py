@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from .dispatch import matmul
 from .tuner import plan_distributed
 
@@ -59,7 +60,7 @@ def dist_matmul(
         a_p = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(P(axis, None), P(None, None)),
             out_specs=P(axis, None),
         )
@@ -75,7 +76,7 @@ def dist_matmul(
         b_p = jnp.pad(b, ((0, pad_k), (0, 0))) if pad_k else b
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(P(None, axis), P(axis, None)),
             out_specs=P(None, None),
         )

@@ -23,7 +23,8 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass, replace
 
-from .cmr import TPU_V5E, PlanEstimate, TpuSpec, cdiv, ceil_to, estimate
+from .cmr import (TPU_V5E, PlanEstimate, TpuSpec, cdiv, ceil_to, estimate,
+                  estimate_batched)
 from .shapes import GemmClass, classify
 
 
@@ -154,6 +155,50 @@ def plan_distributed(
     return DistPlan("k_parallel", num_cores, pk, t_red, t_k)
 
 
+@functools.lru_cache(maxsize=8192)
+def plan_batched_gemm(
+    g: int, m: int, k: int, n: int,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    shared: str = "none",            # "none" | "a" | "b"
+    spec: TpuSpec = TPU_V5E,
+) -> GemmPlan:
+    """Pick the best tiling for the batched GEMM C(g) += A(g) B(g).
+
+    ``shared`` marks a 2-D operand reused by every batch entry (the grouped
+    case); the batch-aware CMR model then credits cross-batch residency when
+    the tiling actually earns it (single resident block), mirroring the
+    paper's loop-order-for-reuse analysis with the batch as the outermost
+    loop.  The per-entry shape is classified with the 2-D taxonomy (each MoE
+    expert GEMM is T3/T1 per shard regardless of E)."""
+    cls = classify(m, k, n)
+    sublane = spec.sublane(in_bytes)
+    shared_a, shared_b = shared == "a", shared == "b"
+    best: GemmPlan | None = None
+    for bm in _bm_candidates(m, sublane):
+        for bn in _bn_candidates(n, spec.lane):
+            for bk in _bk_candidates(k):
+                for order in ("mn", "nm"):
+                    e = estimate_batched(
+                        g, m, k, n, bm=bm, bn=bn, bk=bk, dim_order=order,
+                        shared_a=shared_a, shared_b=shared_b,
+                        in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+                    if e.vmem_bytes > spec.vmem_budget:
+                        continue
+                    cand = GemmPlan(bm=bm, bn=bn, bk=bk, dim_order=order,
+                                    gemm_class=cls, est=e)
+                    if best is None or _better(cand, best):
+                        best = cand
+    if best is None:  # degenerate: nothing fit; shrink to minimum tiles
+        bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
+        e = estimate_batched(g, m, k, n, bm=bm, bn=bn, bk=bk,
+                             shared_a=shared_a, shared_b=shared_b,
+                             in_bytes=in_bytes, out_bytes=out_bytes,
+                             spec=spec)
+        best = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
+    return best
+
+
 def tgemm_plan(m: int, k: int, n: int,
                in_bytes: int = 4, out_bytes: int = 4,
                spec: TpuSpec = TPU_V5E) -> GemmPlan:
@@ -168,4 +213,5 @@ def tgemm_plan(m: int, k: int, n: int,
 
 def clear_plan_cache() -> None:
     plan_gemm.cache_clear()
+    plan_batched_gemm.cache_clear()
     plan_distributed.cache_clear()

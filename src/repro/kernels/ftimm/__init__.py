@@ -1,5 +1,7 @@
-from .kernel import ftimm_gemm, ftimm_gemm_splitk
-from .ops import gemm
+from .kernel import (ftimm_gemm, ftimm_gemm_batched, ftimm_gemm_grouped,
+                     ftimm_gemm_splitk)
+from .ops import batched_gemm, gemm
 from . import ref
 
-__all__ = ["ftimm_gemm", "ftimm_gemm_splitk", "gemm", "ref"]
+__all__ = ["ftimm_gemm", "ftimm_gemm_batched", "ftimm_gemm_grouped",
+           "ftimm_gemm_splitk", "batched_gemm", "gemm", "ref"]

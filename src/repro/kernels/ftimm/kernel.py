@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.compat import pallas_compiler_params
+
 DimOrder = Literal["mn", "nm"]
 
 
@@ -145,11 +147,139 @@ def ftimm_gemm(
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(a, b)
+
+
+_DIMS = {"nn": ((1,), (0,)), "tn": ((0,), (0,)), "nt": ((1,), (1,))}
+
+
+def _batched_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims,
+                    a_batched, b_batched):
+    a_blk = a_ref[0] if a_batched else a_ref[...]
+    b_blk = b_ref[0] if b_batched else b_ref[...]
+    _accum_body(a_blk, b_blk, c_ref.at[0], acc_ref,
+                k=pl.program_id(3), nk=nk, dims=dims)
+
+
+def _batched_specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder,
+                   a_batched: bool, b_batched: bool):
+    """BlockSpecs for the (g, outer, inner, k) grid.
+
+    Batched operands carry a leading size-1 block indexed by the batch grid
+    dim; a *shared* (2-D) operand's index map simply omits ``g`` — the Pallas
+    pipeline then keeps its block resident across consecutive batch entries
+    whenever the rest of the index map is constant (the grouped-GEMM analogue
+    of the paper's "B panel cached in GSM" reuse, now across the batch)."""
+    if order == "mn":
+        i_of = lambda g, i, j, k: i   # noqa: E731
+        j_of = lambda g, i, j, k: j   # noqa: E731
+    else:
+        i_of = lambda g, i, j, k: j   # noqa: E731
+        j_of = lambda g, i, j, k: i   # noqa: E731
+
+    def spec(batched: bool, shape2, idx2):
+        if batched:
+            return pl.BlockSpec(
+                (1,) + shape2, lambda g, i, j, k: (g,) + idx2(g, i, j, k))
+        return pl.BlockSpec(shape2, lambda g, i, j, k: idx2(g, i, j, k))
+
+    if trans == "nn":
+        a_spec = spec(a_batched, (bm, bk),
+                      lambda g, i, j, k: (i_of(g, i, j, k), k))
+        b_spec = spec(b_batched, (bk, bn),
+                      lambda g, i, j, k: (k, j_of(g, i, j, k)))
+    elif trans == "tn":
+        a_spec = spec(a_batched, (bk, bm),
+                      lambda g, i, j, k: (k, i_of(g, i, j, k)))
+        b_spec = spec(b_batched, (bk, bn),
+                      lambda g, i, j, k: (k, j_of(g, i, j, k)))
+    elif trans == "nt":
+        a_spec = spec(a_batched, (bm, bk),
+                      lambda g, i, j, k: (i_of(g, i, j, k), k))
+        b_spec = spec(b_batched, (bn, bk),
+                      lambda g, i, j, k: (j_of(g, i, j, k), k))
+    else:  # pragma: no cover
+        raise ValueError(trans)
+    c_spec = pl.BlockSpec(
+        (1, bm, bn),
+        lambda g, i, j, k: (g, i_of(g, i, j, k), j_of(g, i, j, k)))
+    return a_spec, b_spec, c_spec
+
+
+def ftimm_gemm_grouped(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    trans: str = "nn",
+    dim_order: DimOrder = "mn",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped ftIMM GEMM: per-group operands with optional sharing.
+
+    Either operand may be 3-D ``(G, ., .)`` (one panel per group — the MoE
+    expert-weight case ``(E, C, D) @ (E, D, F)``) or 2-D (one panel shared by
+    every group, e.g. a common activation against per-group weights or vice
+    versa).  At least one operand must be 3-D.  Per-group shapes must already
+    be padded to block multiples; returns ``(G, M, N)``.
+    """
+    a_batched, b_batched = a.ndim == 3, b.ndim == 3
+    assert a_batched or b_batched, (a.shape, b.shape)
+    if a_batched and b_batched:
+        assert a.shape[0] == b.shape[0], (a.shape, b.shape)
+    gsize = a.shape[0] if a_batched else b.shape[0]
+    m, k, n = _mkn(trans, a.shape[-2:], b.shape[-2:])
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, k, n, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+    gm, gn, gk = m // bm, n // bn, k // bk
+    grid = ((gsize, gm, gn, gk) if dim_order == "mn"
+            else (gsize, gn, gm, gk))
+    a_spec, b_spec, c_spec = _batched_specs(
+        trans, bm, bn, bk, dim_order, a_batched, b_batched)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, nk=gk, dims=_DIMS[trans],
+                          a_batched=a_batched, b_batched=b_batched),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=jax.ShapeDtypeStruct((gsize, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def ftimm_gemm_batched(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    trans: str = "nn",
+    dim_order: DimOrder = "mn",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched ftIMM GEMM: leading batch grid dim over independent per-entry
+    GEMMs, ``(G, M, K) @ (G, K, N) -> (G, M, N)`` (trans variants as in
+    ``ftimm_gemm``).  The fp32 accumulator is revisited across the innermost
+    K steps exactly as in the 2-D kernel; each batch entry owns its own
+    output block so the batch dim is fully parallel."""
+    assert a.ndim == 3 and b.ndim == 3, (a.shape, b.shape)
+    return ftimm_gemm_grouped(
+        a, b, bm=bm, bn=bn, bk=bk, trans=trans, dim_order=dim_order,
+        out_dtype=out_dtype, interpret=interpret)
 
 
 def _splitk_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims):
@@ -203,7 +333,7 @@ def ftimm_gemm_splitk(
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct((nsplit, m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

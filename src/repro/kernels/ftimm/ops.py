@@ -37,6 +37,12 @@ def _ceil_to(x: int, b: int) -> int:
     return (x + b - 1) // b * b
 
 
+def _sublane(dtype) -> int:
+    """Second-to-minor register tile extent per dtype: (8,128) fp32,
+    (16,128) bf16/fp16, (32,128) int8/fp8."""
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -63,7 +69,8 @@ def gemm(
     out_dtype = out_dtype or a.dtype
     m, k, n = _k._mkn(trans, a.shape, b.shape)
 
-    bm_, bn_, bk_ = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 128)), bk
+    bm_ = min(bm, _ceil_to(m, _sublane(a.dtype)))
+    bn_, bk_ = min(bn, _ceil_to(n, 128)), bk
     mp, np_, = _ceil_to(m, bm_), _ceil_to(n, bn_)
     kp = _ceil_to(k, bk_ * nsplit) if nsplit > 1 else _ceil_to(k, bk_)
     kp = max(kp, bk_ * nsplit)
@@ -88,3 +95,53 @@ def gemm(
             dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
         )
     return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm", "bn", "bk", "trans", "dim_order", "out_dtype", "interpret",
+    ),
+)
+def batched_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    trans: str = "nn",
+    dim_order: str = "mn",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched/grouped entry: pads per-group panels to block multiples, runs
+    the batched kernel, un-pads.  Either operand may be 2-D (shared across
+    the batch — the grouped-GEMM case); the batch dim itself is never padded
+    (it maps 1:1 onto the leading grid dim)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    out_dtype = out_dtype or a.dtype
+    m, k, n = _k._mkn(trans, a.shape[-2:], b.shape[-2:])
+
+    bm_ = min(bm, _ceil_to(m, _sublane(a.dtype)))
+    bn_, bk_ = min(bn, _ceil_to(n, 128)), bk
+    mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(k, bk_)
+
+    def pad_panels(x, last2):
+        return _pad_to(x, x.shape[:-2] + last2)
+
+    if trans == "nn":
+        a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (kp, np_))
+    elif trans == "tn":
+        a_p, b_p = pad_panels(a, (kp, mp)), pad_panels(b, (kp, np_))
+    elif trans == "nt":
+        a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (np_, kp))
+    else:
+        raise ValueError(trans)
+
+    out = _k.ftimm_gemm_grouped(
+        a_p, b_p, bm=bm_, bn=bn_, bk=bk_, trans=trans,
+        dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:, :m, :n]

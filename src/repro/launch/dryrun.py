@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import SHAPES, applicable, get_config, list_archs
+from ..core import compat
 from ..configs.base import ModelConfig, ShapeConfig
 from ..core.dist import DistContext, use_dist
 from ..models.model import init_params, make_cache
@@ -189,7 +190,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
 

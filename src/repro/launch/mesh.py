@@ -4,18 +4,14 @@ device state).  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
 gradient reduction (hierarchical: reduce in-pod over ICI, then across pods)."""
 from __future__ import annotations
 
-import jax
+from ..core.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)

@@ -22,10 +22,40 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
+from ..core.compat import shard_map
 from ..core.dist import current_dist
+from ..core.gemm import batched_matmul
 from .layers import dense, rms_norm, rope
 
 NEG_INF = -1e30
+
+
+def _bmm_qk(qg: jax.Array, k_blk: jax.Array) -> jax.Array:
+    """(B, Sq, KVH, G, D) x (B, Skv, KVH, D) -> (B, Sq, KVH, G, Skv) scores.
+
+    The attention score BMM flattened into the planner's batched GEMM: the
+    (batch, kv-head) dims fold into the batch grid dim and the (query, group)
+    dims into M, so each entry is the paper's "nt" GEMM with N = kv-block and
+    K = head_dim <= 128 — irregular by the §III-A taxonomy, and previously a
+    raw einsum the tuner never saw."""
+    b, sq, kvh, g, d = qg.shape
+    skv = k_blk.shape[1]
+    qf = qg.transpose(0, 2, 1, 3, 4).reshape(b * kvh, sq * g, d)
+    kf = k_blk.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        b * kvh, skv, d)
+    s = batched_matmul(qf, kf, trans="nt", out_dtype=jnp.float32)
+    return s.reshape(b, kvh, sq, g, skv).transpose(0, 2, 1, 3, 4)
+
+
+def _bmm_pv(p: jax.Array, v_blk: jax.Array) -> jax.Array:
+    """(B, Sq, KVH, G, Skv) x (B, Skv, KVH, D) -> (B, Sq, KVH, G, D)."""
+    b, sq, kvh, g, skv = p.shape
+    d = v_blk.shape[-1]
+    pf = p.transpose(0, 2, 1, 3, 4).reshape(b * kvh, sq * g, skv)
+    vf = v_blk.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        b * kvh, skv, d)
+    o = batched_matmul(pf, vf, trans="nn", out_dtype=jnp.float32)
+    return o.reshape(b, kvh, sq, g, d).transpose(0, 2, 1, 3, 4)
 
 
 def init_attention_params(key, d_model: int, num_heads: int,
@@ -97,8 +127,7 @@ def blockwise_attention(
     def step(carry, xs):
         acc, m, l = carry
         k_blk, v_blk, pos_blk = xs
-        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
-                       k_blk.astype(jnp.float32)) * scale
+        s = _bmm_qk(qg, k_blk) * scale
         msk = _mask(q_positions, pos_blk, window, causal)
         msk = msk & (pos_blk < valid)[None, :]
         s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
@@ -106,8 +135,7 @@ def blockwise_attention(
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l = l * corr + jnp.sum(p, axis=-1)
-        acc = acc * corr[..., None] + jnp.einsum(
-            "bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+        acc = acc * corr[..., None] + _bmm_pv(p, v_blk)
         return (acc, m_new, l), None
 
     acc0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
@@ -152,16 +180,26 @@ def flash_decode(
         s_loc = k_l.shape[1]
         shard = jax.lax.axis_index(axis)
         kv_pos = shard * s_loc + jnp.arange(s_loc)
-        qg = q_l[:, 0].reshape(-1, kvh, g, d).astype(jnp.float32)
-        s_ = jnp.einsum("bhgd,bkhd->bhgk", qg,
-                        k_l.astype(jnp.float32)) * scale
+        bl = q_l.shape[0]
+        qg = q_l[:, 0].reshape(bl, kvh, g, d).astype(jnp.float32)
+        # The decode score/value BMMs are T2-shaped per (batch, kv-head)
+        # entry (K = cache shard >> M = q-group); flatten them into the
+        # planner's batched GEMM like the prefill path does.
+        kf = k_l.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+            bl * kvh, s_loc, d)
+        s_ = batched_matmul(qg.reshape(bl * kvh, g, d), kf, trans="nt",
+                            out_dtype=jnp.float32
+                            ).reshape(bl, kvh, g, s_loc) * scale
         msk = _mask(pos[None], kv_pos, window, causal=True)[0]
         msk = msk & (kv_pos <= pos)
         s_ = jnp.where(msk[None, None, None, :], s_, NEG_INF)
         m = jnp.max(s_, axis=-1)
         p = jnp.exp(s_ - m[..., None])
         l = jnp.sum(p, axis=-1)
-        acc = jnp.einsum("bhgk,bkhd->bhgd", p, v_l.astype(jnp.float32))
+        vf = v_l.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+            bl * kvh, s_loc, d)
+        acc = batched_matmul(p.reshape(bl * kvh, g, s_loc), vf, trans="nn",
+                             out_dtype=jnp.float32).reshape(bl, kvh, g, d)
         # LSE-corrected reduction over the model axis (paper Alg. 5 line 12).
         gm = jax.lax.pmax(m, axis)
         corr = jnp.exp(m - gm)
@@ -170,7 +208,7 @@ def flash_decode(
         out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
         return out.reshape(-1, 1, h, d).astype(q_l.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         kernel, mesh=dist.mesh,
         in_specs=(P(bshard, None, None, None),
                   P(bshard, axis, None, None),

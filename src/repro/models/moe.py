@@ -8,9 +8,9 @@ Two of the paper's irregular GEMM types appear here as first-class hot spots:
 
 Dispatch is Switch-style with a static per-expert capacity so shapes stay
 jit-friendly: tokens beyond capacity are dropped (weight 0), routed tokens
-are scatter-packed into an (E, C, D) buffer, expert GEMMs run as one
-einsum (sharded TP on d_ff, optionally EP on the expert dim), and results
-gather back with the gate weights applied.
+are scatter-packed into an (E, C, D) buffer, expert GEMMs run as grouped
+ftIMM GEMMs through the CMR planner (sharded TP on d_ff, optionally EP on
+the expert dim), and results gather back with the gate weights applied.
 """
 from __future__ import annotations
 
@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dist import current_dist, shard_act
-from ..core.gemm import project
+from ..core.gemm import grouped_matmul, project
 
 
 def init_moe_params(key, d_model: int, d_ff: int, num_experts: int,
@@ -90,13 +90,15 @@ def moe_mlp(
         # A panel" at the MoE level
         buf = shard_act(buf, None, "dp", None)
 
-    # Expert GEMMs (T3 per shard): one batched einsum per projection.
+    # Expert GEMMs (T3 per shard): grouped ftIMM GEMMs (E, C, D) @ (E, D, F)
+    # through the CMR planner — the batch dim is the expert index, the
+    # per-expert shape is the paper's irregular (capacity x d_model x d_ff);
+    # their backward dW is the T2-shaped grouped GEMM, planned the same way.
     wg = params["w_gate"].astype(compute_dtype)
     wu = params["w_up"].astype(compute_dtype)
     wd = params["w_down"].astype(compute_dtype)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
-        jnp.einsum("ecd,edf->ecf", buf, wu)
-    y_buf = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e * c, d)
+    h = jax.nn.silu(grouped_matmul(buf, wg)) * grouped_matmul(buf, wu)
+    y_buf = grouped_matmul(h, wd).reshape(e * c, d)
 
     # Gather back and combine with gate weights.
     y_tok = jnp.take(y_buf, jnp.minimum(slot, e * c - 1), axis=0)

@@ -1,0 +1,61 @@
+"""Property-test API with a deterministic fallback when hypothesis is absent.
+
+Test modules do ``from _prop import given, settings, st``: with hypothesis
+installed they get the real thing; on a bare interpreter the same decorators
+run a fixed-seed pseudo-random sweep over the declared integer strategies, so
+the property tests still collect, run, and cover the same shape space —
+deterministically (every run draws the identical examples).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _DEFAULT_EXAMPLES = 12
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng: random.Random) -> int:
+            # Bias towards the bounds — the cases property tests care about.
+            r = rng.random()
+            if r < 0.15:
+                return self.lo
+            if r < 0.3:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> "_Integers":
+            return _Integers(min_value, max_value)
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def deco(fn):
+            # No functools.wraps: exposing the wrapped signature would make
+            # pytest treat the strategy parameters as fixtures.
+            def wrapper():
+                rng = random.Random(0xF71)
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    draw = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**draw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def settings(max_examples: int | None = None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = min(max_examples, _DEFAULT_EXAMPLES)
+            return fn
+        return deco

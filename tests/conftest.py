@@ -12,6 +12,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("REPRO_GEMM_BACKEND", "xla")
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess tests that boot a fresh interpreter with fake "
+        "devices (tests/helpers.py); deselect with -m 'not slow'")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     import jax

@@ -62,6 +62,7 @@ def test_blockwise_kv_valid_len():
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_flash_decode_matches_single_device():
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
@@ -78,8 +79,8 @@ cache = M.make_cache(cfg, B, S + 4)
 lg, cache = M.prefill(params, cfg, batch, cache)
 tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
 ref, _ = M.decode_step(params, cfg, tok, cache, jnp.int32(S))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 with use_dist(DistContext(mesh=mesh, dp_axes=("data",), model_axis="model")):
     sp, _ = jax.jit(lambda p, t, c, i: M.decode_step(p, cfg, t, c, i))(
         params, tok, cache, jnp.int32(S))

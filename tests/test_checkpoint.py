@@ -1,4 +1,5 @@
 """Checkpointer: async atomic save/restore, GC, and elastic re-mesh."""
+import pytest
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -47,6 +48,7 @@ def test_atomicity_marker(tmp_path):
     assert ck.latest_step() is None
 
 
+@pytest.mark.slow
 def test_elastic_restore_new_mesh(tmp_path):
     """Save under an (8,)-device sharding, restore under (4,) — the node
     failure path (and the mesh growth path by symmetry)."""
@@ -56,15 +58,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.checkpointer import Checkpointer
 
 ck = Checkpointer(r"{tmp_path}")
-mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core.compat import make_mesh
+mesh8 = make_mesh((8,), ("data",))
 w = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
                    NamedSharding(mesh8, P("data", None)))
 ck.save(1, {{"w": w}}, blocking=True)
 
 # restore on a 4-device sub-mesh (simulated survivor set)
-mesh4 = jax.make_mesh((4,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,),
-                      devices=jax.devices()[:4])
+mesh4 = make_mesh((4,), ("data",), devices=jax.devices()[:4])
 sh = {{"w": NamedSharding(mesh4, P("data", None))}}
 step, got = ck.restore({{"w": w}}, shardings=sh)
 assert step == 1

@@ -1,12 +1,15 @@
 """Cross-chip ftIMM strategies (paper Alg. 4/5) on a fake 8-device mesh."""
+import pytest
 from helpers import run_with_devices
 
 
+@pytest.mark.slow
 def test_dist_matmul_strategies():
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.core.compat import make_mesh
 from repro.core.gemm import dist_matmul, choose_strategy
-mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 key = jax.random.PRNGKey(0)
 
 # T1: tall-and-skinny -> M-parallel, uneven M exercises the pad path

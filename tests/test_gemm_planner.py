@@ -1,7 +1,7 @@
 """Shape classifier, CMR model and dynamic-adjusting tuner invariants —
 the paper's §III-A taxonomy and §IV-C behaviour."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.gemm import (GemmClass, TPU_V5E, classify, estimate,
                              plan_distributed, plan_gemm, tgemm_plan,

@@ -1,19 +1,22 @@
 """Error-feedback int8 gradient compression: exactness of the integer psum,
 error-feedback convergence, and wire dtype (s8 on the all-reduce)."""
+import pytest
 from helpers import run_with_devices
 
 
+@pytest.mark.slow
 def test_compressed_allreduce_accuracy_and_wire_dtype():
     run_with_devices("""
 import functools
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.core.compat import make_mesh, shard_map
 from repro.optim.compression import compress_allreduce, init_error_state
 
-mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("dp",))
 N = 8
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
+@functools.partial(shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
                    out_specs=(P("dp"), P("dp")))
 def step(g, err):
     mean, new_err = compress_allreduce(g[0], err[0], "dp", N)

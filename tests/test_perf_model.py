@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
+from repro.core import compat
 from repro.configs.base import ShapeConfig
 from repro.models import model as M
 from repro.optim.adamw import OptConfig, init_opt_state
@@ -47,7 +48,7 @@ def _train_flops(cfg, shape):
                                     jnp.bfloat16)
     c = jax.jit(make_train_step(cfg, OptConfig())).lower(
         params, opt, batch).compile()
-    return c.cost_analysis()["flops"]
+    return compat.cost_analysis(c)["flops"]
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x7b"])
