@@ -32,6 +32,7 @@ class ModelConfig:
     num_experts: int = 0
     top_k: int = 0
     capacity_factor: float = 1.25
+    moe_dispatch: str = "capacity"   # "capacity" (drop+pad) | "ragged" (keep all)
     # --- SSM / hybrid ---
     ssm_state: int = 0
     ssm_chunk: int = 256

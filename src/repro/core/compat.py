@@ -16,6 +16,9 @@ inline.  Wrapped surfaces:
                            versions.
   * ``pallas_compiler_params`` — ``pltpu.CompilerParams`` is the new name of
                            ``pltpu.TPUCompilerParams``.
+  * ``prefetch_scalar_grid_spec`` — ``pltpu.PrefetchScalarGridSpec`` (scalar-
+                           prefetch grids for data-dependent index maps, e.g.
+                           the ragged grouped GEMM metadata).
 """
 from __future__ import annotations
 
@@ -78,3 +81,17 @@ def pallas_compiler_params(**kwargs):
     if cls is None:
         cls = pltpu.TPUCompilerParams
     return cls(**kwargs)
+
+
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid, in_specs,
+                              out_specs, scratch_shapes=()):
+    """Scalar-prefetch grid spec (index maps may read int32 operands).
+
+    ``pltpu.PrefetchScalarGridSpec`` has kept its name across the 0.4.x ->
+    current line; wrapped here anyway so any future rename/move lands in one
+    place (repo compat policy — see module docstring)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+        in_specs=in_specs, out_specs=out_specs,
+        scratch_shapes=list(scratch_shapes))

@@ -1,17 +1,20 @@
 from .shapes import GemmClass, ShapeThresholds, classify, is_irregular
 from .cmr import (TPU_V5E, TpuSpec, PlanEstimate, estimate, estimate_batched,
-                  upper_bound_fraction)
+                  estimate_ragged, upper_bound_fraction)
 from .tuner import (GemmPlan, DistPlan, plan_gemm, plan_batched_gemm,
-                    plan_distributed, tgemm_plan, clear_plan_cache)
-from .dispatch import batched_matmul, grouped_matmul, matmul, project
+                    plan_distributed, plan_ragged_gemm, tgemm_plan,
+                    clear_plan_cache)
+from .dispatch import (batched_matmul, grouped_matmul, matmul, project,
+                       ragged_matmul, ragged_swiglu)
 from .distributed import dist_matmul, choose_strategy
 
 __all__ = [
     "GemmClass", "ShapeThresholds", "classify", "is_irregular",
     "TPU_V5E", "TpuSpec", "PlanEstimate", "estimate", "estimate_batched",
-    "upper_bound_fraction",
+    "estimate_ragged", "upper_bound_fraction",
     "GemmPlan", "DistPlan", "plan_gemm", "plan_batched_gemm",
-    "plan_distributed", "tgemm_plan", "clear_plan_cache",
+    "plan_distributed", "plan_ragged_gemm", "tgemm_plan", "clear_plan_cache",
     "matmul", "batched_matmul", "grouped_matmul", "project",
+    "ragged_matmul", "ragged_swiglu",
     "dist_matmul", "choose_strategy",
 ]

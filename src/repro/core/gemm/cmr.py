@@ -226,6 +226,81 @@ def estimate_batched(
     )
 
 
+def estimate_ragged(
+    g: int, total: int, k: int, n: int,
+    *,
+    bm: int, bn: int, bk: int,
+    ragged: str = "m",
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    spec: TpuSpec = TPU_V5E,
+) -> PlanEstimate:
+    """Model one tiling of the ragged grouped GEMM over G groups.
+
+    ``ragged == "m"``: rows of a flat (total, k) operand are chunked per group
+    against per-group (k, n) panels — the capacity-free MoE forward.  Priced
+    off the *actual* size distribution, i.e. the total row count plus at most
+    one shared boundary tile per group — NOT G x max(rows_g) as the static
+    capacity path must assume.  ``ragged == "k"``: the ragged dimension is the
+    contraction (the backward dW — the paper's T2 regime per group); ``k`` is
+    then the per-group output rows (D) and ``n`` the output cols (F).
+
+    Traffic follows the ragged kernels' grids.  Forward (N/bn, NT, K/bk): the
+    row operand re-streams once per N-block sweep; when gk == 1 each group's
+    panel is fetched once per (j, group) run — the per-group analogue of the
+    paper's "B panel cached in GSM"; shared boundary tiles re-store their
+    output block (the masked read-modify-write).  dW (D/bm, F/bn, NT): both
+    row operands stream once per output-panel block, each group's panel is
+    stored once.
+    """
+    if ragged == "m":
+        tp = ceil_to(max(total, 1), bm)
+        visits = tp // bm + max(g - 1, 0)      # boundary tiles, ≤ 1 per group
+        np_, kp = ceil_to(n, bn), ceil_to(k, bk)
+        gn, gk = np_ // bn, kp // bk
+        flops_useful = 2.0 * total * n * k
+        flops_padded = 2.0 * visits * bm * np_ * kp
+        traffic_x = gn * visits * bm * kp * in_bytes
+        if gk == 1:   # panel resident across one group's row tiles
+            traffic_w = g * kp * np_ * in_bytes
+        else:
+            traffic_w = visits * kp * np_ * in_bytes
+        # One store per visit per N block; shared-tile visits re-read the
+        # block they merge into (read-modify-write).
+        traffic_c = visits * bm * np_ * out_bytes \
+            + (visits - tp // bm) * bm * np_ * out_bytes
+        vmem = (2 * (bm * bk + bk * bn) * in_bytes
+                + bm * bn * 4 + 2 * bm * bn * out_bytes)
+        frac = upper_bound_fraction(bm, np_, kp, spec)
+    elif ragged == "k":
+        tp = ceil_to(max(total, 1), bk)
+        visits = tp // bk + max(g - 1, 0)
+        mp, np_ = ceil_to(k, bm), ceil_to(n, bn)
+        gm, gn = mp // bm, np_ // bn
+        flops_useful = 2.0 * total * k * n
+        flops_padded = 2.0 * visits * bk * mp * np_
+        traffic_x = gn * visits * bk * mp * in_bytes
+        traffic_w = gm * visits * bk * np_ * in_bytes
+        traffic_c = g * mp * np_ * out_bytes
+        vmem = (2 * (bk * bm + bk * bn) * in_bytes
+                + bm * bn * 4 + 2 * bm * bn * out_bytes)
+        frac = upper_bound_fraction(bk, np_, mp, spec)
+    else:
+        raise ValueError(ragged)
+
+    hbm_bytes = traffic_x + traffic_w + traffic_c
+    peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)
+    return PlanEstimate(
+        flops_useful=flops_useful,
+        flops_padded=flops_padded,
+        hbm_bytes=hbm_bytes,
+        t_compute=flops_padded / peak,
+        t_memory=hbm_bytes / spec.hbm_bw,
+        vmem_bytes=vmem,
+        mxu_fraction=frac,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Paper Eqs. 1-4 (verbatim), used by benchmarks/ to reproduce the paper's
 # block-size reasoning for FT-m7032 next to the TPU-adapted model above.

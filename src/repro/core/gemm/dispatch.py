@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
-from .tuner import plan_batched_gemm, plan_gemm
+from .tuner import plan_batched_gemm, plan_gemm, plan_ragged_gemm
 
 _REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
 
@@ -217,6 +217,175 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, trans: str = "nn",
     sites read as what they are (experts, not batches)."""
     return batched_matmul(x, w, trans=trans, out_dtype=out_dtype,
                           backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Ragged (capacity-free) grouped GEMM
+# ---------------------------------------------------------------------------
+
+def _float0_zeros(x: jax.Array):
+    """Cotangent for integer primals (the group_offsets operand)."""
+    import numpy as np
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def _xla_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
+                trans: str, out_dtype) -> jax.Array:
+    """XLA engine for the ragged product: ``jax.lax.ragged_dot`` (one pass
+    over the rows) where the runtime has it, else the masked per-group
+    oracle (G full-width GEMMs — correct but O(G) costlier)."""
+    rd = getattr(jax.lax, "ragged_dot", None)
+    if rd is None:  # pragma: no cover - every supported jax ships ragged_dot
+        return _ref.ragged_matmul_ref(x, w, offsets, trans=trans,
+                                      out_dtype=out_dtype)
+    wx = w if trans == "nn" else jnp.swapaxes(w, 1, 2)
+    sizes = jnp.diff(offsets).astype(jnp.int32)
+    return rd(x, wx, sizes,
+              preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _run_planned_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
+                        trans: str, out_dtype, backend: str) -> jax.Array:
+    """Plan one ragged grouped GEMM off its distribution signature and run it.
+
+    As with the batched path, the planner runs on EVERY backend (trace-time
+    work; keeps the plan cache an accurate census of the irregular shapes);
+    only the execution engine differs."""
+    g = w.shape[0]
+    k, n = (w.shape[1], w.shape[2]) if trans == "nn" else \
+        (w.shape[2], w.shape[1])
+    in_bytes = jnp.dtype(x.dtype).itemsize
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    plan = plan_ragged_gemm(g, x.shape[0], k, n, in_bytes, out_bytes)
+    if backend == "xla":
+        return _xla_ragged(x, w, offsets, trans, out_dtype)
+    return _ops.ragged_gemm(
+        x, w, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk, trans=trans,
+        out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+
+
+def _run_planned_ragged_dw(x: jax.Array, dy: jax.Array, offsets: jax.Array,
+                           out_dtype, backend: str) -> jax.Array:
+    """The ragged T2 backward dW — planned with ragged="k" (the ragged
+    dimension is the contraction; K = routed tokens >> D ~ F per group)."""
+    g = offsets.shape[0] - 1
+    in_bytes = jnp.dtype(x.dtype).itemsize
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    plan = plan_ragged_gemm(g, x.shape[0], x.shape[1], dy.shape[1],
+                            in_bytes, out_bytes, ragged="k")
+    if backend == "xla":
+        # Per-group outputs have no ragged_dot analogue on the pinned jax
+        # (ragged_dot_general is newer); the masked per-group contraction
+        # is the XLA engine here.
+        return _ref.ragged_matmul_dw_ref(x, dy, offsets, out_dtype=out_dtype)
+    return _ops.ragged_gemm_dw(
+        x, dy, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+        out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+
+
+@functools.lru_cache(maxsize=None)
+def _ragged_fn(out_dtype_name: str, backend: str):
+    """Custom-VJP'd ragged matmul for one (dtype, backend) combo.
+
+    Both backward GEMMs are themselves planned ragged GEMMs: dX is the "nt"
+    ragged product against the same per-group panels, dW is the ragged-K T2
+    grouped GEMM (``_run_planned_ragged_dw``).  group_offsets is integer
+    data — its cotangent is float0."""
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(x, w, offsets):
+        return _run_planned_ragged(x, w, offsets, "nn", out_dtype, backend)
+
+    def fwd(x, w, offsets):
+        return f(x, w, offsets), (x, w, offsets)
+
+    def bwd(res, g):
+        x, w, offsets = res
+        dx = _run_planned_ragged(g, w, offsets, "nt", x.dtype, backend)
+        dw = _run_planned_ragged_dw(x, g, offsets, w.dtype, backend)
+        return dx, dw, _float0_zeros(offsets)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def ragged_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array, *,
+                  out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Ragged grouped GEMM through the ftIMM planner; fp32 accumulation.
+
+    ``x`` is (T, D) flat rows sorted so each group's rows are contiguous;
+    ``group_offsets`` (G+1,) prefix sums with offsets[0] == 0 and
+    offsets[G] == T (every row owned — capacity-free, nothing dropped);
+    ``w`` is (G, D, F) per-group panels.  Returns (T, F).  The capacity-free
+    MoE expert projections route here instead of the padded grouped path."""
+    assert x.ndim == 2 and w.ndim == 3, (x.shape, w.shape)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown gemm backend: {backend}")
+    return _ragged_fn(out_dtype.name, backend)(x, w, group_offsets)
+
+
+@functools.lru_cache(maxsize=None)
+def _ragged_swiglu_fn(out_dtype_name: str, backend: str):
+    """Custom-VJP'd fused ragged SwiGLU pair (one kernel launch forward).
+
+    Backward rematerializes the two fp32 pre-activations with planned ragged
+    GEMMs (the usual fused-epilogue remat), then runs two planned "nt" dX
+    products and two planned ragged-K dW products."""
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    def _plan(x, wg):
+        in_bytes = jnp.dtype(x.dtype).itemsize
+        return plan_ragged_gemm(wg.shape[0], x.shape[0], wg.shape[1],
+                                wg.shape[2], in_bytes, out_dtype.itemsize)
+
+    @jax.custom_vjp
+    def f(x, wg, wu, offsets):
+        plan = _plan(x, wg)
+        if backend == "xla":
+            a = _xla_ragged(x, wg, offsets, "nn", jnp.float32)
+            b = _xla_ragged(x, wu, offsets, "nn", jnp.float32)
+            return (jax.nn.silu(a) * b).astype(out_dtype)
+        return _ops.ragged_gemm_swiglu(
+            x, wg, wu, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+            out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+
+    def fwd(x, wg, wu, offsets):
+        return f(x, wg, wu, offsets), (x, wg, wu, offsets)
+
+    def bwd(res, g):
+        x, wg, wu, offsets = res
+        a = _run_planned_ragged(x, wg, offsets, "nn", jnp.float32, backend)
+        b = _run_planned_ragged(x, wu, offsets, "nn", jnp.float32, backend)
+        sg = jax.nn.sigmoid(a)
+        g32 = g.astype(jnp.float32)
+        da = (g32 * b * sg * (1.0 + a * (1.0 - sg))).astype(x.dtype)
+        db = (g32 * a * sg).astype(x.dtype)
+        dx = (_run_planned_ragged(da, wg, offsets, "nt", jnp.float32, backend)
+              + _run_planned_ragged(db, wu, offsets, "nt", jnp.float32,
+                                    backend)).astype(x.dtype)
+        dwg = _run_planned_ragged_dw(x, da, offsets, wg.dtype, backend)
+        dwu = _run_planned_ragged_dw(x, db, offsets, wu.dtype, backend)
+        return dx, dwg, dwu, _float0_zeros(offsets)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def ragged_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  group_offsets: jax.Array, *, out_dtype=None,
+                  backend: str | None = None) -> jax.Array:
+    """Fused ragged MoE MLP front half: silu(x @ Wg_g) * (x @ Wu_g) per group
+    in ONE kernel launch (same contract as ``ragged_matmul``)."""
+    assert x.ndim == 2 and w_gate.ndim == 3, (x.shape, w_gate.shape)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown gemm backend: {backend}")
+    return _ragged_swiglu_fn(out_dtype.name, backend)(
+        x, w_gate, w_up, group_offsets)
 
 
 def project(x: jax.Array, w: jax.Array, *, out_dtype=None,

@@ -24,7 +24,7 @@ import functools
 from dataclasses import dataclass, replace
 
 from .cmr import (TPU_V5E, PlanEstimate, TpuSpec, cdiv, ceil_to, estimate,
-                  estimate_batched)
+                  estimate_batched, estimate_ragged)
 from .shapes import GemmClass, classify
 
 
@@ -199,6 +199,78 @@ def plan_batched_gemm(
     return best
 
 
+def _ragged_tile_candidates(total: int, g: int, sublane: int) -> list[int]:
+    """Row-tile candidates for the ragged dimension.
+
+    Unlike the dense case, a smaller tile can win: every group boundary
+    wastes at most one tile of padded compute, so tiles near the *mean*
+    group size keep the boundary waste proportional to the distribution —
+    the whole point of pricing off actual sizes instead of the max."""
+    top = ceil_to(max(total, 1), sublane)
+    mean = max(total // max(g, 1), 1)
+    cands = {c for c in (64, 128, 256, 512) if c <= top}
+    cands.add(min(ceil_to(mean, sublane), 512, top))
+    if total < 64:
+        cands.add(top)
+    return sorted(cands)
+
+
+@functools.lru_cache(maxsize=8192)
+def plan_ragged_gemm(
+    g: int, total: int, k: int, n: int,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    ragged: str = "m",
+    spec: TpuSpec = TPU_V5E,
+) -> GemmPlan:
+    """Pick the best tiling for a ragged grouped GEMM over G groups.
+
+    The cache key (g, total, k, n, dtype widths, ragged) is the *distribution
+    signature*: per-group counts are dynamic (traced) so the plan prices the
+    aggregate — total ragged rows plus one boundary tile per group — and is
+    re-used by every call whose signature matches (one tuning per MoE layer
+    shape, free afterwards, exactly like the paper's dynamic adjusting).
+
+    ``ragged == "m"``: forward — (total, k) rows against per-group (k, n)
+    panels; ``bm`` tiles the ragged rows.  ``ragged == "k"``: backward dW —
+    the ragged dimension contracts (T2 per group); ``bk`` tiles it, ``k`` is
+    the output panel's row dim.  The per-group *mean* shape is classified
+    with the 2-D taxonomy (a balanced MoE dispatch is T3/T1 per expert).
+    """
+    sublane = spec.sublane(in_bytes)
+    mean = max(total // max(g, 1), 1)
+    if ragged == "m":
+        cls = classify(mean, k, n)
+        bms = _ragged_tile_candidates(total, g, sublane)
+        bns, bks = _bn_candidates(n, spec.lane), _bk_candidates(k)
+    elif ragged == "k":
+        cls = classify(k, mean, n)
+        bms = _bm_candidates(k, sublane)
+        bns, bks = _bn_candidates(n, spec.lane), \
+            _ragged_tile_candidates(total, g, sublane)
+    else:
+        raise ValueError(ragged)
+    best: GemmPlan | None = None
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
+                                    ragged=ragged, in_bytes=in_bytes,
+                                    out_bytes=out_bytes, spec=spec)
+                if e.vmem_bytes > spec.vmem_budget:
+                    continue
+                cand = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
+                if best is None or _better(cand, best):
+                    best = cand
+    if best is None:  # degenerate: nothing fit; shrink to minimum tiles
+        bm, bn, bk = min(128, ceil_to(max(total, 1), sublane)), 128, 128
+        e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
+                            ragged=ragged, in_bytes=in_bytes,
+                            out_bytes=out_bytes, spec=spec)
+        best = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
+    return best
+
+
 def tgemm_plan(m: int, k: int, n: int,
                in_bytes: int = 4, out_bytes: int = 4,
                spec: TpuSpec = TPU_V5E) -> GemmPlan:
@@ -214,4 +286,5 @@ def tgemm_plan(m: int, k: int, n: int,
 def clear_plan_cache() -> None:
     plan_gemm.cache_clear()
     plan_batched_gemm.cache_clear()
+    plan_ragged_gemm.cache_clear()
     plan_distributed.cache_clear()

@@ -1,7 +1,12 @@
 from .kernel import (ftimm_gemm, ftimm_gemm_batched, ftimm_gemm_grouped,
-                     ftimm_gemm_splitk)
-from .ops import batched_gemm, gemm
+                     ftimm_gemm_ragged, ftimm_gemm_ragged_dw,
+                     ftimm_gemm_ragged_swiglu, ftimm_gemm_splitk)
+from .ops import (batched_gemm, gemm, ragged_gemm, ragged_gemm_dw,
+                  ragged_gemm_swiglu, sublane)
 from . import ref
 
 __all__ = ["ftimm_gemm", "ftimm_gemm_batched", "ftimm_gemm_grouped",
-           "ftimm_gemm_splitk", "batched_gemm", "gemm", "ref"]
+           "ftimm_gemm_ragged", "ftimm_gemm_ragged_dw",
+           "ftimm_gemm_ragged_swiglu", "ftimm_gemm_splitk",
+           "batched_gemm", "gemm", "ragged_gemm", "ragged_gemm_dw",
+           "ragged_gemm_swiglu", "sublane", "ref"]

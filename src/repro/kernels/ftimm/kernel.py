@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.compat import pallas_compiler_params
+from ...core.compat import pallas_compiler_params, prefetch_scalar_grid_spec
 
 DimOrder = Literal["mn", "nm"]
 
@@ -280,6 +280,288 @@ def ftimm_gemm_batched(
     return ftimm_gemm_grouped(
         a, b, bm=bm, bn=bn, bk=bk, trans=trans, dim_order=dim_order,
         out_dtype=out_dtype, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Ragged (capacity-free) grouped GEMM — megablocks-style.
+#
+# Rows of a flat (T, K) operand are partitioned into G contiguous groups by a
+# ``group_offsets`` prefix-sum array (dynamic values — the per-expert token
+# counts of a capacity-free MoE dispatch).  The kernel walks a sorted list of
+# (row-tile, group) visits; the visit list is *data-dependent*, so its
+# ``group_ids`` / ``tile_ids`` arrays arrive via scalar prefetch and drive the
+# BlockSpec index maps (which expert's weight panel to DMA for each step) —
+# the ragged analogue of the paper's per-shape micro-kernel selection, decided
+# per row-tile instead of per call.
+#
+# A row tile shared by several groups is visited once per group; each visit
+# computes the full tile product against its own group's panel and stores only
+# its own rows (masked read-modify-write).  Visits of the same tile are
+# adjacent in the sorted list, so the output block stays VMEM-resident between
+# them and the first visit zero-fills rows owned by no group (row padding).
+# The static visit-list length is T/bm + G (every boundary adds at most one
+# shared tile; empty groups get one forced no-op visit so each group id
+# appears — see ops._ragged_metadata); padded tail entries have ``valid == 0``
+# and mask to no-ops.
+# ---------------------------------------------------------------------------
+
+
+def _ragged_row_mask(offs_ref, g, tile, valid, shape, bm):
+    """Rows of this (bm, .) tile owned by group ``g`` — empty when invalid."""
+    rows = tile * bm + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    return (rows >= offs_ref[g]) & (rows < offs_ref[g + 1]) & (valid > 0)
+
+
+def _ragged_store(gids_ref, tids_ref, valid_ref, offs_ref, o_ref, acc,
+                  *, t, bm):
+    """Masked read-modify-write of one output row tile.
+
+    First visit of a tile zero-fills the rows outside the mask; later visits
+    (same tile, next group — adjacent grid steps, block resident) preserve
+    them.  Reading ``o_ref`` on a first visit would be garbage, but the
+    ``where`` never selects it then."""
+    g, tile = gids_ref[t], tids_ref[t]
+    mask = _ragged_row_mask(offs_ref, g, tile, valid_ref[t], acc.shape, bm)
+    first = (t == 0) | (tile != tids_ref[jnp.maximum(t - 1, 0)])
+    prev = jnp.where(first, 0.0, o_ref[...].astype(jnp.float32))
+    o_ref[...] = jnp.where(mask, acc, prev).astype(o_ref.dtype)
+
+
+def _ragged_kernel(gids_ref, tids_ref, valid_ref, offs_ref,
+                   x_ref, w_ref, o_ref, acc_ref, *, nk, bm, dims):
+    t, k = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0], (dims, ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        _ragged_store(gids_ref, tids_ref, valid_ref, offs_ref, o_ref,
+                      acc_ref[...], t=t, bm=bm)
+
+
+def ftimm_gemm_ragged(
+    x: jax.Array,                 # (Tp, Kp) flat rows, padded
+    w: jax.Array,                 # (G, Kp, Np) "nn" | (G, Np, Kp) "nt"
+    group_ids: jax.Array,         # (NT,) int32 — visit list (scalar prefetch)
+    tile_ids: jax.Array,          # (NT,) int32
+    valid: jax.Array,             # (NT,) int32 0/1
+    group_offsets: jax.Array,     # (G+1,) int32 prefix sums, offsets[G] == T
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    trans: str = "nn",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged grouped GEMM: per-group row chunks against per-group panels.
+
+    Grid is (N/bn, NT, K/bk): N outermost so consecutive visits of a shared
+    row tile keep the same output block resident (the masked-store protocol
+    above); K innermost revisits the fp32 accumulator as in ``ftimm_gemm``.
+    ``trans`` transposes the per-group panel: "nn" contracts panel rows,
+    "nt" panel columns (the dX backward of the "nn" forward).
+    """
+    tp, kp = x.shape
+    out_dtype = out_dtype or x.dtype
+    if trans == "nn":
+        _, kp_w, np_ = w.shape
+        dims = ((1,), (0,))
+        w_spec = pl.BlockSpec(
+            (1, bk, bn), lambda j, t, k, g_r, t_r, v_r, o_r: (g_r[t], k, j))
+    elif trans == "nt":
+        _, np_, kp_w = w.shape
+        dims = ((1,), (1,))
+        w_spec = pl.BlockSpec(
+            (1, bn, bk), lambda j, t, k, g_r, t_r, v_r, o_r: (g_r[t], j, k))
+    else:
+        raise ValueError(trans)
+    assert kp_w == kp and tp % bm == 0 and kp % bk == 0 and np_ % bn == 0, (
+        x.shape, w.shape, bm, bn, bk)
+    nt = group_ids.shape[0]
+    gk = kp // bk
+    x_spec = pl.BlockSpec(
+        (bm, bk), lambda j, t, k, g_r, t_r, v_r, o_r: (t_r[t], k))
+    o_spec = pl.BlockSpec(
+        (bm, bn), lambda j, t, k, g_r, t_r, v_r, o_r: (t_r[t], j))
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, nk=gk, bm=bm, dims=dims),
+        grid_spec=prefetch_scalar_grid_spec(
+            num_scalar_prefetch=4,
+            grid=(np_ // bn, nt, gk),
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((tp, np_), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(group_ids, tile_ids, valid, group_offsets, x, w)
+
+
+def _ragged_swiglu_kernel(gids_ref, tids_ref, valid_ref, offs_ref,
+                          x_ref, wg_ref, wu_ref, o_ref,
+                          accg_ref, accu_ref, *, nk, bm):
+    t, k = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    x_blk = x_ref[...]
+    accg_ref[...] += jax.lax.dot_general(
+        x_blk, wg_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    accu_ref[...] += jax.lax.dot_general(
+        x_blk, wu_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        gate = accg_ref[...]
+        act = gate * jax.nn.sigmoid(gate) * accu_ref[...]
+        _ragged_store(gids_ref, tids_ref, valid_ref, offs_ref, o_ref,
+                      act, t=t, bm=bm)
+
+
+def ftimm_gemm_ragged_swiglu(
+    x: jax.Array,                 # (Tp, Kp)
+    w_gate: jax.Array,            # (G, Kp, Np)
+    w_up: jax.Array,              # (G, Kp, Np)
+    group_ids: jax.Array,
+    tile_ids: jax.Array,
+    valid: jax.Array,
+    group_offsets: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged grouped GEMM pair with fused silu(x@Wg) * (x@Wu) epilogue.
+
+    One kernel launch for the MoE gate/up projections: both panels stream
+    against the same x tile (one fetch of x per step instead of two), two
+    fp32 accumulators ride the K loop, and the SwiGLU nonlinearity is applied
+    in VMEM at the flush — the epilogue fusion the grouped subsystem's
+    ROADMAP entry called for."""
+    tp, kp = x.shape
+    out_dtype = out_dtype or x.dtype
+    _, kp_w, np_ = w_gate.shape
+    assert w_up.shape == w_gate.shape and kp_w == kp, (w_gate.shape, w_up.shape)
+    assert tp % bm == 0 and kp % bk == 0 and np_ % bn == 0, (
+        x.shape, w_gate.shape, bm, bn, bk)
+    nt = group_ids.shape[0]
+    gk = kp // bk
+    x_spec = pl.BlockSpec(
+        (bm, bk), lambda j, t, k, g_r, t_r, v_r, o_r: (t_r[t], k))
+    w_spec = pl.BlockSpec(
+        (1, bk, bn), lambda j, t, k, g_r, t_r, v_r, o_r: (g_r[t], k, j))
+    o_spec = pl.BlockSpec(
+        (bm, bn), lambda j, t, k, g_r, t_r, v_r, o_r: (t_r[t], j))
+    return pl.pallas_call(
+        functools.partial(_ragged_swiglu_kernel, nk=gk, bm=bm),
+        grid_spec=prefetch_scalar_grid_spec(
+            num_scalar_prefetch=4,
+            grid=(np_ // bn, nt, gk),
+            in_specs=[x_spec, w_spec, w_spec],
+            out_specs=o_spec,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                            pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((tp, np_), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(group_ids, tile_ids, valid, group_offsets, x, w_gate, w_up)
+
+
+def _ragged_dw_kernel(gids_ref, tids_ref, valid_ref, offs_ref,
+                      x_ref, dy_ref, o_ref, acc_ref, *, nt, bm):
+    t = pl.program_id(2)
+    g = gids_ref[t]
+    first = (t == 0) | (g != gids_ref[jnp.maximum(t - 1, 0)])
+    last = (t == nt - 1) | (g != gids_ref[jnp.minimum(t + 1, nt - 1)])
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_blk = x_ref[...]
+    mask = _ragged_row_mask(offs_ref, g, tids_ref[t], valid_ref[t],
+                            x_blk.shape, bm)
+    x_blk = jnp.where(mask, x_blk, jnp.zeros_like(x_blk))
+    acc_ref[...] += jax.lax.dot_general(
+        x_blk, dy_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def ftimm_gemm_ragged_dw(
+    x: jax.Array,                 # (Tp, Dp) padded rows
+    dy: jax.Array,                # (Tp, Fp)
+    group_ids: jax.Array,
+    tile_ids: jax.Array,
+    valid: jax.Array,
+    group_offsets: jax.Array,
+    *,
+    bm: int,                      # D-dim block (output rows)
+    bn: int,                      # F-dim block (output cols)
+    bk: int,                      # ragged row-tile size (contraction)
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged T2 grouped GEMM: dW[g] = x[rows_g].T @ dy[rows_g] -> (G, D, F).
+
+    The ragged dimension is now the *contraction* (the paper's T2 regime,
+    K = tokens >> M ~ N, per group).  Grid is (D/bm, F/bn, NT) with the visit
+    list innermost: visits of one group are contiguous, so the fp32
+    accumulator integrates that group's row tiles and flushes once per group;
+    boundary tiles mask foreign rows on the *input* side (zeroed before the
+    dot) since the contraction admits no output-side masking.  Metadata
+    forces one visit per empty group, whose flush stores the zero panel."""
+    tp, dp = x.shape
+    tp2, fp = dy.shape
+    out_dtype = out_dtype or x.dtype
+    assert tp2 == tp and tp % bk == 0 and dp % bm == 0 and fp % bn == 0, (
+        x.shape, dy.shape, bm, bn, bk)
+    num_groups = group_offsets.shape[0] - 1
+    nt = group_ids.shape[0]
+    x_spec = pl.BlockSpec(
+        (bk, bm), lambda i, j, t, g_r, t_r, v_r, o_r: (t_r[t], i))
+    dy_spec = pl.BlockSpec(
+        (bk, bn), lambda i, j, t, g_r, t_r, v_r, o_r: (t_r[t], j))
+    o_spec = pl.BlockSpec(
+        (1, bm, bn), lambda i, j, t, g_r, t_r, v_r, o_r: (g_r[t], i, j))
+    return pl.pallas_call(
+        functools.partial(_ragged_dw_kernel, nt=nt, bm=bk),
+        grid_spec=prefetch_scalar_grid_spec(
+            num_scalar_prefetch=4,
+            grid=(dp // bm, fp // bn, nt),
+            in_specs=[x_spec, dy_spec],
+            out_specs=o_spec,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_groups, dp, fp), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(group_ids, tile_ids, valid, group_offsets, x, dy)
 
 
 def _splitk_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims):

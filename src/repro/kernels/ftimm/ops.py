@@ -37,7 +37,7 @@ def _ceil_to(x: int, b: int) -> int:
     return (x + b - 1) // b * b
 
 
-def _sublane(dtype) -> int:
+def sublane(dtype) -> int:
     """Second-to-minor register tile extent per dtype: (8,128) fp32,
     (16,128) bf16/fp16, (32,128) int8/fp8."""
     return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
@@ -69,7 +69,7 @@ def gemm(
     out_dtype = out_dtype or a.dtype
     m, k, n = _k._mkn(trans, a.shape, b.shape)
 
-    bm_ = min(bm, _ceil_to(m, _sublane(a.dtype)))
+    bm_ = min(bm, _ceil_to(m, sublane(a.dtype)))
     bn_, bk_ = min(bn, _ceil_to(n, 128)), bk
     mp, np_, = _ceil_to(m, bm_), _ceil_to(n, bn_)
     kp = _ceil_to(k, bk_ * nsplit) if nsplit > 1 else _ceil_to(k, bk_)
@@ -124,7 +124,7 @@ def batched_gemm(
     out_dtype = out_dtype or a.dtype
     m, k, n = _k._mkn(trans, a.shape[-2:], b.shape[-2:])
 
-    bm_ = min(bm, _ceil_to(m, _sublane(a.dtype)))
+    bm_ = min(bm, _ceil_to(m, sublane(a.dtype)))
     bn_, bk_ = min(bn, _ceil_to(n, 128)), bk
     mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(k, bk_)
 
@@ -145,3 +145,175 @@ def batched_gemm(
         dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
     )
     return out[:, :m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Ragged (capacity-free) grouped GEMM
+# ---------------------------------------------------------------------------
+
+def _ragged_metadata(group_offsets: jax.Array, m_tiles: int, bm: int):
+    """Sorted (row-tile, group) visit list for the ragged kernels.
+
+    ``group_offsets`` is traced (dynamic per-group row counts), so the list is
+    built with jnp ops and fed to the kernel as scalar-prefetch operands.  The
+    static length is ``m_tiles + G``: every row tile is visited at least once,
+    each group boundary inside a tile adds one shared visit, and every *empty*
+    group is forced one no-op visit (so the dW kernel flushes a zero panel for
+    it).  Entries past the true count carry ``valid == 0`` and repeat the last
+    tile / group id — idempotent no-ops for both the masked-store forward and
+    the accumulate-then-flush dW walk.
+    """
+    num_groups = group_offsets.shape[0] - 1
+    nt = m_tiles + num_groups
+    off = group_offsets.astype(jnp.int32)
+    starts = off[:-1] // bm
+    ends = (off[1:] + bm - 1) // bm
+    sizes = jnp.maximum(ends - starts, 1)        # empty group -> 1 no-op visit
+    cum = jnp.cumsum(sizes)
+    gids = jnp.repeat(jnp.arange(num_groups, dtype=jnp.int32), sizes,
+                      total_repeat_length=nt)
+    pos = jnp.arange(nt, dtype=jnp.int32) - (cum - sizes)[gids]
+    tids = starts[gids] + pos
+    valid = (jnp.arange(nt) < cum[-1]).astype(jnp.int32)
+    gids = jnp.where(valid > 0, gids, num_groups - 1).astype(jnp.int32)
+    tids = jnp.clip(jnp.where(valid > 0, tids, m_tiles - 1),
+                    0, m_tiles - 1).astype(jnp.int32)
+    return gids, tids, valid
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "trans", "out_dtype", "interpret"),
+)
+def ragged_gemm(
+    x: jax.Array,                 # (T, K) flat rows, groups contiguous
+    w: jax.Array,                 # (G, K, N) "nn" | (G, N, K) "nt"
+    group_offsets: jax.Array,     # (G+1,) prefix sums; offsets[G] == T
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    trans: str = "nn",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Capacity-free grouped GEMM: y[o_g:o_{g+1}] = x[o_g:o_{g+1}] @ W_g.
+
+    Contract: ``group_offsets`` is a non-decreasing int prefix-sum array with
+    ``offsets[0] == 0`` and ``offsets[G] == x.shape[0]`` — every row belongs
+    to exactly one group (the capacity path's token-dropping has no analogue
+    here).  Pads rows/cols to block multiples, builds the visit list, runs the
+    scalar-prefetch kernel, un-pads."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    out_dtype = out_dtype or x.dtype
+    t_rows, k = x.shape
+    if trans == "nn":
+        g, kw, n = w.shape
+    elif trans == "nt":
+        g, n, kw = w.shape
+    else:
+        raise ValueError(trans)
+    assert kw == k, (x.shape, w.shape, trans)
+    assert group_offsets.shape == (g + 1,), (group_offsets.shape, w.shape)
+    if t_rows == 0:
+        return jnp.zeros((0, n), out_dtype)
+
+    bm_ = min(bm, _ceil_to(t_rows, sublane(x.dtype)))
+    bn_ = min(bn, _ceil_to(n, 128))
+    bk_ = min(bk, _ceil_to(k, 128))
+    tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+    x_p = _pad_to(x, (tp, kp))
+    w_p = _pad_to(w, (g, kp, np_) if trans == "nn" else (g, np_, kp))
+    gids, tids, valid = _ragged_metadata(group_offsets, tp // bm_, bm_)
+    out = _k.ftimm_gemm_ragged(
+        x_p, w_p, gids, tids, valid, group_offsets.astype(jnp.int32),
+        bm=bm_, bn=bn_, bk=bk_, trans=trans, out_dtype=out_dtype,
+        interpret=interpret)
+    return out[:t_rows, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def ragged_gemm_swiglu(
+    x: jax.Array,                 # (T, K)
+    w_gate: jax.Array,            # (G, K, N)
+    w_up: jax.Array,              # (G, K, N)
+    group_offsets: jax.Array,     # (G+1,)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused-epilogue ragged pair: silu(x @ Wg_g) * (x @ Wu_g) per group, one
+    kernel launch (same contract as ``ragged_gemm``)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    out_dtype = out_dtype or x.dtype
+    t_rows, k = x.shape
+    g, kw, n = w_gate.shape
+    assert kw == k and w_up.shape == w_gate.shape, (
+        x.shape, w_gate.shape, w_up.shape)
+    assert group_offsets.shape == (g + 1,), (group_offsets.shape, w_gate.shape)
+    if t_rows == 0:
+        return jnp.zeros((0, n), out_dtype)
+
+    bm_ = min(bm, _ceil_to(t_rows, sublane(x.dtype)))
+    bn_ = min(bn, _ceil_to(n, 128))
+    bk_ = min(bk, _ceil_to(k, 128))
+    tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+    x_p = _pad_to(x, (tp, kp))
+    wg_p = _pad_to(w_gate, (g, kp, np_))
+    wu_p = _pad_to(w_up, (g, kp, np_))
+    gids, tids, valid = _ragged_metadata(group_offsets, tp // bm_, bm_)
+    out = _k.ftimm_gemm_ragged_swiglu(
+        x_p, wg_p, wu_p, gids, tids, valid, group_offsets.astype(jnp.int32),
+        bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype, interpret=interpret)
+    return out[:t_rows, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def ragged_gemm_dw(
+    x: jax.Array,                 # (T, D)
+    dy: jax.Array,                # (T, F)
+    group_offsets: jax.Array,     # (G+1,)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Ragged T2 grouped GEMM: dW[g] = x[rows_g].T @ dy[rows_g] -> (G, D, F).
+
+    ``bk`` tiles the ragged (token) dimension — the contraction; ``bm``/``bn``
+    tile the per-group (D, F) output panel.  Same offsets contract as
+    ``ragged_gemm``; empty groups yield zero panels."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    out_dtype = out_dtype or x.dtype
+    t_rows, d = x.shape
+    t2, f = dy.shape
+    g = group_offsets.shape[0] - 1
+    assert t2 == t_rows, (x.shape, dy.shape)
+    if t_rows == 0:
+        return jnp.zeros((g, d, f), out_dtype)
+
+    bk_ = min(bk, _ceil_to(t_rows, sublane(x.dtype)))   # ragged row tiles
+    bm_ = min(bm, _ceil_to(d, sublane(x.dtype)))
+    bn_ = min(bn, _ceil_to(f, 128))
+    tp, dp, fp = _ceil_to(t_rows, bk_), _ceil_to(d, bm_), _ceil_to(f, bn_)
+    x_p = _pad_to(x, (tp, dp))
+    dy_p = _pad_to(dy, (tp, fp))
+    gids, tids, valid = _ragged_metadata(group_offsets, tp // bk_, bk_)
+    out = _k.ftimm_gemm_ragged_dw(
+        x_p, dy_p, gids, tids, valid, group_offsets.astype(jnp.int32),
+        bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype, interpret=interpret)
+    return out[:, :d, :f]

@@ -38,6 +38,53 @@ def matmul_nt(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     ).astype(out_dtype)
 
 
+def ragged_matmul_ref(x: jax.Array, w: jax.Array, group_offsets: jax.Array,
+                      trans: str = "nn", out_dtype=None) -> jax.Array:
+    """Dense oracle for the ragged grouped GEMM: one masked full-width GEMM
+    per group, fp32 accumulation.  ``group_offsets`` may be traced; the group
+    count is static.  Rows outside every group (offsets[G] < T) yield zeros —
+    matching the kernel's first-visit zero-fill of unowned rows."""
+    out_dtype = out_dtype or x.dtype
+    num_groups = w.shape[0]
+    rows = jnp.arange(x.shape[0])[:, None]
+    n = w.shape[2] if trans == "nn" else w.shape[1]
+    acc = jnp.zeros((x.shape[0], n), jnp.float32)
+    for g in range(num_groups):
+        mask = (rows >= group_offsets[g]) & (rows < group_offsets[g + 1])
+        xg = jnp.where(mask, x, jnp.zeros_like(x))
+        dims = ((1,), (0,)) if trans == "nn" else ((1,), (1,))
+        acc = acc + jax.lax.dot_general(
+            xg, w[g], (dims, ((), ())), preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def ragged_matmul_dw_ref(x: jax.Array, dy: jax.Array,
+                         group_offsets: jax.Array,
+                         out_dtype=None) -> jax.Array:
+    """Dense oracle for the ragged T2 backward: per-group x^T @ dy with rows
+    outside the group masked to zero -> (G, D, F)."""
+    out_dtype = out_dtype or x.dtype
+    num_groups = group_offsets.shape[0] - 1
+    rows = jnp.arange(x.shape[0])[:, None]
+    panels = []
+    for g in range(num_groups):
+        mask = (rows >= group_offsets[g]) & (rows < group_offsets[g + 1])
+        xg = jnp.where(mask, x, jnp.zeros_like(x))
+        panels.append(jax.lax.dot_general(
+            xg, dy, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
+    return jnp.stack(panels).astype(out_dtype)
+
+
+def ragged_swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                      group_offsets: jax.Array, out_dtype=None) -> jax.Array:
+    """Oracle for the fused ragged SwiGLU pair: silu(x@Wg_g) * (x@Wu_g)."""
+    out_dtype = out_dtype or x.dtype
+    a = ragged_matmul_ref(x, w_gate, group_offsets, out_dtype=jnp.float32)
+    b = ragged_matmul_ref(x, w_up, group_offsets, out_dtype=jnp.float32)
+    return (jax.nn.silu(a) * b).astype(out_dtype)
+
+
 def matmul_splitk(a: jax.Array, b: jax.Array, nsplit: int, out_dtype=None) -> jax.Array:
     """Reference for the K-parallel strategy: partial products over K chunks
     reduced at the end (the paper's Alg. 5 GSM reduction)."""

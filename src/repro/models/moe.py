@@ -1,16 +1,39 @@
-"""Mixture-of-Experts MLP with top-k routing and capacity-based dispatch.
+"""Mixture-of-Experts MLP with two dispatch modes: static capacity and
+ragged (capacity-free).
 
 Two of the paper's irregular GEMM types appear here as first-class hot spots:
 
   * the router ``tokens x d_model x num_experts`` is T1 exactly — N = 8..16
     experts is far inside the paper's N <= 96 regime;
-  * each expert's (capacity x d_model x d_ff/TP) GEMMs are T3 per shard.
+  * each expert's (rows x d_model x d_ff/TP) GEMMs are T3 per shard, and the
+    backward dW contracts the token dim — the paper's T2 shape per expert.
 
-Dispatch is Switch-style with a static per-expert capacity so shapes stay
-jit-friendly: tokens beyond capacity are dropped (weight 0), routed tokens
-are scatter-packed into an (E, C, D) buffer, expert GEMMs run as grouped
-ftIMM GEMMs through the CMR planner (sharded TP on d_ff, optionally EP on
-the expert dim), and results gather back with the gate weights applied.
+Dispatch modes (``dispatch=`` / ``ModelConfig.moe_dispatch``):
+
+``"capacity"`` — Switch-style static capacity: routed tokens scatter-pack
+into an (E, C, D) buffer (tokens beyond capacity are DROPPED, padding rows
+where an expert underflows), expert GEMMs run as padded grouped ftIMM GEMMs.
+Shapes are fully static, so this is the jit-friendly oracle the ragged path
+is validated against in the undropped regime — but the padding erases the
+per-expert irregularity: every expert is priced at C = max rows regardless
+of what the router actually did.
+
+``"ragged"`` — megablocks-style capacity-free dispatch: tokens sort by
+expert, per-expert counts become a ``group_offsets`` prefix-sum array, and
+the expert GEMMs run as *ragged* grouped ftIMM GEMMs (one flat (T*K, D)
+operand, per-group weight panels, fused silu(gate)*up epilogue for the
+gate/up pair).  No token is ever dropped and no row is padded to a
+capacity; the CMR planner prices the actual size distribution
+(``plan_ragged_gemm`` — total rows + one boundary tile per expert, not
+E x max).
+
+When to prefer which: the planner's ragged estimate beats the capacity
+estimate whenever the router is unbalanced (capacity pads every expert to
+the max) or when dropping tokens is unacceptable (training quality,
+parity evals).  Capacity wins only when distributions are near-uniform AND
+the fixed shapes matter more than the ~C/mean padding waste (e.g. frozen
+serving graphs where recompilation dominates).  The aux loss is identical
+in both modes — it depends only on router probabilities, not dispatch.
 """
 from __future__ import annotations
 
@@ -18,7 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dist import current_dist, shard_act
-from ..core.gemm import grouped_matmul, project
+from ..core.gemm import grouped_matmul, project, ragged_matmul, ragged_swiglu
+from ..kernels.ftimm import sublane
 
 
 def init_moe_params(key, d_model: int, d_ff: int, num_experts: int,
@@ -35,9 +59,30 @@ def init_moe_params(key, d_model: int, d_ff: int, num_experts: int,
 
 
 def capacity(num_tokens: int, num_experts: int, top_k: int,
-             capacity_factor: float = 1.25) -> int:
+             capacity_factor: float = 1.25, dtype=jnp.float32) -> int:
+    """Per-expert capacity, padded to the *dtype-dependent* sublane multiple.
+
+    The expert GEMM's M dim is the capacity, so it must align to the register
+    tile: (8,128) fp32 but (16,128) bf16 — a hardcoded 8 under-pads bf16
+    buffers (the same bug class PR 1 fixed in ftimm/ops.py)."""
+    s = sublane(dtype)
     c = int(num_tokens * top_k * capacity_factor / num_experts)
-    return max(8, -(-c // 8) * 8)  # pad to sublane multiple
+    return max(s, -(-c // s) * s)
+
+
+def _router(x: jax.Array, params: dict, num_experts: int, top_k: int):
+    """Shared router head: T1 GEMM + top-k gates + Switch-style aux loss."""
+    logits = project(x, params["router"].astype(x.dtype),
+                     out_dtype=jnp.float32)                      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)               # (T, K)
+    if top_k > 1:
+        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(gate_idx[:, 0], num_experts)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+    return gate_w, gate_idx, aux
 
 
 def moe_mlp(
@@ -48,26 +93,21 @@ def moe_mlp(
     top_k: int,
     capacity_factor: float = 1.25,
     compute_dtype=jnp.bfloat16,
+    dispatch: str = "capacity",    # "capacity" | "ragged"
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (output (T, D), aux_loss scalar)."""
+    """Returns (output (T, D), aux_loss scalar).  See module docstring for
+    the two dispatch modes; ``capacity_factor`` is ignored by "ragged"."""
+    if dispatch == "ragged":
+        return _moe_mlp_ragged(x, params, num_experts=num_experts,
+                               top_k=top_k, compute_dtype=compute_dtype)
+    if dispatch != "capacity":
+        raise ValueError(f"unknown moe dispatch: {dispatch}")
     t, d = x.shape
     e = num_experts
-    c = capacity(t, e, top_k, capacity_factor)
+    c = capacity(t, e, top_k, capacity_factor, dtype=compute_dtype)
     xc = x.astype(compute_dtype)
 
-    # Router: the T1 irregular GEMM (T >> D ~ E). fp32 for routing stability.
-    logits = project(xc, params["router"].astype(compute_dtype),
-                     out_dtype=jnp.float32)                      # (T, E)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_w, gate_idx = jax.lax.top_k(probs, top_k)               # (T, K)
-    if top_k > 1:
-        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
-
-    # Load-balancing aux loss (Switch/Mixtral style).
-    me = jnp.mean(probs, axis=0)
-    one_hot = jax.nn.one_hot(gate_idx[:, 0], e)
-    ce = jnp.mean(one_hot, axis=0)
-    aux = e * jnp.sum(me * ce)
+    gate_w, gate_idx, aux = _router(xc, params, e, top_k)
 
     # Position of each (token, k) within its expert's capacity bucket.
     flat_idx = gate_idx.reshape(-1)                              # (T*K,)
@@ -104,4 +144,49 @@ def moe_mlp(
     y_tok = jnp.take(y_buf, jnp.minimum(slot, e * c - 1), axis=0)
     y_tok = y_tok * (keep * gate_w.reshape(-1))[:, None].astype(compute_dtype)
     y = jnp.sum(y_tok.reshape(t, top_k, d), axis=1)
+    return y.astype(x.dtype), aux
+
+
+def _moe_mlp_ragged(
+    x: jax.Array,                  # (T, D) flat tokens
+    params: dict,
+    *,
+    num_experts: int,
+    top_k: int,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, jax.Array]:
+    """Capacity-free dispatch: sort-by-expert + prefix-sum offsets.
+
+    Every routed (token, k) copy is kept — per-expert row counts become the
+    ragged M dims of the grouped ftIMM GEMMs (the irregular shapes the CMR
+    planner exists to exploit), and the gate/up pair runs as ONE fused
+    silu(gate)*up kernel launch."""
+    t, d = x.shape
+    e = num_experts
+    xc = x.astype(compute_dtype)
+
+    gate_w, gate_idx, aux = _router(xc, params, e, top_k)
+
+    # Sort the (T*K,) routed copies by expert id (stable: ties keep token
+    # order) and build the per-expert prefix sums — the dynamic group sizes.
+    flat_idx = gate_idx.reshape(-1)                              # (T*K,)
+    order = jnp.argsort(flat_idx)                                # stable
+    tok_sorted = order // top_k                                  # token of slot
+    counts = jnp.zeros((e,), jnp.int32).at[flat_idx].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)]).astype(jnp.int32)
+
+    xs = jnp.take(xc, tok_sorted, axis=0)                        # (T*K, D)
+
+    # Ragged expert GEMMs through the CMR planner: fused gate/up, then down.
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    h = ragged_swiglu(xs, wg, wu, offsets)                       # (T*K, F)
+    ys = ragged_matmul(h, wd, offsets)                           # (T*K, D)
+
+    # Un-sort and combine with gate weights (every copy kept — no drops).
+    gw_sorted = jnp.take(gate_w.reshape(-1), order)
+    y = jnp.zeros((t, d), compute_dtype).at[tok_sorted].add(
+        ys * gw_sorted[:, None].astype(compute_dtype))
     return y.astype(x.dtype), aux

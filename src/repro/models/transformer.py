@@ -128,7 +128,8 @@ def _mlp_or_moe(h, p, cfg: ModelConfig):
         y, aux = moe_mlp(x.reshape(b * s, d), p["moe"],
                          num_experts=cfg.num_experts, top_k=cfg.top_k,
                          capacity_factor=cfg.capacity_factor,
-                         compute_dtype=_cdt(cfg))
+                         compute_dtype=_cdt(cfg),
+                         dispatch=cfg.moe_dispatch)
         return h + y.reshape(b, s, d), aux
     return h + swiglu(x, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                       p["mlp"]["w_down"], _cdt(cfg)), jnp.float32(0.0)

@@ -84,9 +84,15 @@ def _mlp(perf: Perf, cfg: ModelConfig, n_l: int, t: int, cdt=2):
                  t * d * cdt * n_l)
         # exact dispatch-buffer size incl. min-capacity clamp and rounding
         # (the padding overhead is the paper's TGEMM-waste phenomenon: tiny
-        # decode batches pay E x C_min slots regardless of tokens)
-        cap_tokens = cfg.num_experts * moe_capacity(
-            t, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+        # decode batches pay E x C_min slots regardless of tokens); the
+        # ragged dispatch has no capacity — every routed copy and nothing
+        # else (boundary-tile padding is sub-percent at these sizes)
+        if cfg.moe_dispatch == "ragged":
+            cap_tokens = t * cfg.top_k
+        else:
+            cap_tokens = cfg.num_experts * moe_capacity(
+                t, cfg.num_experts, cfg.top_k, cfg.capacity_factor,
+                dtype=cfg.compute_dtype)
         perf.add("moe_mlp", 6 * cap_tokens * d * f * n_l,
                  (2 * cap_tokens * d * cdt + 3 * d * f * cdt
                   * cfg.num_experts) * n_l)

@@ -2,11 +2,20 @@
 
 Test modules do ``from _prop import given, settings, st``: with hypothesis
 installed they get the real thing; on a bare interpreter the same decorators
-run a fixed-seed pseudo-random sweep over the declared integer strategies, so
-the property tests still collect, run, and cover the same shape space —
+run a fixed-seed pseudo-random sweep over the declared strategies (integers
+and lists-of-integers — enough for shape/distribution properties), so the
+property tests still collect, run, and cover the same shape space —
 deterministically (every run draws the identical examples).
+
+Failing examples: hypothesis shrinks and persists its own database
+(``.hypothesis/``); the fallback sweep appends the exact failing draw to
+``$PROP_FAILURE_FILE`` (default ``.prop-failures.log``) and prints it before
+re-raising, so CI can upload the seed either way.
 """
 from __future__ import annotations
+
+import os
+import sys
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -30,12 +39,51 @@ except ImportError:
                 return self.hi
             return rng.randint(self.lo, self.hi)
 
+    class _Lists:
+        """Fallback for ``st.lists(st.integers(...), ...)`` — the ragged
+        group-size distributions.  Biases toward the degenerate shapes the
+        ragged GEMM cares about: all-minimum (e.g. all-empty groups beside
+        one), single-element, and max-length draws."""
+
+        def __init__(self, elements: _Integers, min_size: int, max_size: int):
+            self.elements, self.min_size, self.max_size = \
+                elements, min_size, max_size
+
+        def sample(self, rng: random.Random) -> list[int]:
+            r = rng.random()
+            if r < 0.15:
+                n = self.min_size
+            elif r < 0.3:
+                n = self.max_size
+            else:
+                n = rng.randint(self.min_size, self.max_size)
+            out = [self.elements.sample(rng) for _ in range(n)]
+            if out and rng.random() < 0.2:   # one-giant-group-style skew
+                out[rng.randrange(len(out))] = self.elements.hi
+            return out
+
     class _Strategies:
         @staticmethod
         def integers(min_value: int, max_value: int) -> "_Integers":
             return _Integers(min_value, max_value)
 
+        @staticmethod
+        def lists(elements: _Integers, *, min_size: int = 0,
+                  max_size: int = 10) -> "_Lists":
+            return _Lists(elements, min_size, max_size)
+
     st = _Strategies()
+
+    def _record_failure(name: str, draw: dict) -> None:
+        path = os.environ.get("PROP_FAILURE_FILE", ".prop-failures.log")
+        line = f"{name}(**{draw!r})"
+        print(f"Falsifying example (deterministic fallback sweep): {line}",
+              file=sys.stderr)
+        try:
+            with open(path, "a") as f:
+                f.write(line + "\n")
+        except OSError:
+            pass
 
     def given(**strategies):
         def deco(fn):
@@ -46,7 +94,11 @@ except ImportError:
                 n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
                 for _ in range(n):
                     draw = {k: s.sample(rng) for k, s in strategies.items()}
-                    fn(**draw)
+                    try:
+                        fn(**draw)
+                    except Exception:
+                        _record_failure(fn.__name__, draw)
+                        raise
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             wrapper.hypothesis_fallback = True

@@ -1,4 +1,5 @@
-"""MoE capacity dispatch vs a dense per-expert oracle."""
+"""MoE dispatch (capacity and ragged) vs a dense per-expert oracle, plus
+capacity-vs-ragged parity in the undropped regime."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -54,6 +55,62 @@ def test_moe_drops_overflow_tokens():
 def test_capacity_rounding():
     assert capacity(1024, 8, 2, 1.25) % 8 == 0
     assert capacity(4, 8, 1, 1.0) == 8      # min clamp (decode batches)
+
+
+def test_capacity_dtype_sublane():
+    """bf16 register tiles are (16, 128): capacity must pad to 16, not the
+    fp32 sublane of 8 (the bug class PR 1 fixed in ftimm/ops.py)."""
+    assert capacity(1024, 8, 2, 1.25, dtype=jnp.bfloat16) % 16 == 0
+    assert capacity(100, 8, 1, 1.25, dtype=jnp.bfloat16) % 16 == 0
+    assert capacity(4, 8, 1, 1.0, dtype=jnp.bfloat16) == 16  # min clamp
+    assert capacity(100, 8, 1, 1.25, dtype=jnp.float32) % 8 == 0
+
+
+def test_moe_ragged_matches_oracle_and_drops_nothing():
+    """The ragged path has no capacity: it must equal the unlimited dense
+    oracle exactly (every token through its experts), for any batch."""
+    params = init_moe_params(KEY, D, F, E)
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (64, D)) * 0.5
+    for top_k in (1, 2):
+        got, aux = moe_mlp(x, params, num_experts=E, top_k=top_k,
+                           compute_dtype=jnp.float32, dispatch="ragged")
+        want = oracle(x, params, top_k)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_vs_ragged_parity():
+    """With capacity_factor high enough that nothing is dropped, the two
+    dispatch modes must agree to per-dtype tolerance — and the aux loss
+    (dispatch-independent) must match."""
+    params = init_moe_params(KEY, D, F, E)
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (48, D)) * 0.5
+    for dtype, tol in ((jnp.float32, 2e-3), (jnp.bfloat16, 4e-2)):
+        for top_k in (1, 2):
+            y_cap, aux_cap = moe_mlp(x, params, num_experts=E, top_k=top_k,
+                                     capacity_factor=8.0,  # undropped regime
+                                     compute_dtype=dtype)
+            y_rag, aux_rag = moe_mlp(x, params, num_experts=E, top_k=top_k,
+                                     compute_dtype=dtype, dispatch="ragged")
+            np.testing.assert_allclose(np.asarray(y_rag, np.float32),
+                                       np.asarray(y_cap, np.float32),
+                                       rtol=tol, atol=tol)
+            np.testing.assert_allclose(float(aux_rag), float(aux_cap),
+                                       rtol=1e-6)
+
+
+def test_moe_ragged_grads_finite():
+    params = init_moe_params(KEY, D, F, E)
+    x = jax.random.normal(jax.random.fold_in(KEY, 6), (32, D))
+
+    def loss(p, x):
+        y, aux = moe_mlp(x, p, num_experts=E, top_k=2,
+                         compute_dtype=jnp.float32, dispatch="ragged")
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(params, x)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf)))
 
 
 def test_moe_grads_finite():

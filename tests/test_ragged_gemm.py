@@ -1,0 +1,289 @@
+"""Ragged (capacity-free) grouped ftIMM GEMM conformance suite.
+
+Property-based: randomized ragged group-size distributions (empty groups,
+one-giant-group, all-singletons, sublane-unaligned totals) checked against a
+dense numpy reference for fp32/bf16, forward and VJP-vs-autodiff, on both the
+Pallas-interpret and XLA backends — plus planner regressions (distribution-
+signature cache hits, estimate_ragged monotonicity in total rows)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+
+from repro.core.gemm import (clear_plan_cache, estimate_ragged,
+                             plan_ragged_gemm, ragged_matmul, ragged_swiglu,
+                             TPU_V5E)
+from repro.kernels.ftimm import (ragged_gemm, ragged_gemm_dw,
+                                 ragged_gemm_swiglu, ref)
+
+KEY = jax.random.PRNGKey(7)
+
+# Ragged group-size distributions spanning the degenerate shapes:
+# empty groups, one-giant-group, all-singletons, sublane-unaligned totals.
+DISTS = [
+    [5, 0, 17, 3],        # interior empty group, unaligned total (25)
+    [0, 0, 40],           # leading empties + one giant group
+    [1, 1, 1, 1, 1, 1, 1],  # all singletons, unaligned total
+    [64],                 # single group, aligned total
+    [0, 33, 0, 0],        # trailing empties
+    [8, 16, 24, 32],      # aligned sizes, shared-boundary-free
+]
+
+
+def _offsets(sizes):
+    return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+
+
+def _mk(sizes, d, f, dtype, seed=0):
+    g, t = len(sizes), int(sum(sizes))
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, seed + 131 * t), 3)
+    x = jax.random.normal(k1, (t, d), dtype)
+    wg = jax.random.normal(k2, (g, d, f), dtype)
+    wu = jax.random.normal(k3, (g, d, f), dtype)
+    return x, wg, wu, _offsets(sizes)
+
+
+def _np_ragged(x, w, sizes, trans="nn"):
+    """Dense per-group numpy reference — the conformance ground truth."""
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    n = w.shape[2] if trans == "nn" else w.shape[1]
+    out = np.zeros((x.shape[0], n), np.float32)
+    o = 0
+    for g, s in enumerate(sizes):
+        wg = w[g] if trans == "nn" else w[g].T
+        out[o:o + s] = x[o:o + s] @ wg
+        o += s
+    return out
+
+
+def _np_ragged_dw(x, dy, sizes):
+    x = np.asarray(x, np.float32)
+    dy = np.asarray(dy, np.float32)
+    panels, o = [], 0
+    for s in sizes:
+        panels.append(x[o:o + s].T @ dy[o:o + s])
+        o += s
+    return np.stack(panels)
+
+
+def _tol(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 3e-4
+
+
+# ---------------------------------------------------------------------------
+# Kernel conformance: forward, both trans, both dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes", DISTS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_kernel_vs_dense_reference(sizes, dtype):
+    x, w, _, offs = _mk(sizes, 24, 40, dtype)
+    got = ragged_gemm(x, w, offs, bm=16, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               _np_ragged(x, w, sizes),
+                               rtol=_tol(dtype), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("sizes", DISTS[:3])
+def test_ragged_kernel_nt(sizes):
+    """The dX layout: rows against transposed panels (w read as (G, N, K))."""
+    x, w, _, offs = _mk(sizes, 24, 40, jnp.float32)
+    dy = jax.random.normal(KEY, (x.shape[0], 40), jnp.float32)
+    got = ragged_gemm(dy, w, offs, bm=8, trans="nt", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _np_ragged(dy, w, sizes, "nt"),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ragged_kernel_multiblock_grid():
+    """K and N both span several blocks (gk > 1, gn > 1) with shared
+    boundary tiles (bm smaller than most groups)."""
+    sizes = [37, 0, 3, 91, 1]
+    x, w, _, offs = _mk(sizes, 200, 300, jnp.float32)
+    got = ragged_gemm(x, w, offs, bm=16, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _np_ragged(x, w, sizes),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("sizes", DISTS)
+def test_ragged_dw_kernel_vs_dense_reference(sizes):
+    x, _, _, offs = _mk(sizes, 24, 40, jnp.float32)
+    dy = jax.random.normal(KEY, (x.shape[0], 40), jnp.float32)
+    got = ragged_gemm_dw(x, dy, offs, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _np_ragged_dw(x, dy, sizes),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_swiglu_fused_matches_unfused_pair(dtype):
+    """The fused epilogue must equal silu(gate) * up of the unfused pair."""
+    sizes = [5, 0, 17, 3, 11]
+    x, wg, wu, offs = _mk(sizes, 24, 40, dtype)
+    fused = ragged_gemm_swiglu(x, wg, wu, offs, bm=8, interpret=True)
+    a = ragged_gemm(x, wg, offs, bm=8, out_dtype=jnp.float32, interpret=True)
+    b = ragged_gemm(x, wu, offs, bm=8, out_dtype=jnp.float32, interpret=True)
+    want = jax.nn.silu(a) * b
+    np.testing.assert_allclose(np.asarray(fused, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Property sweep: randomized distributions on both backends
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(sizes=st.lists(st.integers(0, 24), min_size=1, max_size=6))
+def test_ragged_property_random_distributions(sizes):
+    if sum(sizes) == 0:
+        sizes = sizes + [1]   # contract: offsets[G] == T > 0
+    x, w, _, offs = _mk(sizes, 16, 24, jnp.float32, seed=sum(sizes))
+    want = _np_ragged(x, w, sizes)
+    got_k = ragged_gemm(x, w, offs, bm=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_k), want, rtol=3e-4, atol=3e-4)
+    got_x = ragged_matmul(x, w, offs, backend="xla")
+    np.testing.assert_allclose(np.asarray(got_x), want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=4, deadline=None)
+@given(sizes=st.lists(st.integers(0, 16), min_size=1, max_size=4))
+def test_ragged_property_grads_match_autodiff(sizes):
+    """VJP (custom, planned) vs autodiff through the pure-jnp oracle."""
+    if sum(sizes) == 0:
+        sizes = sizes + [1]
+    x, w, _, offs = _mk(sizes, 12, 16, jnp.float32, seed=7 * sum(sizes))
+
+    def loss(backend):
+        return lambda x, w: jnp.sum(
+            ragged_matmul(x, w, offs, backend=backend) ** 2)
+
+    def loss_ref(x, w):
+        return jnp.sum(ref.ragged_matmul_ref(x, w, offs) ** 2)
+
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    for backend in ("xla", "pallas_interpret"):
+        gx, gw = jax.grad(loss(backend), argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(rw),
+                                   rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_ragged_swiglu_grads_match_autodiff(backend):
+    sizes = [5, 0, 17, 3]
+    x, wg, wu, offs = _mk(sizes, 16, 24, jnp.float32)
+
+    def loss(x, a, b):
+        return jnp.sum(ragged_swiglu(x, a, b, offs, backend=backend) ** 2)
+
+    def loss_ref(x, a, b):
+        return jnp.sum(ref.ragged_swiglu_ref(x, a, b, offs) ** 2)
+
+    got = jax.grad(loss, argnums=(0, 1, 2))(x, wg, wu)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, wg, wu)
+    for u, v in zip(got, want):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_ragged_matmul_backends_agree():
+    sizes = [9, 0, 22, 2]
+    x, w, _, offs = _mk(sizes, 24, 40, jnp.float32)
+    y_xla = ragged_matmul(x, w, offs, backend="xla")
+    y_pal = ragged_matmul(x, w, offs, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_xla),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Planner regressions: distribution-signature cache + CMR monotonicity
+# ---------------------------------------------------------------------------
+
+def test_ragged_plan_deterministic_and_cached():
+    a = plan_ragged_gemm(8, 256, 32, 64)
+    b = plan_ragged_gemm(8, 256, 32, 64)
+    assert a is b   # lru cache — the distribution signature IS the key
+
+
+def test_ragged_plan_respects_budget_and_alignment():
+    for g, total, k, n in [(4, 25, 24, 40), (16, 4096, 512, 1024),
+                           (8, 7, 32, 48), (2, 100000, 128, 64)]:
+        for ragged in ("m", "k"):
+            p = plan_ragged_gemm(g, total, k, n, ragged=ragged)
+            assert p.est.vmem_bytes <= TPU_V5E.vmem_budget
+            assert p.bn % TPU_V5E.lane == 0
+            assert p.bm % TPU_V5E.sublane_fp32 == 0
+            assert p.bk % TPU_V5E.sublane_fp32 == 0
+
+
+def test_ragged_plan_cache_hit_across_moe_calls():
+    """Two moe_mlp ragged calls with the same distribution signature must
+    re-use the cached plans (hit, not re-tune) — and the forward + backward
+    GEMMs must all be visibly routed through the planner."""
+    from repro.models.moe import init_moe_params, moe_mlp
+    d, f, e = 32, 64, 4
+    params = init_moe_params(jax.random.PRNGKey(0), d, f, e)
+
+    def loss(p, x):
+        y, aux = moe_mlp(x, p, num_experts=e, top_k=2,
+                         compute_dtype=jnp.float32, dispatch="ragged")
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    clear_plan_cache()
+    x1 = jax.random.normal(jax.random.PRNGKey(1), (64, d))
+    jax.grad(loss)(params, x1)
+    info1 = plan_ragged_gemm.cache_info()
+    # swiglu fwd + down fwd + dX's + dW's: at least 2 distinct fwd signatures
+    # and at least one ragged-K (dW) signature.
+    assert info1.currsize >= 3, info1
+    assert info1.hits >= 1, info1        # gate/up share one plan at minimum
+
+    # Same signature (same T, E, D, F), different routing distribution: the
+    # per-expert counts are dynamic — they must NOT re-key the planner.
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (64, d))
+    jax.grad(loss)(params, x2)
+    info2 = plan_ragged_gemm.cache_info()
+    assert info2.currsize == info1.currsize, (info1, info2)
+    assert info2.hits > info1.hits, (info1, info2)
+
+
+def test_estimate_ragged_monotone_in_total_rows():
+    """Guards the max-vs-sum pricing bug class: the ragged estimate must
+    price the actual total, so more rows never gets cheaper."""
+    kw = dict(bm=64, bn=128, bk=128, in_bytes=4, out_bytes=4)
+    for ragged in ("m", "k"):
+        prev_bytes, prev_flops, prev_t = -1.0, -1.0, -1.0
+        for total in (1, 7, 64, 100, 512, 4096, 65536):
+            e = estimate_ragged(8, total, 64, 128, ragged=ragged, **kw)
+            assert e.hbm_bytes >= prev_bytes
+            assert e.flops_padded >= prev_flops
+            assert e.t_total >= prev_t
+            prev_bytes, prev_flops, prev_t = \
+                e.hbm_bytes, e.flops_padded, e.t_total
+
+
+def test_estimate_ragged_prices_distribution_not_max():
+    """The whole point vs capacity: G groups totalling T rows must be priced
+    like ~T rows (+ boundary tiles), far below G x max_group_rows when the
+    distribution is skewed."""
+    g, k, n = 16, 128, 256
+    kw = dict(bm=128, bn=128, bk=128, in_bytes=4, out_bytes=4)
+    # Skewed: one giant group of 4096 rows, 15 empty -> total 4096.
+    skew = estimate_ragged(g, 4096, k, n, ragged="m", **kw)
+    # What a max-based (capacity) pricing would charge: 16 x 4096 rows.
+    max_based = estimate_ragged(g, g * 4096, k, n, ragged="m", **kw)
+    assert skew.hbm_bytes < 0.2 * max_based.hbm_bytes
+    assert skew.flops_padded < 0.2 * max_based.flops_padded
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=st.integers(1, 32), total=st.integers(1, 1 << 16),
+       k=st.integers(1, 1024), n=st.integers(1, 1024))
+def test_ragged_plan_property_budget(g, total, k, n):
+    for ragged in ("m", "k"):
+        p = plan_ragged_gemm(g, total, k, n, ragged=ragged)
+        assert p.est.vmem_bytes <= TPU_V5E.vmem_budget
+        assert p.est.flops_padded >= p.est.flops_useful
