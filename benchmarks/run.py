@@ -11,8 +11,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from . import (common, cpu_compare, microkernel, multi_core,  # noqa: E402
-               roofline_table, scalability, single_core)
+from . import (common, cpu_compare, microkernel, moe_ep,  # noqa: E402
+               multi_core, roofline_table, scalability, single_core)
 
 SUITES = {
     "fig3": microkernel.run,
@@ -21,6 +21,7 @@ SUITES = {
     "fig6": scalability.run,
     "fig7": cpu_compare.run,
     "roofline": roofline_table.run,
+    "moe_ep": moe_ep.run,
 }
 
 

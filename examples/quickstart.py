@@ -29,10 +29,13 @@ fixed = tgemm_plan(1_000_000, 64, 32)
 print(f"vs fixed TGEMM blocking: {fixed.est.t_total / plan.est.t_total:.1f}x "
       "slower (modeled)")
 
-# 3. Cross-chip strategy selection (paper Alg. 4 vs Alg. 5):
+# 3. Cross-chip strategy selection (paper Alg. 4 vs Alg. 5): ask any
+#    planner for a placed plan (num_shards) and read its Placement.
 for m, k, n in [(1_000_000, 64, 32), (32, 1_000_000, 32)]:
-    d = plan_distributed(m, k, n, 8)
-    print(f"8 chips, ({m},{k},{n}): {d.strategy}")
+    p = plan_gemm(m, k, n, num_shards=8)
+    assert plan_distributed(m, k, n, 8).strategy == p.placement.strategy
+    print(f"8 chips, ({m},{k},{n}): {p.placement.strategy} "
+          f"(ici={p.placement.t_collective:.1e}s)")
 
 # 4. matmul() routes every contraction through the planner. On TPU this hits
 #    the Pallas ftIMM kernels; on CPU the identically-blocked XLA path.

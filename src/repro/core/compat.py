@@ -8,6 +8,9 @@ inline.  Wrapped surfaces:
 
   * ``shard_map``        — ``jax.shard_map`` (new) vs
                            ``jax.experimental.shard_map.shard_map`` (0.4.x).
+  * ``shard_map_unchecked`` — shard_map with replication checking off under
+                           either kwarg name (``check_rep`` -> ``check_vma``);
+                           required around pallas_call bodies on 0.4.x.
   * ``make_mesh``        — ``jax.make_mesh`` grew an ``axis_types`` kwarg and
                            ``jax.sharding.AxisType`` only exists on newer
                            releases; we always want plain Auto axes.
@@ -32,6 +35,27 @@ if hasattr(jax, "shard_map"):                     # jax >= 0.5
     shard_map = jax.shard_map
 else:                                             # jax 0.4.x
     from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def _shard_map_uncheck_kwargs() -> dict:
+    """The kwarg that disables shard_map's replication checking, under its
+    current name: ``check_rep`` (0.4.x/0.5) became ``check_vma`` later."""
+    import inspect
+    params = inspect.signature(shard_map).parameters
+    for name in ("check_rep", "check_vma"):
+        if name in params:
+            return {name: False}
+    return {}
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off.
+
+    Needed whenever the mapped body contains a ``pallas_call`` (the ftIMM
+    kernels): 0.4.x has no replication rule for it and raises
+    NotImplementedError under the default ``check_rep=True``."""
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **_shard_map_uncheck_kwargs())
 
 
 # --- mesh construction -----------------------------------------------------

@@ -20,6 +20,12 @@ class DistContext:
     model_axis: str = "model"
     sp_decode: bool = True          # K-parallel (flash-decode) for decode attn
     moe_buf_shard: bool = False     # shard MoE dispatch buffers over dp
+    # Expert parallelism: the concrete mesh axis (or axis tuple) that owns
+    # the MoE expert dim — set from launch.sharding.expert_axis when the
+    # layout shards experts.  Ragged (capacity-free) dispatch then routes
+    # its grouped GEMMs through core.gemm.ep_ragged_* (all-to-all token
+    # exchange) instead of replicating every expert panel on every chip.
+    moe_ep_axis: str | tuple[str, ...] | None = None
     ssm_head_shard: bool = False    # shard SSD head dim over model
     rms_bf16: bool = False          # fusion-friendly rms_norm (no f32 stream)
     sp_inputs: bool = False         # pin AG points: gather residual at ln1/ln2

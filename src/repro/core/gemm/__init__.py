@@ -1,20 +1,58 @@
+"""ftIMM GEMM stack: classify -> plan (blocks x placement) -> execute.
+
+Layering, bottom-up:
+
+  * ``shapes``  — the paper's §III-A irregular-shape taxonomy (T1/T2/T3).
+  * ``cmr``     — the §IV-C computation-to-memory-ratio cost model:
+    ``estimate`` / ``estimate_batched`` / ``estimate_ragged`` price one
+    candidate tiling per plan family, ``estimate_ep`` prices the
+    expert-parallel all-to-all token exchange the same way the K-parallel
+    psum is priced.
+  * ``tuner``   — the unified **plan hierarchy**.  Every planner
+    (``plan_gemm`` / ``plan_batched_gemm`` / ``plan_ragged_gemm``) returns a
+    ``Plan``: the best single-core tiling plus an optional ``Placement``
+    (mesh strategy ∈ {m_parallel, k_parallel, expert_parallel}, shard count,
+    modeled ICI term) when asked to place the GEMM (``num_shards > 1``) —
+    strategy x blocking is ONE joint auto-tuning decision, cached per shape
+    signature.  ``plan_distributed`` is the dense compat view;
+    ``plan_moe_dispatch`` prices a whole MoE layer's dispatch mode +
+    placement for the roofline.
+  * ``dispatch`` — single-device entry points (``matmul`` / ``project`` /
+    ``batched_matmul`` / ``grouped_matmul`` / ``ragged_matmul`` /
+    ``ragged_swiglu``): plan, run the Pallas ftIMM kernel (or the XLA
+    engine off-TPU), custom VJPs whose backward GEMMs are planned too.
+  * ``distributed`` — the mesh executors consuming placements:
+    ``dist_matmul`` (Alg. 4/5 dense), ``dist_batched_matmul`` (expert-dim
+    sharded grouped GEMM) and ``ep_ragged_matmul`` / ``ep_ragged_swiglu`` /
+    ``ep_ragged_moe`` (expert-parallel capacity-free MoE with the
+    all-to-all token exchange keyed by the ``group_offsets`` prefix sums;
+    the fused ``ep_ragged_moe`` exchanges d_model-wide tokens once each way
+    for the whole gate/up/down pipeline).
+"""
 from .shapes import GemmClass, ShapeThresholds, classify, is_irregular
-from .cmr import (TPU_V5E, TpuSpec, PlanEstimate, estimate, estimate_batched,
-                  estimate_ragged, upper_bound_fraction)
-from .tuner import (GemmPlan, DistPlan, plan_gemm, plan_batched_gemm,
-                    plan_distributed, plan_ragged_gemm, tgemm_plan,
+from .cmr import (TPU_V5E, TpuSpec, EpEstimate, PlanEstimate, estimate,
+                  estimate_batched, estimate_ep, estimate_ragged,
+                  upper_bound_fraction)
+from .tuner import (GemmPlan, DistPlan, MoeDispatchPlan, Placement, Plan,
+                    plan_gemm, plan_batched_gemm, plan_distributed,
+                    plan_moe_dispatch, plan_ragged_gemm, tgemm_plan,
                     clear_plan_cache)
 from .dispatch import (batched_matmul, grouped_matmul, matmul, project,
                        ragged_matmul, ragged_swiglu)
-from .distributed import dist_matmul, choose_strategy
+from .distributed import (choose_strategy, dist_batched_matmul, dist_matmul,
+                          ep_ragged_matmul, ep_ragged_moe, ep_ragged_swiglu)
 
 __all__ = [
     "GemmClass", "ShapeThresholds", "classify", "is_irregular",
-    "TPU_V5E", "TpuSpec", "PlanEstimate", "estimate", "estimate_batched",
-    "estimate_ragged", "upper_bound_fraction",
-    "GemmPlan", "DistPlan", "plan_gemm", "plan_batched_gemm",
-    "plan_distributed", "plan_ragged_gemm", "tgemm_plan", "clear_plan_cache",
+    "TPU_V5E", "TpuSpec", "EpEstimate", "PlanEstimate", "estimate",
+    "estimate_batched", "estimate_ep", "estimate_ragged",
+    "upper_bound_fraction",
+    "GemmPlan", "DistPlan", "MoeDispatchPlan", "Placement", "Plan",
+    "plan_gemm", "plan_batched_gemm", "plan_distributed",
+    "plan_moe_dispatch", "plan_ragged_gemm", "tgemm_plan",
+    "clear_plan_cache",
     "matmul", "batched_matmul", "grouped_matmul", "project",
     "ragged_matmul", "ragged_swiglu",
-    "dist_matmul", "choose_strategy",
+    "dist_matmul", "dist_batched_matmul", "choose_strategy",
+    "ep_ragged_matmul", "ep_ragged_moe", "ep_ragged_swiglu",
 ]

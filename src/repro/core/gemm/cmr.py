@@ -40,6 +40,7 @@ class TpuSpec:
     lane: int = 128                          # vreg lanes / MXU width
     sublane_fp32: int = 8
     sublane_bf16: int = 16
+    sublane_int8: int = 32
     mxu: int = 128                           # systolic array edge
     ici_bw_per_link: float = 50e9           # bytes/s per ICI link
     ici_links: int = 4                      # usable links/chip on a 2D torus
@@ -49,7 +50,13 @@ class TpuSpec:
         return self.peak_flops_fp32 if dtype_bytes >= 4 else self.peak_flops_bf16
 
     def sublane(self, dtype_bytes: int) -> int:
-        return self.sublane_fp32 if dtype_bytes >= 4 else self.sublane_bf16
+        """Register-tile second-to-minor extent: (8,128) fp32, (16,128)
+        bf16/fp16, (32,128) int8/fp8 — matches ``kernels.ftimm.sublane``."""
+        if dtype_bytes >= 4:
+            return self.sublane_fp32
+        if dtype_bytes == 1:
+            return self.sublane_int8
+        return self.sublane_bf16
 
 
 TPU_V5E = TpuSpec()
@@ -299,6 +306,47 @@ def estimate_ragged(
         vmem_bytes=vmem,
         mxu_fraction=frac,
     )
+
+
+@dataclass(frozen=True)
+class EpEstimate:
+    """Modeled cost of ONE expert-parallel all-to-all leg over ICI."""
+    ici_bytes: float        # global bytes crossing ICI (all shards summed)
+    t_exchange: float       # seconds, balanced shards
+
+    def __add__(self, other: "EpEstimate") -> "EpEstimate":
+        return EpEstimate(self.ici_bytes + other.ici_bytes,
+                          self.t_exchange + other.t_exchange)
+
+
+EP_ZERO = EpEstimate(0.0, 0.0)
+
+
+def estimate_ep(
+    rows: int, width: int, num_shards: int,
+    *,
+    elt_bytes: int = 4,
+    spec: TpuSpec = TPU_V5E,
+) -> EpEstimate:
+    """Price one all-to-all leg of the EP token exchange.
+
+    Exactly the way ``plan_distributed`` prices the K-parallel psum: a
+    (rows, width) token matrix is row-sharded over ``num_shards`` chips,
+    and each chip must forward the ``(num_shards - 1) / num_shards``
+    fraction of its rows that route to experts owned by other chips
+    (balanced-routing assumption — the same one the ragged CMR model makes
+    when it prices the mean group size).  Each chip transmits its share
+    across its ICI links; the exchange is bandwidth-bound, so t is the
+    per-chip send time.  One EP GEMM pays TWO legs (dispatch + return);
+    callers add the two ``EpEstimate``s.
+    """
+    if num_shards <= 1:
+        return EP_ZERO
+    frac = (num_shards - 1) / num_shards
+    ici_bytes = float(rows) * width * elt_bytes * frac
+    per_shard = ici_bytes / num_shards
+    return EpEstimate(ici_bytes,
+                      per_shard / (spec.ici_bw_per_link * spec.ici_links))
 
 
 # ---------------------------------------------------------------------------

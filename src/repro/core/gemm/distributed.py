@@ -1,33 +1,72 @@
-"""Cross-chip ftIMM: the paper's two multi-core strategies over a JAX mesh.
+"""Mesh-scale ftIMM executors: one ``shard_map`` engine per plan family.
 
-Paper Alg. 4 (M-parallel): DSP cores split the M loop; the shared B panel
-sits in GSM.  Here: shard A's M rows over a mesh axis, replicate B, no
-steady-state collective.
+The tuner (``tuner.plan_*``) decides *placement jointly with blocking* — a
+``Plan`` whose optional ``Placement`` names the cross-chip strategy and its
+modeled ICI term.  This module is the execution side of that hierarchy:
 
-Paper Alg. 5 (K-parallel): cores split the K loop and reduce partial C
-through GSM.  Here: shard the contraction dim over the axis and ``psum`` the
-fp32 partials over ICI.  This is the strategy that wins when M and N are both
-small but K is huge — exactly the shape of long-context decode attention
-(see ``repro.serve.decode``: flash-decoding == ftIMM K-parallel).
+  * **dense** — ``dist_matmul``: the paper's two multi-core strategies.
+    Alg. 4 (m_parallel) shards A's M rows over the axis with B replicated
+    (no steady-state collective); Alg. 5 (k_parallel) shards the contraction
+    and ``psum``s the fp32 partials over ICI — the strategy that wins when M
+    and N are both small but K is huge (long-context decode attention:
+    ``repro.serve.decode`` flash-decoding == ftIMM K-parallel).
+
+  * **batched/grouped** — ``dist_batched_matmul``: the batch/expert dim
+    shards over the axis (expert_parallel for the capacity-mode grouped MoE
+    GEMMs), shared 2-D operands replicate, per-entry M/K/N stay local.
+
+  * **ragged** — ``ep_ragged_matmul`` / ``ep_ragged_swiglu`` /
+    ``ep_ragged_moe`` (the fused pipeline the MoE layer actually routes
+    through — one d_model-wide exchange each way, the d_ff hidden never
+    crosses the axis): expert-parallel capacity-free MoE.  Rows arrive
+    sorted by group with ``group_offsets`` prefix sums, and experts are
+    contiguously owned by shards, so shard s's
+    tokens are the *contiguous window* [offsets[s*G_l], offsets[(s+1)*G_l])
+    of the global row array.  The token exchange keyed by those prefix sums
+    is realized as gather + dynamic-window slice on the way in and a
+    scatter + reduce-scatter on the way back (the dense-collective
+    realization of the ragged all-to-all; the *modeled* cost in the plan's
+    ``Placement`` is the ideal a2a from ``cmr.estimate_ep``).  The per-shard
+    GEMM is the already-planned ragged kernel, and the custom VJP reuses the
+    per-shard ragged dX ("nt") and dW (ragged-K T2) products with the
+    inverse exchange — gradients for an expert's panel never leave the shard
+    that owns it.
 
 Strategy selection uses the same CMR-with-collective-term scoring as the
-paper's dynamic adjusting (``tuner.plan_distributed``).
+paper's dynamic adjusting (``tuner.plan_gemm(..., num_shards=n)``).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..compat import shard_map
-from .dispatch import matmul
+from ..compat import shard_map_unchecked as shard_map
+from .dispatch import (_backend, _float0_zeros, _run_planned_ragged,
+                       _run_planned_ragged_dw, batched_matmul, matmul,
+                       ragged_matmul, ragged_swiglu)
 from .tuner import plan_distributed
+
+
+def _axes(axis) -> tuple[str, ...]:
+    return tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    return int(math.prod(mesh.shape[a] for a in _axes(axis)))
+
+
+def _spec_entry(axis):
+    ax = _axes(axis)
+    return ax if len(ax) > 1 else ax[0]
 
 
 def choose_strategy(m: int, k: int, n: int, num_cores: int,
                     in_bytes: int = 4) -> str:
+    # The compat planner handles num_cores == 1 (a size-1 mesh axis) too.
     return plan_distributed(m, k, n, num_cores, in_bytes).strategy
 
 
@@ -49,7 +88,10 @@ def dist_matmul(
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    if k != k2:
+        raise ValueError(
+            f"dist_matmul contraction mismatch: a has shape {a.shape} "
+            f"(K = {k}) but b has shape {b.shape} (K = {k2})")
     nc = mesh.shape[axis]
     if strategy is None:
         strategy = choose_strategy(m, k, n, nc, jnp.dtype(a.dtype).itemsize)
@@ -67,7 +109,7 @@ def dist_matmul(
         def f(a_l, b_l):
             return matmul(a_l, b_l, out_dtype=out_dtype, backend=backend)
 
-        out = f(a_p, b_p := b)
+        out = f(a_p, b)
         return out[:m] if pad_m else out
 
     if strategy == "k_parallel":
@@ -89,3 +131,385 @@ def dist_matmul(
         return f(a_p, b_p).astype(out_dtype)
 
     raise ValueError(f"unknown strategy: {strategy}")
+
+
+def dist_batched_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: Mesh,
+    axis="data",
+    trans: str = "nn",
+    out_dtype=None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Batched/grouped GEMM with the batch (expert) dim sharded over
+    ``mesh[axis]`` — the expert_parallel placement of the capacity-mode MoE
+    GEMMs (E, C, D) @ (E, D, F).  A 2-D (shared) operand replicates; the
+    per-entry GEMM runs through the planned ``batched_matmul`` locally."""
+    if a.ndim != 3 and b.ndim != 3:
+        raise ValueError(f"need a batched operand: {a.shape} / {b.shape}")
+    g = a.shape[0] if a.ndim == 3 else b.shape[0]
+    nc = _axis_size(mesh, axis)
+    pad_g = (-g) % nc
+    ax = _spec_entry(axis)
+
+    def pad3(x):
+        if x.ndim != 3 or not pad_g:
+            return x
+        return jnp.pad(x, ((0, pad_g), (0, 0), (0, 0)))
+
+    a_p, b_p = pad3(a), pad3(b)
+    spec3 = P(ax, None, None)
+    spec2 = P(None, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec3 if a.ndim == 3 else spec2,
+                  spec3 if b.ndim == 3 else spec2),
+        out_specs=spec3,
+    )
+    def f(a_l, b_l):
+        return batched_matmul(a_l, b_l, trans=trans, out_dtype=out_dtype,
+                              backend=backend)
+
+    out = f(a_p, b_p)
+    return out[:g] if pad_g else out
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel ragged (capacity-free) grouped GEMM
+# ---------------------------------------------------------------------------
+
+def _sidx(axis) -> jax.Array:
+    """Linear shard index along (possibly multiple) mesh axes, major-first —
+    matching the row-major layout of ``P((a, b), ...)``."""
+    idx = jnp.int32(0)
+    for a in _axes(axis):
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _ep_window(full: jax.Array, offsets: jax.Array, g_l: int,
+               sidx: jax.Array):
+    """Slice this shard's contiguous token window out of the gathered rows.
+
+    Rows are sorted by group and groups are contiguously owned by shards, so
+    shard s's tokens are rows [offsets[s*g_l], offsets[(s+1)*g_l]) — a
+    dynamic contiguous range.  The slice is padded to the worst case (every
+    row routed to this shard's experts): rows past ``wlen`` are other
+    shards' tokens or zero padding and are excluded by the local offsets /
+    masked on output.
+    """
+    t = full.shape[0]
+    loffs = jax.lax.dynamic_slice_in_dim(offsets, sidx * g_l, g_l + 1)
+    start, stop = loffs[0], loffs[g_l]
+    padded = jnp.concatenate([full, jnp.zeros_like(full)], axis=0)
+    win = jax.lax.dynamic_slice_in_dim(padded, start, t, axis=0)
+    return win, (loffs - start).astype(jnp.int32), stop - start, start
+
+
+def _mask_rows(x: jax.Array, n_valid: jax.Array) -> jax.Array:
+    return jnp.where(jnp.arange(x.shape[0])[:, None] < n_valid, x,
+                     jnp.zeros((), x.dtype))
+
+
+def _ep_return(win_out: jax.Array, start: jax.Array, axis) -> jax.Array:
+    """Inverse exchange: scatter the shard's window back into the global
+    row-sorted layout and reduce-scatter to the owning row shards (windows
+    are disjoint and cover [0, T), so the sum just merges them)."""
+    t = win_out.shape[0]
+    buf = jnp.zeros((2 * t,) + win_out.shape[1:], win_out.dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, win_out, start, axis=0)
+    ax = _axes(axis)
+    return jax.lax.psum_scatter(buf[:t], ax if len(ax) > 1 else ax[0],
+                                scatter_dimension=0, tiled=True)
+
+
+@functools.lru_cache(maxsize=32)   # keyed on the Mesh: bound it
+def _ep_ragged_fn(mesh: Mesh, axis: tuple, out_dtype_name: str, backend: str):
+    """Custom-VJP'd expert-parallel ragged matmul for one (mesh, axis,
+    dtype, backend) combo.  The VJP reuses the planned per-shard ragged
+    products: dX is the "nt" product against the shard's own panels (then
+    the inverse exchange), dW is the ragged-K T2 product of the shard's
+    token window — expert gradients never cross the axis."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    ax = _spec_entry(axis)
+    rows, experts, rep = P(ax, None), P(ax, None, None), P(None)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(rows, experts, rep), out_specs=rows)
+    def fwd_local(x_l, w_l, offs):
+        g_l = w_l.shape[0]
+        x_full = jax.lax.all_gather(x_l, ax, axis=0, tiled=True)
+        win, loffs, wlen, start = _ep_window(x_full, offs, g_l, _sidx(axis))
+        y_win = ragged_matmul(win, w_l, loffs, out_dtype=out_dtype,
+                              backend=backend)
+        return _ep_return(_mask_rows(y_win, wlen), start, axis)
+
+    @jax.custom_vjp
+    def f(x, w, offsets):
+        return fwd_local(x, w, offsets)
+
+    def fwd(x, w, offsets):
+        return f(x, w, offsets), (x, w, offsets)
+
+    def bwd(res, ct):
+        x, w, offsets = res
+
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(rows, rows, experts, rep),
+                           out_specs=(rows, experts))
+        def bwd_local(ct_l, x_l, w_l, offs):
+            g_l = w_l.shape[0]
+            sidx = _sidx(axis)
+            ct_full = jax.lax.all_gather(ct_l, ax, axis=0, tiled=True)
+            x_full = jax.lax.all_gather(x_l, ax, axis=0, tiled=True)
+            ct_win, loffs, wlen, start = _ep_window(ct_full, offs, g_l, sidx)
+            x_win, _, _, _ = _ep_window(x_full, offs, g_l, sidx)
+            ct_win = _mask_rows(ct_win, wlen)
+            x_win = _mask_rows(x_win, wlen)
+            dx_win = _run_planned_ragged(ct_win, w_l, loffs, "nt", x_l.dtype,
+                                         backend)
+            dx_l = _ep_return(_mask_rows(dx_win, wlen), start, axis)
+            dw_l = _run_planned_ragged_dw(x_win, ct_win, loffs, w_l.dtype,
+                                          backend)
+            return dx_l, dw_l
+
+        dx, dw = bwd_local(ct, x, w, offsets)
+        return dx, dw, _float0_zeros(offsets)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=32)   # keyed on the Mesh: bound it
+def _ep_ragged_swiglu_fn(mesh: Mesh, axis: tuple, out_dtype_name: str,
+                         backend: str):
+    """Expert-parallel fused ragged SwiGLU: one exchange in, the fused
+    silu(gate)*up pair per shard, one exchange back.  Backward follows the
+    single-device fused-epilogue recipe (rematerialize the two fp32
+    pre-activations per shard, two "nt" dX products + two ragged-K dW
+    products), all inside the shard's token window."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    ax = _spec_entry(axis)
+    rows, experts, rep = P(ax, None), P(ax, None, None), P(None)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(rows, experts, experts, rep),
+                       out_specs=rows)
+    def fwd_local(x_l, wg_l, wu_l, offs):
+        g_l = wg_l.shape[0]
+        x_full = jax.lax.all_gather(x_l, ax, axis=0, tiled=True)
+        win, loffs, wlen, start = _ep_window(x_full, offs, g_l, _sidx(axis))
+        h_win = ragged_swiglu(win, wg_l, wu_l, loffs, out_dtype=out_dtype,
+                              backend=backend)
+        return _ep_return(_mask_rows(h_win, wlen), start, axis)
+
+    @jax.custom_vjp
+    def f(x, wg, wu, offsets):
+        return fwd_local(x, wg, wu, offsets)
+
+    def fwd(x, wg, wu, offsets):
+        return f(x, wg, wu, offsets), (x, wg, wu, offsets)
+
+    def bwd(res, ct):
+        x, wg, wu, offsets = res
+
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(rows, rows, experts, experts, rep),
+                           out_specs=(rows, experts, experts))
+        def bwd_local(ct_l, x_l, wg_l, wu_l, offs):
+            g_l = wg_l.shape[0]
+            sidx = _sidx(axis)
+            ct_full = jax.lax.all_gather(ct_l, ax, axis=0, tiled=True)
+            x_full = jax.lax.all_gather(x_l, ax, axis=0, tiled=True)
+            ct_win, loffs, wlen, start = _ep_window(ct_full, offs, g_l, sidx)
+            x_win, _, _, _ = _ep_window(x_full, offs, g_l, sidx)
+            ct_win = _mask_rows(ct_win, wlen)
+            x_win = _mask_rows(x_win, wlen)
+            a = _run_planned_ragged(x_win, wg_l, loffs, "nn", jnp.float32,
+                                    backend)
+            b = _run_planned_ragged(x_win, wu_l, loffs, "nn", jnp.float32,
+                                    backend)
+            sg = jax.nn.sigmoid(a)
+            ct32 = ct_win.astype(jnp.float32)
+            da = (ct32 * b * sg * (1.0 + a * (1.0 - sg))).astype(x_l.dtype)
+            db = (ct32 * a * sg).astype(x_l.dtype)
+            dx_win = (
+                _run_planned_ragged(da, wg_l, loffs, "nt", jnp.float32,
+                                    backend)
+                + _run_planned_ragged(db, wu_l, loffs, "nt", jnp.float32,
+                                      backend)).astype(x_l.dtype)
+            dx_l = _ep_return(_mask_rows(dx_win, wlen), start, axis)
+            dwg_l = _run_planned_ragged_dw(x_win, da, loffs, wg_l.dtype,
+                                           backend)
+            dwu_l = _run_planned_ragged_dw(x_win, db, loffs, wu_l.dtype,
+                                           backend)
+            return dx_l, dwg_l, dwu_l
+
+        dx, dwg, dwu = bwd_local(ct, x, wg, wu, offsets)
+        return dx, dwg, dwu, _float0_zeros(offsets)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=32)   # keyed on the Mesh: bound it
+def _ep_ragged_moe_fn(mesh: Mesh, axis: tuple, out_dtype_name: str,
+                      backend: str):
+    """Fused expert-parallel ragged MoE MLP: ONE token exchange each way for
+    the whole silu(x Wg)*(x Wu) Wd pipeline.  The (rows, d_ff) hidden is
+    produced and consumed on the shard that owns the expert — running
+    ``ep_ragged_swiglu`` then ``ep_ragged_matmul`` instead would psum_scatter
+    it back and immediately re-gather it into the exact same windows.
+    Backward: one gather each for x and the cotangent, all three dW products
+    and both dX products per shard, one inverse exchange for dX."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    ax = _spec_entry(axis)
+    rows, experts, rep = P(ax, None), P(ax, None, None), P(None)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(rows, experts, experts, experts, rep),
+                       out_specs=rows)
+    def fwd_local(x_l, wg_l, wu_l, wd_l, offs):
+        g_l = wg_l.shape[0]
+        x_full = jax.lax.all_gather(x_l, ax, axis=0, tiled=True)
+        win, loffs, wlen, start = _ep_window(x_full, offs, g_l, _sidx(axis))
+        h_win = ragged_swiglu(win, wg_l, wu_l, loffs, out_dtype=out_dtype,
+                              backend=backend)
+        y_win = ragged_matmul(_mask_rows(h_win, wlen), wd_l, loffs,
+                              out_dtype=out_dtype, backend=backend)
+        return _ep_return(_mask_rows(y_win, wlen), start, axis)
+
+    @jax.custom_vjp
+    def f(x, wg, wu, wd, offsets):
+        return fwd_local(x, wg, wu, wd, offsets)
+
+    def fwd(x, wg, wu, wd, offsets):
+        return f(x, wg, wu, wd, offsets), (x, wg, wu, wd, offsets)
+
+    def bwd(res, ct):
+        x, wg, wu, wd, offsets = res
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(rows, rows, experts, experts, experts, rep),
+            out_specs=(rows, experts, experts, experts))
+        def bwd_local(ct_l, x_l, wg_l, wu_l, wd_l, offs):
+            g_l = wg_l.shape[0]
+            sidx = _sidx(axis)
+            ct_full = jax.lax.all_gather(ct_l, ax, axis=0, tiled=True)
+            x_full = jax.lax.all_gather(x_l, ax, axis=0, tiled=True)
+            ct_win, loffs, wlen, start = _ep_window(ct_full, offs, g_l, sidx)
+            x_win, _, _, _ = _ep_window(x_full, offs, g_l, sidx)
+            ct_win = _mask_rows(ct_win, wlen)
+            x_win = _mask_rows(x_win, wlen)
+            # Rematerialize the fp32 pre-activations and the hidden.
+            a = _run_planned_ragged(x_win, wg_l, loffs, "nn", jnp.float32,
+                                    backend)
+            b = _run_planned_ragged(x_win, wu_l, loffs, "nn", jnp.float32,
+                                    backend)
+            sg = jax.nn.sigmoid(a)
+            h_win = _mask_rows((a * sg * b).astype(x_l.dtype), wlen)
+            # Down projection: dH and dWd stay on the owning shard.
+            dh = _mask_rows(_run_planned_ragged(ct_win, wd_l, loffs, "nt",
+                                                jnp.float32, backend), wlen)
+            dwd_l = _run_planned_ragged_dw(h_win, ct_win, loffs, wd_l.dtype,
+                                           backend)
+            # SwiGLU epilogue backward, then the two dX products.
+            da = (dh * b * sg * (1.0 + a * (1.0 - sg))).astype(x_l.dtype)
+            db = (dh * a * sg).astype(x_l.dtype)
+            dx_win = (
+                _run_planned_ragged(da, wg_l, loffs, "nt", jnp.float32,
+                                    backend)
+                + _run_planned_ragged(db, wu_l, loffs, "nt", jnp.float32,
+                                      backend)).astype(x_l.dtype)
+            dx_l = _ep_return(_mask_rows(dx_win, wlen), start, axis)
+            dwg_l = _run_planned_ragged_dw(x_win, da, loffs, wg_l.dtype,
+                                           backend)
+            dwu_l = _run_planned_ragged_dw(x_win, db, loffs, wu_l.dtype,
+                                           backend)
+            return dx_l, dwg_l, dwu_l, dwd_l
+
+        dx, dwg, dwu, dwd = bwd_local(ct, x, wg, wu, wd, offsets)
+        return dx, dwg, dwu, dwd, _float0_zeros(offsets)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _ep_prepare(x: jax.Array, w: jax.Array, mesh: Mesh, axis):
+    if x.ndim != 2 or w.ndim != 3:
+        raise ValueError((x.shape, w.shape))
+    g = w.shape[0]
+    nc = _axis_size(mesh, axis)
+    if g % nc:
+        raise ValueError(
+            f"expert count {g} not divisible by mesh axis {axis} ({nc})")
+    t = x.shape[0]
+    pad_t = (-t) % nc
+    x_p = jnp.pad(x, ((0, pad_t), (0, 0))) if pad_t else x
+    return x_p, t, pad_t
+
+
+def ep_ragged_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array, *,
+                     mesh: Mesh, axis="data", out_dtype=None,
+                     backend: str | None = None) -> jax.Array:
+    """Expert-parallel ragged grouped GEMM over ``mesh[axis]``.
+
+    Same contract as ``ragged_matmul`` — ``x`` (T, D) rows sorted so each
+    group's rows are contiguous, ``group_offsets`` (G+1,) prefix sums,
+    ``w`` (G, D, F) per-group panels, G divisible by the axis size — but the
+    expert dim is sharded: tokens all-to-all to the shard owning their
+    expert (the contiguous-window exchange keyed by the prefix sums), the
+    planned per-shard ragged kernel runs on G/num_shards local panels, and
+    the inverse exchange restores the global row order.  Returns (T, F)."""
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    x_p, t, pad_t = _ep_prepare(x, w, mesh, axis)
+    fn = _ep_ragged_fn(mesh, _axes(axis), out_dtype.name, backend)
+    out = fn(x_p, w, group_offsets.astype(jnp.int32))
+    return out[:t] if pad_t else out
+
+
+def ep_ragged_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                     group_offsets: jax.Array, *, mesh: Mesh, axis="data",
+                     out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Expert-parallel fused ragged MoE front half: silu(x @ Wg_g) * (x @
+    Wu_g) per group with the gate/up panels expert-sharded over
+    ``mesh[axis]`` — ONE token exchange each way for the fused pair (same
+    contract as ``ragged_swiglu``)."""
+    if w_gate.shape != w_up.shape:
+        raise ValueError((w_gate.shape, w_up.shape))
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    x_p, t, pad_t = _ep_prepare(x, w_gate, mesh, axis)
+    fn = _ep_ragged_swiglu_fn(mesh, _axes(axis), out_dtype.name, backend)
+    out = fn(x_p, w_gate, w_up, group_offsets.astype(jnp.int32))
+    return out[:t] if pad_t else out
+
+
+def ep_ragged_moe(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array, group_offsets: jax.Array, *,
+                  mesh: Mesh, axis="data", out_dtype=None,
+                  backend: str | None = None) -> jax.Array:
+    """Whole expert-parallel ragged MoE MLP in one placement:
+    (silu(x @ Wg_g) * (x @ Wu_g)) @ Wd_g per group, all three panel sets
+    expert-sharded over ``mesh[axis]``.  Tokens cross the axis exactly once
+    each way (d_model wide); the (rows, d_ff) hidden never does — composing
+    ``ep_ragged_swiglu`` + ``ep_ragged_matmul`` would exchange it twice for
+    nothing, since both key off the same ``group_offsets`` windows.
+    ``x`` (T, D), ``w_gate``/``w_up`` (G, D, F), ``w_down`` (G, F, D);
+    returns (T, D)."""
+    if w_gate.shape != w_up.shape:
+        raise ValueError((w_gate.shape, w_up.shape))
+    if w_down.ndim != 3 or w_down.shape[0] != w_gate.shape[0] \
+            or w_down.shape[1] != w_gate.shape[2]:
+        raise ValueError((w_gate.shape, w_down.shape))
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    x_p, t, pad_t = _ep_prepare(x, w_gate, mesh, axis)
+    fn = _ep_ragged_moe_fn(mesh, _axes(axis), out_dtype.name, backend)
+    out = fn(x_p, w_gate, w_up, w_down, group_offsets.astype(jnp.int32))
+    return out[:t] if pad_t else out

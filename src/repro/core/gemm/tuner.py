@@ -1,19 +1,28 @@
-"""Dynamic adjusting (paper §IV-C): choose parallelization strategy and block
-sizes per GEMM shape, at trace time, from the CMR model.
+"""Dynamic adjusting (paper §IV-C): choose parallelization strategy, block
+sizes, AND mesh placement per GEMM shape, at trace time, from the CMR model.
 
 The paper fixes initial block sizes from CMR + capacity, then adjusts them to
 the actual matrix shape at run time, and picks M-parallel vs K-parallel from
 the shape (K-parallel iff M and N are both small and K is large, because only
-splitting K can occupy all 8 DSP cores).  Here:
+splitting K can occupy all 8 DSP cores).  Here that decision is one level of
+a unified *plan hierarchy*:
 
-  * single-core blocks (bm, bn, bk, dim_order) come from enumerating aligned
-    candidates and scoring with ``cmr.estimate`` under the VMEM budget,
-  * the cross-chip strategy (M-shard vs K-shard+psum) is scored with an added
-    ICI collective term (``plan_distributed``), mirroring Eqs. 1-4's
-    num_core terms,
-  * plans are LRU-cached per shape — the paper's "dynamic adjusting" happens
-    once per (M, K, N, dtype) and is free afterwards.
+  * every planner (``plan_gemm`` / ``plan_batched_gemm`` /
+    ``plan_ragged_gemm``) returns a ``Plan`` whose single-core tiling
+    (bm, bn, bk, dim_order) comes from enumerating aligned candidates and
+    scoring with ``cmr.estimate*`` under the VMEM budget;
+  * when asked to place the GEMM on a mesh (``num_shards > 1``), the same
+    plan additionally carries a ``Placement`` — the cross-chip strategy
+    (m_parallel / k_parallel / expert_parallel), the modeled ICI collective
+    term (psum for K-parallel, the token all-to-all for expert-parallel via
+    ``cmr.estimate_ep``) and the load-imbalance waste — so strategy x
+    blocking is ONE joint auto-tuning decision, mirroring Eqs. 1-4's
+    num_core terms at mesh scale;
+  * plans are LRU-cached per shape signature — the paper's "dynamic
+    adjusting" happens once per (shape, dtype, placement request) and is
+    free afterwards.
 
+``plan_distributed`` survives as the dense-only compat view (``DistPlan``);
 ``tgemm_plan`` reproduces the TGEMM strawman the paper compares against: one
 fixed micro-kernel/block configuration regardless of shape, with implicit
 padding of N (its waste shows up in ``est.flops_padded`` / traffic).
@@ -23,13 +32,55 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass, replace
 
-from .cmr import (TPU_V5E, PlanEstimate, TpuSpec, cdiv, ceil_to, estimate,
-                  estimate_batched, estimate_ragged)
+from .cmr import (TPU_V5E, EpEstimate, PlanEstimate, TpuSpec, cdiv, ceil_to,
+                  estimate, estimate_batched, estimate_ep, estimate_ragged)
 from .shapes import GemmClass, classify
 
 
 @dataclass(frozen=True)
-class GemmPlan:
+class Placement:
+    """Where a plan runs on the mesh.  ``None`` placement = single device.
+
+    ``strategy`` is the paper's parallelization mode lifted to the mesh:
+    "m_parallel" (Alg. 4: shard rows, replicate panels, no steady-state
+    collective), "k_parallel" (Alg. 5: shard the contraction, psum the fp32
+    partials) or "expert_parallel" (shard the group/expert dim, all-to-all
+    the tokens to their owning shard and back).  ``t_collective`` is the
+    modeled ICI term of that choice, ``ici_bytes`` the global bytes it moves,
+    and ``waste`` the load-imbalance multiplier on the local estimate.
+    """
+    strategy: str                   # m_parallel | k_parallel | expert_parallel
+    num_shards: int = 1
+    axis: str | None = None         # mesh axis name (advisory; executors bind)
+    t_collective: float = 0.0       # modeled ICI cost (s) per call
+    ici_bytes: float = 0.0          # global bytes over ICI per call
+    waste: float = 1.0              # >= 1: shard-imbalance multiplier
+
+
+class Plan:
+    """Base of the unified plan hierarchy: a local CMR estimate (``est``)
+    plus an optional ``Placement``.  ``t_total`` composes them the same way
+    for every family: local time x imbalance waste + ICI collective."""
+
+    est: PlanEstimate | None
+    placement: Placement | None
+
+    @property
+    def t_total(self) -> float:
+        t = self.est.t_total if self.est is not None else 0.0
+        p = self.placement
+        if p is not None:
+            t = t * p.waste + p.t_collective
+        return t
+
+    @property
+    def strategy(self) -> str:
+        return self.placement.strategy if self.placement is not None \
+            else "single"
+
+
+@dataclass(frozen=True)
+class GemmPlan(Plan):
     bm: int
     bn: int
     bk: int
@@ -37,6 +88,7 @@ class GemmPlan:
     dim_order: str = "mn"
     gemm_class: GemmClass = GemmClass.REGULAR
     est: PlanEstimate | None = None
+    placement: Placement | None = None
 
     def kernel_kwargs(self) -> dict:
         return dict(bm=self.bm, bn=self.bn, bk=self.bk,
@@ -44,13 +96,21 @@ class GemmPlan:
 
 
 @dataclass(frozen=True)
-class DistPlan:
-    """Cross-chip strategy for one GEMM (paper's two parallelization modes)."""
-    strategy: str                   # "m_parallel" | "k_parallel"
-    num_cores: int
-    local: GemmPlan                 # per-chip plan for the local shard shape
-    t_collective: float             # modeled ICI reduction cost (s)
-    t_total: float
+class DistPlan(Plan):
+    """Compat view of a placed dense plan (the paper's two cross-chip
+    strategies).  ``local`` is the per-shard ``GemmPlan``; strategy/cost
+    accessors read through to its ``Placement``."""
+    local: GemmPlan
+    placement: Placement
+    est: PlanEstimate | None = None
+
+    @property
+    def num_cores(self) -> int:
+        return self.placement.num_shards
+
+    @property
+    def t_collective(self) -> float:
+        return self.placement.t_collective
 
 
 def _bm_candidates(m: int, sublane: int) -> list[int]:
@@ -82,8 +142,17 @@ def plan_gemm(
     in_bytes: int = 4,
     out_bytes: int = 4,
     spec: TpuSpec = TPU_V5E,
+    *,
+    num_shards: int = 1,
+    axis: str | None = None,
 ) -> GemmPlan:
-    """Pick the best single-core tiling for C(M,N) += A(M,K) B(K,N)."""
+    """Pick the best tiling for C(M,N) += A(M,K) B(K,N) — and, when
+    ``num_shards > 1``, the cross-chip strategy too: the returned plan is the
+    per-shard tiling of the winning layout with its ``Placement`` attached
+    (m_parallel vs k_parallel, scored with the psum ICI term)."""
+    if num_shards > 1:
+        return _plan_dense_placed(m, k, n, num_shards, in_bytes, out_bytes,
+                                  spec, axis)
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
     best: GemmPlan | None = None
@@ -119,6 +188,40 @@ def _better(a: GemmPlan, b: GemmPlan) -> bool:
     return a.est.flops_padded < b.est.flops_padded
 
 
+def _plan_dense_placed(
+    m: int, k: int, n: int, nc: int,
+    in_bytes: int, out_bytes: int, spec: TpuSpec, axis: str | None,
+) -> GemmPlan:
+    """M-parallel vs K-parallel across ``nc`` chips (paper Alg. 4 vs 5).
+
+    M-parallel: shard M; B replicated; no steady-state collective but a load
+    imbalance term when M doesn't fill the chips.  K-parallel: shard K;
+    partial C's reduced — a ring all-reduce of the fp32 partials over ICI.
+    """
+    sublane = spec.sublane(in_bytes)
+
+    m_local = max(cdiv(m, nc), 1)
+    pm = plan_gemm(ceil_to(m_local, sublane), k, n, in_bytes, out_bytes, spec)
+    waste_m = (cdiv(m, nc) * nc) / max(m, 1)
+    pm = replace(pm, placement=Placement("m_parallel", nc, axis=axis,
+                                         waste=waste_m))
+
+    k_local = max(cdiv(k, nc), 1)
+    pk = plan_gemm(m, ceil_to(k_local, 128), n, in_bytes, out_bytes, spec)
+    ring = 2.0 * (nc - 1) / nc
+    t_red = ring * (m * n * 4) / (spec.ici_bw_per_link * spec.ici_links)
+    pk = replace(pk, placement=Placement(
+        "k_parallel", nc, axis=axis, t_collective=t_red,
+        ici_bytes=ring * m * n * 4 * nc))
+
+    # Paper §IV-C: K-parallel "brings additional overhead of reduction" and
+    # is reserved for shapes where M cannot occupy the cores — require a
+    # clear modeled win before accepting the reduction strategy.
+    if pm.t_total <= pk.t_total * 1.15:
+        return pm
+    return pk
+
+
 @functools.lru_cache(maxsize=8192)
 def plan_distributed(
     m: int, k: int, n: int,
@@ -127,32 +230,15 @@ def plan_distributed(
     out_bytes: int = 4,
     spec: TpuSpec = TPU_V5E,
 ) -> DistPlan:
-    """Choose M-parallel vs K-parallel across ``num_cores`` chips.
-
-    M-parallel (paper Alg. 4): shard M; B replicated; no steady-state
-    collective.  K-parallel (paper Alg. 5): shard K; partial C's reduced —
-    modeled as a ring all-reduce of the fp32 partials over ICI.
-    """
-    sublane = spec.sublane(in_bytes)
-
-    m_local = max(cdiv(m, num_cores), 1)
-    pm = plan_gemm(ceil_to(m_local, sublane), k, n, in_bytes, out_bytes, spec)
-    # Load imbalance when m doesn't fill the cores evenly / at all.
-    waste_m = (cdiv(m, num_cores) * num_cores) / max(m, 1)
-    t_m = pm.est.t_total * waste_m
-
-    k_local = max(cdiv(k, num_cores), 1)
-    pk = plan_gemm(m, ceil_to(k_local, 128), n, in_bytes, out_bytes, spec)
-    ring = 2.0 * (num_cores - 1) / num_cores
-    t_red = ring * (m * n * 4) / (spec.ici_bw_per_link * spec.ici_links)
-    t_k = pk.est.t_total + t_red
-
-    # Paper §IV-C: K-parallel "brings additional overhead of reduction" and
-    # is reserved for shapes where M cannot occupy the cores — require a
-    # clear modeled win before accepting the reduction strategy.
-    if t_m <= t_k * 1.15:
-        return DistPlan("m_parallel", num_cores, pm, 0.0, t_m)
-    return DistPlan("k_parallel", num_cores, pk, t_red, t_k)
+    """Choose M-parallel vs K-parallel across ``num_cores`` chips (the
+    dense-only compat entry point; ``plan_gemm(..., num_shards=n)`` is the
+    unified spelling and returns the same placed plan).  Unlike plan_gemm —
+    whose num_shards=1 means "unplaced" — a degenerate single-core request
+    still gets an (m_parallel, 1 shard, no collective) placement here, so
+    ``.strategy`` / ``.num_cores`` always read."""
+    p = _plan_dense_placed(m, k, n, max(num_cores, 1), in_bytes, out_bytes,
+                           spec, None)
+    return DistPlan(local=p, placement=p.placement, est=p.est)
 
 
 @functools.lru_cache(maxsize=8192)
@@ -162,6 +248,9 @@ def plan_batched_gemm(
     out_bytes: int = 4,
     shared: str = "none",            # "none" | "a" | "b"
     spec: TpuSpec = TPU_V5E,
+    *,
+    num_shards: int = 1,
+    axis: str | None = None,
 ) -> GemmPlan:
     """Pick the best tiling for the batched GEMM C(g) += A(g) B(g).
 
@@ -170,7 +259,15 @@ def plan_batched_gemm(
     the tiling actually earns it (single resident block), mirroring the
     paper's loop-order-for-reuse analysis with the batch as the outermost
     loop.  The per-entry shape is classified with the 2-D taxonomy (each MoE
-    expert GEMM is T3/T1 per shard regardless of E)."""
+    expert GEMM is T3/T1 per shard regardless of E).
+
+    ``num_shards > 1``: place the batched GEMM on the mesh — per-entry
+    m_parallel (rows sharded, every shard streams all G panels) vs
+    expert_parallel (the G dim sharded, tokens all-to-all'd to their owning
+    shard and back, priced by ``estimate_ep``)."""
+    if num_shards > 1:
+        return _plan_batched_placed(g, m, k, n, num_shards, in_bytes,
+                                    out_bytes, shared, spec, axis)
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
     shared_a, shared_b = shared == "a", shared == "b"
@@ -199,6 +296,33 @@ def plan_batched_gemm(
     return best
 
 
+def _plan_batched_placed(
+    g: int, m: int, k: int, n: int, nc: int,
+    in_bytes: int, out_bytes: int, shared: str, spec: TpuSpec,
+    axis: str | None,
+) -> GemmPlan:
+    sublane = spec.sublane(in_bytes)
+    m_l = ceil_to(max(cdiv(m, nc), 1), sublane)
+    pm = plan_batched_gemm(g, m_l, k, n, in_bytes, out_bytes, shared, spec)
+    waste_m = (cdiv(m, nc) * nc) / max(m, 1)
+    pm = replace(pm, placement=Placement("m_parallel", nc, axis=axis,
+                                         waste=waste_m))
+
+    g_l = max(cdiv(g, nc), 1)
+    pe = plan_batched_gemm(g_l, m, k, n, in_bytes, out_bytes, shared, spec)
+    ex = estimate_ep(g * m, k, nc, elt_bytes=in_bytes, spec=spec) \
+        + estimate_ep(g * m, n, nc, elt_bytes=out_bytes, spec=spec)
+    waste_g = (g_l * nc) / max(g, 1)
+    pe = replace(pe, placement=Placement(
+        "expert_parallel", nc, axis=axis, t_collective=ex.t_exchange,
+        ici_bytes=ex.ici_bytes, waste=waste_g))
+    # EP must amortize its exchange before it displaces the collective-free
+    # token-parallel layout (same "clear win" rule as K-parallel).
+    if pe.t_total * 1.1 < pm.t_total:
+        return pe
+    return pm
+
+
 def _ragged_tile_candidates(total: int, g: int, sublane: int) -> list[int]:
     """Row-tile candidates for the ragged dimension.
 
@@ -222,21 +346,36 @@ def plan_ragged_gemm(
     out_bytes: int = 4,
     ragged: str = "m",
     spec: TpuSpec = TPU_V5E,
+    *,
+    num_shards: int = 1,
+    axis: str | None = None,
 ) -> GemmPlan:
     """Pick the best tiling for a ragged grouped GEMM over G groups.
 
-    The cache key (g, total, k, n, dtype widths, ragged) is the *distribution
-    signature*: per-group counts are dynamic (traced) so the plan prices the
-    aggregate — total ragged rows plus one boundary tile per group — and is
-    re-used by every call whose signature matches (one tuning per MoE layer
-    shape, free afterwards, exactly like the paper's dynamic adjusting).
+    The cache key (g, total, k, n, dtype widths, ragged, placement request)
+    is the *distribution signature*: per-group counts are dynamic (traced)
+    so the plan prices the aggregate — total ragged rows plus one boundary
+    tile per group — and is re-used by every call whose signature matches
+    (one tuning per MoE layer shape, free afterwards, exactly like the
+    paper's dynamic adjusting).
 
     ``ragged == "m"``: forward — (total, k) rows against per-group (k, n)
     panels; ``bm`` tiles the ragged rows.  ``ragged == "k"``: backward dW —
     the ragged dimension contracts (T2 per group); ``bk`` tiles it, ``k`` is
     the output panel's row dim.  The per-group *mean* shape is classified
     with the 2-D taxonomy (a balanced MoE dispatch is T3/T1 per expert).
+
+    ``num_shards > 1``: place the ragged GEMM on the mesh — token-parallel
+    (rows sharded, weights replicated: no collective but every shard streams
+    all G panels) vs expert-parallel (groups sharded: only G/num_shards
+    panels per shard, paid for with the two all-to-all token-exchange legs
+    priced by ``estimate_ep``).  EP wins exactly when the panel-traffic
+    saving amortizes the exchange — few tokens against many/large expert
+    panels, the MoE decode regime.
     """
+    if num_shards > 1:
+        return _plan_ragged_placed(g, total, k, n, num_shards, in_bytes,
+                                   out_bytes, ragged, spec, axis)
     sublane = spec.sublane(in_bytes)
     mean = max(total // max(g, 1), 1)
     if ragged == "m":
@@ -271,6 +410,92 @@ def plan_ragged_gemm(
     return best
 
 
+def _plan_ragged_placed(
+    g: int, total: int, k: int, n: int, nc: int,
+    in_bytes: int, out_bytes: int, ragged: str, spec: TpuSpec,
+    axis: str | None,
+) -> GemmPlan:
+    t_l = max(cdiv(total, nc), 1)
+    g_l = max(cdiv(g, nc), 1)
+    waste = (cdiv(total, nc) * nc) / max(total, 1)
+    if ragged == "k":
+        # The EP backward dW contracts rows that already live on the owning
+        # shard after the forward exchange: expert-local, no collective.
+        pe = plan_ragged_gemm(g_l, t_l, k, n, in_bytes, out_bytes, ragged,
+                              spec)
+        return replace(pe, placement=Placement("expert_parallel", nc,
+                                               axis=axis, waste=waste))
+    # Token-parallel: rows sharded, every shard streams all G panels.
+    pm = plan_ragged_gemm(g, t_l, k, n, in_bytes, out_bytes, ragged, spec)
+    pm = replace(pm, placement=Placement("m_parallel", nc, axis=axis,
+                                         waste=waste))
+    # Expert-parallel: G/nc panels per shard + the two exchange legs.
+    pe = plan_ragged_gemm(g_l, t_l, k, n, in_bytes, out_bytes, ragged, spec)
+    ex = estimate_ep(total, k, nc, elt_bytes=in_bytes, spec=spec) \
+        + estimate_ep(total, n, nc, elt_bytes=out_bytes, spec=spec)
+    pe = replace(pe, placement=Placement(
+        "expert_parallel", nc, axis=axis, t_collective=ex.t_exchange,
+        ici_bytes=ex.ici_bytes, waste=waste))
+    # EP must amortize the exchange before it displaces the collective-free
+    # layout (paper §IV-C's "clear modeled win" rule for K-parallel, reused).
+    if pe.t_total * 1.1 < pm.t_total:
+        return pe
+    return pm
+
+
+@dataclass(frozen=True)
+class MoeDispatchPlan(Plan):
+    """Dispatch-mode x placement pricing for one MoE layer shape.
+
+    ``rows`` is the effective expert-GEMM row count the dispatch mode
+    produces: E x capacity for "capacity" (every expert padded to the max,
+    overflow dropped), T x top_k for "ragged" (every routed copy, nothing
+    else).  The roofline prices the layer's GEMM flops/bytes off ``rows``
+    and its EP exchange off ``placement`` — ONE source of truth instead of
+    per-consumer special cases."""
+    rows: int
+    est: PlanEstimate | None = None
+    placement: Placement | None = None
+
+
+@functools.lru_cache(maxsize=8192)
+def plan_moe_dispatch(
+    t: int, e: int, top_k: int, d_model: int, d_ff: int,
+    *,
+    dispatch: str = "capacity",
+    capacity_factor: float = 1.25,
+    elt_bytes: int = 2,
+    num_shards: int = 1,
+    axis: str | None = None,
+    spec: TpuSpec = TPU_V5E,
+) -> MoeDispatchPlan:
+    """Price one MoE layer's dispatch mode + expert placement.
+
+    ``num_shards > 1`` attaches the expert-parallel ``Placement`` with the
+    two all-to-all legs of the FUSED pipeline (``ep_ragged_moe``): tokens
+    out and back in d_model width, priced by ``estimate_ep`` — the d_ff-wide
+    hidden is produced and consumed on the shard owning the expert and
+    never crosses the axis.  (``d_ff`` stays in the signature/cache key: it
+    sizes the layer's GEMMs for the rows-based pricing consumers.)"""
+    if dispatch == "ragged":
+        rows = t * top_k
+    elif dispatch == "capacity":
+        s = spec.sublane(elt_bytes)
+        c = int(t * top_k * capacity_factor / e)
+        rows = e * max(s, ceil_to(c, s))
+    else:
+        raise ValueError(f"unknown moe dispatch: {dispatch}")
+    placement = None
+    if num_shards > 1:
+        leg = estimate_ep(rows, d_model, num_shards,
+                          elt_bytes=elt_bytes, spec=spec)
+        ex: EpEstimate = leg + leg            # dispatch + return
+        placement = Placement("expert_parallel", num_shards, axis=axis,
+                              t_collective=ex.t_exchange,
+                              ici_bytes=ex.ici_bytes)
+    return MoeDispatchPlan(rows=rows, placement=placement)
+
+
 def tgemm_plan(m: int, k: int, n: int,
                in_bytes: int = 4, out_bytes: int = 4,
                spec: TpuSpec = TPU_V5E) -> GemmPlan:
@@ -288,3 +513,4 @@ def clear_plan_cache() -> None:
     plan_batched_gemm.cache_clear()
     plan_ragged_gemm.cache_clear()
     plan_distributed.cache_clear()
+    plan_moe_dispatch.cache_clear()

@@ -34,8 +34,8 @@ from ..roofline.perf_model import step_perf
 from ..train.train_step import (make_prefill_step, make_serve_step,
                                 make_train_step)
 from .mesh import make_production_mesh
-from .sharding import (batch_specs, cache_specs, dp_axes, param_specs,
-                       to_shardings)
+from .sharding import (axis_size, batch_specs, cache_specs, dp_axes,
+                       expert_axis, param_specs, to_shardings)
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
@@ -138,6 +138,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     dist = DistContext(mesh=mesh, dp_axes=dp_axes(mesh), model_axis="model",
+                       moe_ep_axis=expert_axis(mesh, moe_ep, moe_ep_axis,
+                                               cfg.num_experts or None),
                        **knobs)
     t0 = time.time()
     with use_dist(dist), mesh:
@@ -201,7 +203,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "peak_memory": (getattr(mem, "argument_size_in_bytes", 0)
                         + getattr(mem, "temp_size_in_bytes", 0)),
     }
-    perf = step_perf(cfg, shape)
+    # Price EP off the SAME axis the DistContext routed execution through
+    # (axis_size(None) == 1 -> replicated-expert pricing).
+    ep_shards = axis_size(mesh, dist.moe_ep_axis) if cfg.num_experts else 1
+    perf = step_perf(cfg, shape, ep_shards=ep_shards)
     roof = build_roofline(
         arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
         analytic_flops=perf.flops, analytic_bytes=perf.bytes_hbm,
@@ -212,7 +217,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "cell": cellname, "status": "ok", "variant": variant,
         "compile_s": round(t_compile, 1),
         "memory": mem_stats,
-        "perf_breakdown": {k: [round(v[0], 1), round(v[1], 1)]
+        "perf_breakdown": {k: [round(x, 1) for x in v]
                            for k, v in perf.breakdown.items()},
         "roofline": roof.to_dict(),
     }

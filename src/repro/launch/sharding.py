@@ -44,6 +44,33 @@ def axis_size(mesh: Mesh, axes) -> int:
     return int(math.prod(mesh.shape[a] for a in axes))
 
 
+def expert_axis(mesh: Mesh, moe_ep: bool, moe_ep_axis: str = "dp",
+                num_experts: int | None = None):
+    """The concrete mesh axis (or axis tuple) that owns the MoE expert dim
+    under expert parallelism, or None when EP is off / the axis is trivial /
+    the expert count doesn't divide it.
+
+    ``moe_ep_axis`` uses the same vocabulary as ``param_specs``: "dp" (the
+    data axes) or a literal mesh axis name.  The result is what
+    ``DistContext.moe_ep_axis`` carries so the ragged MoE dispatch can bind
+    its ``ep_ragged_*`` executors to the same axis the weights are sharded
+    on.  Pass ``num_experts`` so the divisibility rule the executors apply
+    is decided HERE, once — a caller that prices EP (dryrun's ``ep_shards``)
+    and the model code that executes it then can never disagree."""
+    if not moe_ep:
+        return None
+    if moe_ep_axis == "dp":
+        axes = dp_axes(mesh)
+    elif moe_ep_axis in mesh.axis_names:
+        axes = (moe_ep_axis,)
+    else:
+        return None
+    n = axis_size(mesh, axes) if axes else 1
+    if n <= 1 or (num_experts is not None and num_experts % n):
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
 def _maybe(dim: int, axes, mesh: Mesh):
     """Shard ``dim`` over ``axes`` only when divisible."""
     if axes is None:

@@ -27,6 +27,18 @@ capacity; the CMR planner prices the actual size distribution
 (``plan_ragged_gemm`` — total rows + one boundary tile per expert, not
 E x max).
 
+Expert parallelism: when the active ``DistContext`` exposes an expert axis
+(``moe_ep_axis``, set by the launchers from ``launch.sharding.expert_axis``)
+and the expert count divides it, the ragged path runs its whole MLP through
+``core.gemm.ep_ragged_moe`` — the tokens all-to-all to the shard that owns
+their expert (keyed by the same ``group_offsets`` prefix sums), the fused
+silu(gate)*up and the down projection run on that shard (the d_ff-wide
+hidden never crosses the axis), and the inverse exchange returns the
+d_model outputs — so each chip holds and streams only its G/num_shards
+expert panels.  The placement is priced by the same planner
+(``plan_ragged_gemm(..., num_shards=n)`` / ``plan_moe_dispatch``) that picks
+the block sizes — strategy x blocking as ONE decision, at mesh scale.
+
 When to prefer which: the planner's ragged estimate beats the capacity
 estimate whenever the router is unbalanced (capacity pads every expert to
 the max) or when dropping tokens is unacceptable (training quality,
@@ -41,8 +53,25 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dist import current_dist, shard_act
-from ..core.gemm import grouped_matmul, project, ragged_matmul, ragged_swiglu
-from ..kernels.ftimm import sublane
+from ..core.gemm import (ep_ragged_moe, grouped_matmul, plan_moe_dispatch,
+                         project, ragged_matmul, ragged_swiglu)
+
+
+def _ep_axis(num_experts: int):
+    """The mesh axis carrying the expert dim, when the active DistContext
+    exposes one (``launch.sharding.expert_axis``, which already enforces the
+    divisibility rule when it knows E) and the expert count divides it —
+    else None (single-device / replicated-expert semantics).  The re-check
+    here only guards hand-built DistContexts."""
+    ctx = current_dist()
+    axis = getattr(ctx, "moe_ep_axis", None) if ctx is not None else None
+    if not axis:
+        return None, None
+    from ..core.gemm.distributed import _axis_size
+    nc = _axis_size(ctx.mesh, axis)
+    if nc <= 1 or num_experts % nc:
+        return None, None
+    return ctx.mesh, axis
 
 
 def init_moe_params(key, d_model: int, d_ff: int, num_experts: int,
@@ -64,10 +93,15 @@ def capacity(num_tokens: int, num_experts: int, top_k: int,
 
     The expert GEMM's M dim is the capacity, so it must align to the register
     tile: (8,128) fp32 but (16,128) bf16 — a hardcoded 8 under-pads bf16
-    buffers (the same bug class PR 1 fixed in ftimm/ops.py)."""
-    s = sublane(dtype)
-    c = int(num_tokens * top_k * capacity_factor / num_experts)
-    return max(s, -(-c // s) * s)
+    buffers (the same bug class PR 1 fixed in ftimm/ops.py).  Delegates to
+    the planner's ``plan_moe_dispatch`` (rows == E x capacity) so the
+    runtime dispatch buffer and the roofline's priced rows share ONE
+    rounding rule and can never diverge."""
+    rows = plan_moe_dispatch(
+        num_tokens, num_experts, top_k, 0, 0, dispatch="capacity",
+        capacity_factor=capacity_factor,
+        elt_bytes=jnp.dtype(dtype).itemsize).rows
+    return rows // num_experts
 
 
 def _router(x: jax.Array, params: dict, num_experts: int, top_k: int):
@@ -179,11 +213,23 @@ def _moe_mlp_ragged(
     xs = jnp.take(xc, tok_sorted, axis=0)                        # (T*K, D)
 
     # Ragged expert GEMMs through the CMR planner: fused gate/up, then down.
+    # When the sharding layout exposes an expert axis on the mesh
+    # (DistContext.moe_ep_axis), the same GEMMs run expert-parallel: tokens
+    # all-to-all to the shard owning their expert (keyed by the very same
+    # ``offsets`` prefix sums), G/num_shards panels per shard, inverse
+    # exchange on the way back — instead of every chip replicating every
+    # expert panel.
     wg = params["w_gate"].astype(compute_dtype)
     wu = params["w_up"].astype(compute_dtype)
     wd = params["w_down"].astype(compute_dtype)
-    h = ragged_swiglu(xs, wg, wu, offsets)                       # (T*K, F)
-    ys = ragged_matmul(h, wd, offsets)                           # (T*K, D)
+    mesh, ep_axis = _ep_axis(e)
+    if ep_axis is not None:
+        # Fused EP pipeline: one d_model-wide exchange each way; the
+        # (rows, d_ff) hidden stays on the shard owning the expert.
+        ys = ep_ragged_moe(xs, wg, wu, wd, offsets, mesh=mesh, axis=ep_axis)
+    else:
+        h = ragged_swiglu(xs, wg, wu, offsets)                   # (T*K, F)
+        ys = ragged_matmul(h, wd, offsets)                       # (T*K, D)
 
     # Un-sort and combine with gate weights (every copy kept — no drops).
     gw_sorted = jnp.take(gate_w.reshape(-1), order)

@@ -76,8 +76,12 @@ def main():
     knobs = dict(D.VARIANTS[args.variant])
     zero_stage = knobs.pop("zero_stage", 3)
     moe_ep = knobs.pop("moe_ep", False)
+    moe_ep_axis = knobs.pop("moe_ep_axis", "dp")
     mesh = make_production_mesh()
+    from ..launch.sharding import expert_axis
     dist = DistContext(mesh=mesh, dp_axes=dp_axes(mesh), model_axis="model",
+                       moe_ep_axis=expert_axis(mesh, moe_ep, moe_ep_axis,
+                                               cfg.num_experts or None),
                        **knobs)
     with use_dist(dist), mesh:
         batch = D.input_specs(cfg, shape)

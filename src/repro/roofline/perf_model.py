@@ -19,7 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from ..configs.base import ModelConfig, ShapeConfig
-from ..models.moe import capacity as moe_capacity
+from ..core.gemm import plan_moe_dispatch
 from ..models.ssm import CONV_WIDTH, HEADDIM, ssm_dims
 
 
@@ -27,14 +27,19 @@ from ..models.ssm import CONV_WIDTH, HEADDIM, ssm_dims
 class Perf:
     flops: float = 0.0               # matmul(+attention) flops, forward
     bytes_hbm: float = 0.0           # HBM traffic (global)
-    breakdown: dict = field(default_factory=dict)
+    bytes_ici: float = 0.0           # cross-chip traffic (global) — NOT HBM:
+    # priced at ICI bandwidth, never seen by XLA's per-device cost_analysis
+    breakdown: dict = field(default_factory=dict)   # name -> [flops, hbm, ici]
 
-    def add(self, name: str, flops: float = 0.0, byts: float = 0.0):
+    def add(self, name: str, flops: float = 0.0, byts: float = 0.0,
+            ici: float = 0.0):
         self.flops += flops
         self.bytes_hbm += byts
-        d = self.breakdown.setdefault(name, [0.0, 0.0])
+        self.bytes_ici += ici
+        d = self.breakdown.setdefault(name, [0.0, 0.0, 0.0])
         d[0] += flops
         d[1] += byts
+        d[2] += ici
 
 
 def _keff(s_q: int, kv_len: int, window: int, causal: bool,
@@ -77,25 +82,34 @@ def _attn(perf: Perf, cfg: ModelConfig, n_layers_by_window: dict[int, int],
         perf.add("attn_score", score_f * n_l, kv_bytes * n_l)
 
 
-def _mlp(perf: Perf, cfg: ModelConfig, n_l: int, t: int, cdt=2):
+def _mlp(perf: Perf, cfg: ModelConfig, n_l: int, t: int, cdt=2,
+         ep_shards: int = 1):
     d, f = cfg.d_model, cfg.d_ff
     if cfg.num_experts:
         perf.add("router", 2 * t * d * cfg.num_experts * n_l,
                  t * d * cdt * n_l)
-        # exact dispatch-buffer size incl. min-capacity clamp and rounding
-        # (the padding overhead is the paper's TGEMM-waste phenomenon: tiny
-        # decode batches pay E x C_min slots regardless of tokens); the
-        # ragged dispatch has no capacity — every routed copy and nothing
-        # else (boundary-tile padding is sub-percent at these sizes)
-        if cfg.moe_dispatch == "ragged":
-            cap_tokens = t * cfg.top_k
-        else:
-            cap_tokens = cfg.num_experts * moe_capacity(
-                t, cfg.num_experts, cfg.top_k, cfg.capacity_factor,
-                dtype=cfg.compute_dtype)
+        # Dispatch-mode x placement pricing comes from the SAME planner
+        # object the GEMM stack tunes with (core.gemm.plan_moe_dispatch),
+        # not a local special-case: ``rows`` is the exact dispatch-buffer
+        # row count — E x capacity incl. min-clamp and sublane rounding for
+        # "capacity" (the padding overhead is the paper's TGEMM-waste
+        # phenomenon: tiny decode batches pay E x C_min slots regardless of
+        # tokens), T x top_k for "ragged" (every routed copy and nothing
+        # else; boundary-tile padding is sub-percent at these sizes) — and
+        # the expert-parallel placement's a2a legs land in their own bucket.
+        mp = plan_moe_dispatch(
+            t, cfg.num_experts, cfg.top_k, d, f,
+            dispatch=cfg.moe_dispatch,
+            capacity_factor=cfg.capacity_factor,
+            elt_bytes=cdt, num_shards=ep_shards)
+        cap_tokens = mp.rows
         perf.add("moe_mlp", 6 * cap_tokens * d * f * n_l,
                  (2 * cap_tokens * d * cdt + 3 * d * f * cdt
                   * cfg.num_experts) * n_l)
+        if mp.placement is not None:
+            # EP: tokens cross ICI (dispatch + return); flops unchanged,
+            # and the bytes are ICI — kept out of the HBM stream totals.
+            perf.add("moe_a2a", ici=mp.placement.ici_bytes * n_l)
     else:
         perf.add("mlp", 6 * t * d * f * n_l,
                  (2 * t * d * cdt + 3 * d * f * cdt) * n_l)
@@ -124,8 +138,13 @@ def _ssm(perf: Perf, cfg: ModelConfig, n_l: int, b: int, s: int,
                  (t * hh * p * cdt * 3) * n_l)
 
 
-def forward_perf(cfg: ModelConfig, b: int, s: int, kind: str) -> Perf:
-    """kind: train | prefill | decode (decode: s = cache len, one new tok)."""
+def forward_perf(cfg: ModelConfig, b: int, s: int, kind: str,
+                 ep_shards: int = 1) -> Perf:
+    """kind: train | prefill | decode (decode: s = cache len, one new tok).
+
+    ``ep_shards`` > 1 prices the MoE layers expert-parallel (the a2a token
+    exchange appears as the ``moe_a2a`` bucket) — pass the expert-axis size
+    of the launch layout; 1 keeps replicated-expert semantics."""
     perf = Perf()
     decode = kind == "decode"
     t = b * (1 if decode else s)
@@ -144,7 +163,7 @@ def forward_perf(cfg: ModelConfig, b: int, s: int, kind: str) -> Perf:
             t = b * s_q
             kv_len = s_q
         _attn(perf, cfg, wins, b, s_q, kv_len, decode=decode, cdt=cdt)
-        _mlp(perf, cfg, cfg.num_layers, t, cdt)
+        _mlp(perf, cfg, cfg.num_layers, t, cdt, ep_shards)
         if fam == "encdec":
             se = cfg.encoder_seq
             te = b * se
@@ -165,7 +184,7 @@ def forward_perf(cfg: ModelConfig, b: int, s: int, kind: str) -> Perf:
         _ssm(perf, cfg, cfg.num_layers, b, 1 if decode else s, decode, cdt)
         g = cfg.num_layers // cfg.attn_every
         _attn(perf, cfg, {0: g}, b, s_q, kv_len, decode=decode, cdt=cdt)
-        _mlp(perf, cfg, g, t, cdt)
+        _mlp(perf, cfg, g, t, cdt, ep_shards)
     if cfg.num_patches and not decode:
         perf.add("patch_proj", 2 * b * cfg.num_patches * cfg.d_model ** 2)
 
@@ -191,11 +210,14 @@ def forward_perf(cfg: ModelConfig, b: int, s: int, kind: str) -> Perf:
     return perf
 
 
-def step_perf(cfg: ModelConfig, shape: ShapeConfig) -> Perf:
+def step_perf(cfg: ModelConfig, shape: ShapeConfig,
+              ep_shards: int = 1) -> Perf:
     """Whole-step perf: training includes backward + remat recompute +
-    optimizer; decode/prefill are forward-only."""
+    optimizer; decode/prefill are forward-only.  ``ep_shards`` as in
+    ``forward_perf``."""
     kind = shape.kind
-    fwd = forward_perf(cfg, shape.global_batch, shape.seq_len, kind)
+    fwd = forward_perf(cfg, shape.global_batch, shape.seq_len, kind,
+                       ep_shards)
     if kind != "train":
         # weights are read once per step regardless of batch
         n_params = cfg.param_count()
@@ -210,9 +232,11 @@ def step_perf(cfg: ModelConfig, shape: ShapeConfig) -> Perf:
     mult = {"none": 3.0, "dots": 3.4, "full": 4.0}[cfg.remat]
     inner_ckpt = {"attn_score", "ssm_ssd"}   # jax.checkpoint'd inner scans
     out = Perf()
-    for k, (f, by) in fwd.breakdown.items():
+    for k, (f, by, ici) in fwd.breakdown.items():
         m = mult + 1.0 if k in inner_ckpt else mult
-        out.add(k, f * m, by * (m - 1.0))
+        # ICI scales like the HBM streams: the backward runs its own
+        # exchange legs (dY in, dX back) and remat re-runs the forward's.
+        out.add(k, f * m, by * (m - 1.0), ici * (m - 1.0))
     n_params = cfg.param_count()
     # params read fwd+bwd, grads written+read, adam m/v read+write, p write
     out.add("weights_opt", 10.0 * n_params, 12.0 * n_params * 4)

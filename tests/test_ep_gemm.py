@@ -1,0 +1,229 @@
+"""Expert-parallel ragged GEMM executors vs the single-device oracle.
+
+In-process multi-device: runs on however many host devices the process
+exposes (the CI quick leg forces 8 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on a single device
+everything here skips and the subprocess tests in test_distributed_gemm.py
+cover the path instead).
+
+Tolerances: the token EXCHANGE itself round-trips rows bitwise (checked via
+identity panels), but the per-shard GEMM engine (``jax.lax.ragged_dot``)
+schedules its contraction differently for different group counts, so
+EP-vs-oracle values agree to a few ulp of the output scale, not bit-for-bit
+— asserted at 1e-5 x max|oracle|.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+NDEV = jax.device_count()
+pytestmark = pytest.mark.skipif(
+    NDEV < 2, reason="needs a multi-device runtime (CI quick leg forces 8)")
+
+from repro.core.compat import make_mesh                       # noqa: E402
+from repro.core.dist import DistContext, use_dist             # noqa: E402
+from repro.core.gemm import (batched_matmul, dist_batched_matmul,  # noqa: E402
+                             ep_ragged_matmul, ep_ragged_moe,
+                             ep_ragged_swiglu, ragged_matmul, ragged_swiglu)
+from repro.models.moe import init_moe_params, moe_mlp         # noqa: E402
+
+KEY = jax.random.PRNGKey(3)
+
+# Degenerate-distribution zoo per the ragged conformance suite: empty
+# groups, one giant group, singletons, unaligned totals.
+SIZES = [5, 0, 17, 3, 11, 1, 0, 8, 2, 2, 9, 0, 4, 6, 1, 3]
+
+
+def _mesh():
+    return make_mesh((NDEV,), ("expert",))
+
+
+def _offsets(sizes):
+    return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+
+
+def _groups(n_dev):
+    """A group count divisible by the device count, >= 2 groups/shard."""
+    return 2 * n_dev
+
+
+def _mk(d, f, dtype=jnp.float32, seed=0):
+    g = _groups(NDEV)
+    sizes = (SIZES * ((g + len(SIZES) - 1) // len(SIZES)))[:g]
+    t = sum(sizes)
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    x = jax.random.normal(k1, (t, d), dtype)
+    wg = jax.random.normal(k2, (g, d, f), dtype)
+    wu = jax.random.normal(k3, (g, d, f), dtype)
+    return x, wg, wu, _offsets(sizes), sizes
+
+
+def _close(got, want, tol=1e-5):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * scale)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_ep_ragged_matmul_matches_oracle(dtype, tol):
+    x, w, _, offs, _ = _mk(24, 40, dtype)
+    got = ep_ragged_matmul(x, w, offs, mesh=_mesh(), axis="expert")
+    _close(got, ragged_matmul(x, w, offs), tol)
+
+
+def test_ep_exchange_roundtrips_rows_bitwise():
+    """With identity panels the GEMM is exact, so any discrepancy would be
+    the exchange's fault: gather -> window -> inverse exchange must restore
+    every row bit-for-bit."""
+    d = 32
+    x, _, _, offs, _ = _mk(d, d)
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32),
+                           (_groups(NDEV), d, d))
+    got = ep_ragged_matmul(x, eye, offs, mesh=_mesh(), axis="expert")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_ep_ragged_matmul_vjp_matches_oracle():
+    x, w, _, offs, _ = _mk(24, 40)
+    mesh = _mesh()
+
+    def loss_ep(x, w):
+        return jnp.sum(
+            ep_ragged_matmul(x, w, offs, mesh=mesh, axis="expert") ** 2)
+
+    def loss_1d(x, w):
+        return jnp.sum(ragged_matmul(x, w, offs) ** 2)
+
+    ge = jax.grad(loss_ep, argnums=(0, 1))(x, w)
+    g1 = jax.grad(loss_1d, argnums=(0, 1))(x, w)
+    _close(ge[0], g1[0])
+    _close(ge[1], g1[1])
+
+
+def test_ep_ragged_swiglu_fwd_and_vjp_match_oracle():
+    x, wg, wu, offs, _ = _mk(24, 40)
+    mesh = _mesh()
+    _close(ep_ragged_swiglu(x, wg, wu, offs, mesh=mesh, axis="expert"),
+           ragged_swiglu(x, wg, wu, offs))
+
+    def loss(f):
+        return lambda x, a, b: jnp.sum(f(x, a, b) ** 2)
+
+    ge = jax.grad(loss(lambda x, a, b: ep_ragged_swiglu(
+        x, a, b, offs, mesh=mesh, axis="expert")), argnums=(0, 1, 2))(
+            x, wg, wu)
+    g1 = jax.grad(loss(lambda x, a, b: ragged_swiglu(x, a, b, offs)),
+                  argnums=(0, 1, 2))(x, wg, wu)
+    for a, b in zip(ge, g1):
+        _close(a, b)
+
+
+def test_ep_ragged_moe_fused_fwd_and_vjp_match_oracle():
+    """The fused EP MoE pipeline (one d_model-wide exchange each way) vs the
+    single-device swiglu + down composition, forward and backward."""
+    x, wg, wu, offs, _ = _mk(24, 40)
+    wd = jax.random.normal(jax.random.fold_in(KEY, 9),
+                           (_groups(NDEV), 40, 24))
+    mesh = _mesh()
+
+    def ep(x, wg, wu, wd):
+        return ep_ragged_moe(x, wg, wu, wd, offs, mesh=mesh, axis="expert")
+
+    def oracle(x, wg, wu, wd):
+        return ragged_matmul(ragged_swiglu(x, wg, wu, offs), wd, offs)
+
+    _close(ep(x, wg, wu, wd), oracle(x, wg, wu, wd))
+    ge = jax.grad(lambda *a: jnp.sum(ep(*a) ** 2),
+                  argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    g1 = jax.grad(lambda *a: jnp.sum(oracle(*a) ** 2),
+                  argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(ge, g1):
+        _close(a, b)
+
+
+def test_ep_ragged_pallas_interpret_backend():
+    """The per-shard engine can be the Pallas ragged kernel too (interpret
+    mode off-TPU) — exercises shard_map_unchecked around pallas_call."""
+    x, w, _, offs, _ = _mk(24, 40)
+    got = ep_ragged_matmul(x, w, offs, mesh=_mesh(), axis="expert",
+                           backend="pallas_interpret")
+    _close(got, ragged_matmul(x, w, offs))
+
+
+def test_ep_ragged_under_jit_with_row_padding():
+    """T not divisible by the axis: the public wrapper pads/unpads, under
+    jit."""
+    x, w, _, offs, sizes = _mk(16, 24)
+    drop = 1 if sizes[-1] > 0 else 0
+    sizes2 = list(sizes)
+    sizes2[-1] -= drop
+    x2, offs2 = x[:sum(sizes2)], _offsets(sizes2)
+    mesh = _mesh()
+    got = jax.jit(lambda x, w, o: ep_ragged_matmul(
+        x, w, o, mesh=mesh, axis="expert"))(x2, w, offs2)
+    _close(got, ragged_matmul(x2, w, offs2))
+
+
+def test_ep_ragged_rejects_indivisible_experts():
+    x, w, _, offs, _ = _mk(16, 24)
+    with pytest.raises(ValueError):
+        ep_ragged_matmul(x, w[:_groups(NDEV) - 1], offs[:-1], mesh=_mesh(),
+                         axis="expert")
+
+
+def test_dist_batched_matmul_matches_local():
+    """The batched-family executor: expert dim sharded, shared operands
+    replicated, uneven batch counts padded."""
+    mesh = _mesh()
+    a = jax.random.normal(KEY, (NDEV, 16, 24))
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (NDEV, 24, 40))
+    _close(dist_batched_matmul(a, b, mesh=mesh, axis="expert"),
+           batched_matmul(a, b))
+    # uneven g + shared 2-D weight
+    a5 = jax.random.normal(KEY, (NDEV - 1, 16, 24))
+    w2 = jax.random.normal(jax.random.fold_in(KEY, 2), (24, 40))
+    _close(dist_batched_matmul(a5, w2, mesh=mesh, axis="expert"),
+           batched_matmul(a5, w2))
+
+
+def test_expert_axis_divisibility_rule():
+    """The EP-eligibility decision lives in ONE place: expert_axis returns
+    None when the expert count doesn't divide the axis, so the pricing side
+    (dryrun's ep_shards) and the executing side (moe._ep_axis) can never
+    disagree."""
+    from repro.launch.sharding import expert_axis
+    mesh = make_mesh((NDEV,), ("data",))
+    assert expert_axis(mesh, True, "dp", 2 * NDEV) == "data"
+    assert expert_axis(mesh, True, "dp", NDEV + 1) is None
+    assert expert_axis(mesh, True, "dp") == "data"      # E unknown: allowed
+    assert expert_axis(mesh, False, "dp", 2 * NDEV) is None
+    assert expert_axis(mesh, True, "nope", 2 * NDEV) is None
+
+
+def test_moe_ep_routing_matches_single_device():
+    """moe_mlp's ragged dispatch must route through the EP executors when
+    the DistContext exposes an expert axis — and agree with the
+    single-device ragged path, forward and backward."""
+    d, f, e = 32, 64, _groups(NDEV)
+    mesh = make_mesh((NDEV,), ("data",))
+    ctx = DistContext(mesh=mesh, dp_axes=("data",), model_axis="data",
+                      moe_ep_axis="data")
+    params = init_moe_params(jax.random.PRNGKey(0), d, f, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, d)) * 0.5
+
+    def loss(p, x, ep):
+        with (use_dist(ctx) if ep else use_dist(None)):
+            y, aux = moe_mlp(x, p, num_experts=e, top_k=2,
+                             compute_dtype=jnp.float32, dispatch="ragged")
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    assert float(loss(params, x, True)) == pytest.approx(
+        float(loss(params, x, False)), rel=1e-6)
+    g_ep = jax.grad(loss)(params, x, True)
+    g_1d = jax.grad(loss)(params, x, False)
+    for k in g_1d:
+        _close(g_ep[k], g_1d[k])

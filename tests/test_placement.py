@@ -1,0 +1,124 @@
+"""Placement-aware planning: the unified Plan hierarchy — the paper's
+strategy-selection rule (§IV-C) decided *jointly* with block sizes, for all
+three plan families, at mesh scale."""
+import pytest
+
+from repro.core.gemm import (DistPlan, estimate_ep, plan_batched_gemm,
+                             plan_distributed, plan_gemm, plan_moe_dispatch,
+                             plan_ragged_gemm)
+
+
+def test_unplaced_plans_carry_no_placement():
+    """No expert/mesh axis (num_shards == 1): every plan family returns the
+    single-device plan — placement None, t_total == the local estimate."""
+    for p in (plan_gemm(4096, 512, 64),
+              plan_batched_gemm(8, 256, 64, 128),
+              plan_ragged_gemm(8, 1024, 64, 128)):
+        assert p.placement is None
+        assert p.strategy == "single"
+        assert p.t_total == p.est.t_total
+
+
+def test_placed_plan_consistent_with_unplaced():
+    """num_shards=1 must be byte-identical to the legacy spelling, and a
+    placed plan's t_total must decompose as local x waste + collective."""
+    assert plan_ragged_gemm(16, 4096, 512, 1024) == \
+        plan_ragged_gemm(16, 4096, 512, 1024, num_shards=1)
+    assert plan_gemm(4096, 512, 64) == plan_gemm(4096, 512, 64, num_shards=1)
+    p = plan_ragged_gemm(64, 512, 2048, 2048, 2, 2, num_shards=8)
+    pl = p.placement
+    assert p.t_total == pytest.approx(
+        p.est.t_total * pl.waste + pl.t_collective)
+
+
+def test_dense_placed_strategy_crossover():
+    """Paper §IV-C via the unified API: K-parallel iff M and N are both
+    small and K is large."""
+    assert plan_gemm(2**20, 64, 32,
+                     num_shards=8).placement.strategy == "m_parallel"
+    p = plan_gemm(32, 2**20, 32, num_shards=8)
+    assert p.placement.strategy == "k_parallel"
+    assert p.placement.t_collective > 0      # the psum is priced
+    assert p.placement.ici_bytes > 0
+    assert plan_gemm(20480, 20480, 32,
+                     num_shards=8).placement.strategy == "m_parallel"
+
+
+def test_plan_distributed_is_the_placed_plan():
+    """The dense compat view and the unified spelling are the same plan."""
+    d = plan_distributed(32, 2**20, 32, 8)
+    p = plan_gemm(32, 2**20, 32, num_shards=8)
+    assert isinstance(d, DistPlan)
+    assert d.strategy == p.placement.strategy == "k_parallel"
+    assert d.t_total == p.t_total
+    assert d.t_collective == p.placement.t_collective
+    assert d.num_cores == 8
+    assert d.local.kernel_kwargs() == p.kernel_kwargs()
+
+
+def test_ragged_ep_only_when_exchange_amortized():
+    """expert_parallel must win exactly when the per-shard panel-traffic
+    saving (G -> G/nc panels) amortizes the all-to-all token exchange:
+    few tokens against many large expert panels (the MoE decode regime)."""
+    p = plan_ragged_gemm(64, 512, 2048, 2048, 2, 2, num_shards=8)
+    assert p.placement.strategy == "expert_parallel"
+    assert p.placement.t_collective > 0
+    assert p.placement.ici_bytes > 0
+    # Huge token stream against small panels: the exchange dwarfs the
+    # panel saving -> token-parallel (replicated panels, no collective).
+    p = plan_ragged_gemm(8, 1 << 20, 256, 256, 2, 2, num_shards=8)
+    assert p.placement.strategy == "m_parallel"
+    assert p.placement.t_collective == 0.0
+
+
+def test_batched_ep_only_when_exchange_amortized():
+    """Same crossover for the batched/grouped (capacity-mode) family."""
+    p = plan_batched_gemm(64, 64, 2048, 2048, 2, 2, "none", num_shards=8)
+    assert p.placement.strategy == "expert_parallel"
+    p = plan_batched_gemm(4, 1 << 18, 256, 256, 2, 2, "none", num_shards=8)
+    assert p.placement.strategy == "m_parallel"
+
+
+def test_estimate_ep_prices_like_the_psum():
+    """The a2a term follows the (nc-1)/nc send-fraction shape of the psum
+    pricing, scales with rows x width, and vanishes on one shard."""
+    e1 = estimate_ep(4096, 1024, 1)
+    assert e1.ici_bytes == 0.0 and e1.t_exchange == 0.0
+    e4 = estimate_ep(4096, 1024, 4, elt_bytes=2)
+    e8 = estimate_ep(4096, 1024, 8, elt_bytes=2)
+    assert 0 < e4.ici_bytes < e8.ici_bytes          # (nc-1)/nc grows
+    assert estimate_ep(8192, 1024, 8, elt_bytes=2).ici_bytes == \
+        pytest.approx(2 * e8.ici_bytes)
+    tot = e4 + e8
+    assert tot.ici_bytes == e4.ici_bytes + e8.ici_bytes
+    assert tot.t_exchange == e4.t_exchange + e8.t_exchange
+
+
+def test_plan_moe_dispatch_rows_and_placement():
+    """The roofline's single source of truth: exact dispatch-buffer rows per
+    mode, EP placement priced only when shards are requested."""
+    cap = plan_moe_dispatch(1024, 8, 2, 512, 1024, dispatch="capacity")
+    # E x capacity: int(1024*2*1.25/8) = 320, already a bf16-sublane multiple
+    assert cap.rows == 8 * 320
+    assert cap.placement is None
+    # min-capacity clamp (tiny decode batches still pay E x sublane slots)
+    tiny = plan_moe_dispatch(4, 8, 1, 512, 1024, dispatch="capacity",
+                             capacity_factor=1.0)
+    assert tiny.rows == 8 * 16
+    rag = plan_moe_dispatch(1024, 8, 2, 512, 1024, dispatch="ragged")
+    assert rag.rows == 2048 and rag.placement is None
+    ep = plan_moe_dispatch(1024, 8, 2, 512, 1024, dispatch="ragged",
+                           num_shards=8)
+    assert ep.rows == 2048
+    assert ep.placement.strategy == "expert_parallel"
+    assert ep.placement.t_collective > 0 and ep.placement.ici_bytes > 0
+    with pytest.raises(ValueError):
+        plan_moe_dispatch(64, 8, 1, 16, 16, dispatch="nope")
+
+
+def test_kernel_kwargs_unchanged_by_placement():
+    """The placed plan's tiling is the LOCAL shard's tiling: executors feed
+    kernel_kwargs() straight to the per-shard kernel."""
+    p = plan_ragged_gemm(64, 512, 2048, 2048, 2, 2, num_shards=8)
+    local = plan_ragged_gemm(8, 64, 2048, 2048, 2, 2)
+    assert p.kernel_kwargs() == local.kernel_kwargs()
