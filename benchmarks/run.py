@@ -11,8 +11,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from . import (common, cpu_compare, microkernel, moe_ep,  # noqa: E402
-               multi_core, roofline_table, scalability, single_core)
+from . import (autotune, common, cpu_compare, microkernel,  # noqa: E402
+               moe_ep, multi_core, roofline_table, scalability, single_core)
 
 SUITES = {
     "fig3": microkernel.run,
@@ -22,6 +22,9 @@ SUITES = {
     "fig7": cpu_compare.run,
     "roofline": roofline_table.run,
     "moe_ep": moe_ep.run,
+    # Replays the T1/T2/T3 sweep from the committed plan cache (no search)
+    # and appends a run record to results/BENCH_irregular.json.
+    "irregular": autotune.run,
 }
 
 

@@ -11,8 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gemm import (classify, matmul, plan_gemm, plan_distributed,
-                             tgemm_plan)
+from repro.core.gemm import (autotune_gemm, classify, clear_plan_store,
+                             load_plan_cache, matmul, plan_gemm,
+                             plan_distributed, save_plan_cache, tgemm_plan)
 
 key = jax.random.PRNGKey(0)
 
@@ -49,3 +50,30 @@ print("\nmatmul() matches reference; class =", classify(4096, 64, 32).value)
 #    dW = x.T @ dy is the paper's T2 shape).
 g = jax.grad(lambda a, b: jnp.sum(matmul(a, b) ** 2), argnums=1)(a, b)
 print("grad through matmul:", g.shape, "finite:", bool(jnp.isfinite(g).all()))
+
+# 6. Auto-tuning workflow (closed loop): the CMR model shortlists candidate
+#    tilings, the timing harness MEASURES them on this device, the winner
+#    goes to a persistent plan cache the planners consult first, and a
+#    calibration pass corrects the model for unmeasured shapes.
+#
+#    Offline sweep (writes results/plan_cache.json + BENCH_irregular.json):
+#        PYTHONPATH=src python -m benchmarks.autotune
+#    Serve warmup then loads the cache before compiling anything:
+#        PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-smoke \
+#            --plan-cache results/plan_cache.json
+import tempfile
+
+res = autotune_gemm(20000, 999, 31, top_k=3, repeats=2)
+print(f"\nmeasured search: analytic={res.t_analytic*1e6:.0f}us "
+      f"measured={res.t_measured*1e6:.0f}us mode={res.plan.mode}")
+assert res.t_measured <= res.t_analytic   # analytic argmin is candidate 0
+
+served = plan_gemm(20000, 999, 31)        # now served from the store
+print("plan_gemm mode after tuning:", served.mode)
+
+with tempfile.NamedTemporaryFile(suffix=".json") as f:
+    save_plan_cache(f.name)               # persist winners + calibration
+    clear_plan_store()
+    assert plan_gemm(20000, 999, 31).mode == "analytic"
+    print("reloaded entries:", load_plan_cache(f.name),
+          "-> mode:", plan_gemm(20000, 999, 31).mode)

@@ -21,6 +21,14 @@ Layering, bottom-up:
     ``batched_matmul`` / ``grouped_matmul`` / ``ragged_matmul`` /
     ``ragged_swiglu``): plan, run the Pallas ftIMM kernel (or the XLA
     engine off-TPU), custom VJPs whose backward GEMMs are planned too.
+  * ``plan_store`` / ``autotune`` — the measured auto-tuning loop (paper
+    pillar three): ``autotune_*`` time the CMR-shortlisted candidates on
+    the device through the ops layer (bypassing the plan cache), persist
+    winners in the on-disk store the planners consult first, and
+    ``calibrate`` fits the effective ``TpuSpec`` constants so unmeasured
+    shapes plan better too.  Every plan carries ``mode`` ∈ {analytic,
+    measured, cached}; ``plan_mode_stats`` reports which loop served the
+    executors.
   * ``distributed`` — the mesh executors consuming placements:
     ``dist_matmul`` (Alg. 4/5 dense), ``dist_batched_matmul`` (expert-dim
     sharded grouped GEMM) and ``ep_ragged_matmul`` / ``ep_ragged_swiglu`` /
@@ -36,11 +44,15 @@ from .cmr import (TPU_V5E, TpuSpec, EpEstimate, PlanEstimate, estimate,
 from .tuner import (GemmPlan, DistPlan, MoeDispatchPlan, Placement, Plan,
                     plan_gemm, plan_batched_gemm, plan_distributed,
                     plan_moe_dispatch, plan_ragged_gemm, tgemm_plan,
-                    clear_plan_cache)
+                    clear_plan_cache, effective_spec, plan_mode_stats)
 from .dispatch import (batched_matmul, grouped_matmul, matmul, project,
                        ragged_matmul, ragged_swiglu)
 from .distributed import (choose_strategy, dist_batched_matmul, dist_matmul,
                           ep_ragged_matmul, ep_ragged_moe, ep_ragged_swiglu)
+from .autotune import (TuneResult, autotune_batched_gemm, autotune_gemm,
+                       autotune_ragged_gemm, calibrate, clear_plan_store,
+                       load_plan_cache, save_plan_cache)
+from .plan_store import Calibration, PlanStore
 
 __all__ = [
     "GemmClass", "ShapeThresholds", "classify", "is_irregular",
@@ -51,8 +63,12 @@ __all__ = [
     "plan_gemm", "plan_batched_gemm", "plan_distributed",
     "plan_moe_dispatch", "plan_ragged_gemm", "tgemm_plan",
     "clear_plan_cache",
+    "effective_spec", "plan_mode_stats",
     "matmul", "batched_matmul", "grouped_matmul", "project",
     "ragged_matmul", "ragged_swiglu",
     "dist_matmul", "dist_batched_matmul", "choose_strategy",
     "ep_ragged_matmul", "ep_ragged_moe", "ep_ragged_swiglu",
+    "TuneResult", "autotune_gemm", "autotune_batched_gemm",
+    "autotune_ragged_gemm", "calibrate", "clear_plan_store",
+    "load_plan_cache", "save_plan_cache", "Calibration", "PlanStore",
 ]

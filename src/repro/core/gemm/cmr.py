@@ -58,6 +58,21 @@ class TpuSpec:
             return self.sublane_int8
         return self.sublane_bf16
 
+    def calibrated(self, flops_frac: float, bw_frac: float) -> "TpuSpec":
+        """The measured-effective view of this device: peak FLOP/s scaled by
+        the achievable fraction and HBM bandwidth by the effective fraction,
+        both fitted by ``autotune.calibrate`` from measured-vs-predicted
+        ratios.  Capacities, tile geometry and ICI stay nominal — only the
+        two roofline rates are what measurement corrects."""
+        from dataclasses import replace
+        return replace(
+            self,
+            name=f"{self.name}+cal",
+            peak_flops_bf16=self.peak_flops_bf16 * flops_frac,
+            peak_flops_fp32=self.peak_flops_fp32 * flops_frac,
+            hbm_bw=self.hbm_bw * bw_frac,
+        )
+
 
 TPU_V5E = TpuSpec()
 

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
-from .tuner import plan_batched_gemm, plan_gemm, plan_ragged_gemm
+from .tuner import (note_plan_use, plan_batched_gemm, plan_gemm,
+                    plan_ragged_gemm)
 
 _REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
 
@@ -53,6 +54,7 @@ def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
     in_bytes = jnp.dtype(a.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_gemm(m, k, n, in_bytes, out_bytes)
+    note_plan_use("dense", plan)
     return _ops.gemm(
         a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
         **plan.kernel_kwargs(),
@@ -95,6 +97,13 @@ def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
     out_dtype = jnp.dtype(out_dtype or a.dtype)
     backend = backend or _backend()
     if backend == "xla":
+        # Plan even though XLA ignores the blocks: keeps the plan cache an
+        # accurate census of the workload's shapes (as the batched/ragged
+        # paths already do) and the mode telemetry complete.
+        m, k, n = _mkn(trans, a.shape, b.shape)
+        note_plan_use("dense", plan_gemm(m, k, n,
+                                         jnp.dtype(a.dtype).itemsize,
+                                         out_dtype.itemsize))
         return _REF[trans](a, b, out_dtype)
     if backend == "pallas":
         return _pallas_fn(trans, out_dtype.name, False)(a, b)
@@ -139,6 +148,7 @@ def _run_planned_batched(a: jax.Array, b: jax.Array, trans: str, out_dtype,
     in_bytes = jnp.dtype(a.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_batched_gemm(g, m, k, n, in_bytes, out_bytes, shared)
+    note_plan_use("batched", plan)
     if backend == "xla":
         return _ref_batched(a, b, trans, out_dtype)
     return _ops.batched_gemm(
@@ -257,6 +267,7 @@ def _run_planned_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
     in_bytes = jnp.dtype(x.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_ragged_gemm(g, x.shape[0], k, n, in_bytes, out_bytes)
+    note_plan_use("ragged", plan)
     if backend == "xla":
         return _xla_ragged(x, w, offsets, trans, out_dtype)
     return _ops.ragged_gemm(
@@ -273,6 +284,7 @@ def _run_planned_ragged_dw(x: jax.Array, dy: jax.Array, offsets: jax.Array,
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_ragged_gemm(g, x.shape[0], x.shape[1], dy.shape[1],
                             in_bytes, out_bytes, ragged="k")
+    note_plan_use("ragged", plan)
     if backend == "xla":
         # Per-group outputs have no ragged_dot analogue on the pinned jax
         # (ragged_dot_general is newer); the masked per-group contraction
@@ -338,8 +350,10 @@ def _ragged_swiglu_fn(out_dtype_name: str, backend: str):
 
     def _plan(x, wg):
         in_bytes = jnp.dtype(x.dtype).itemsize
-        return plan_ragged_gemm(wg.shape[0], x.shape[0], wg.shape[1],
+        plan = plan_ragged_gemm(wg.shape[0], x.shape[0], wg.shape[1],
                                 wg.shape[2], in_bytes, out_dtype.itemsize)
+        note_plan_use("ragged", plan)
+        return plan
 
     @jax.custom_vjp
     def f(x, wg, wu, offsets):
@@ -386,6 +400,18 @@ def ragged_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
         raise ValueError(f"unknown gemm backend: {backend}")
     return _ragged_swiglu_fn(out_dtype.name, backend)(
         x, w_gate, w_up, group_offsets)
+
+
+def clear_dispatch_caches() -> None:
+    """Drop the custom-VJP'd dispatch function caches so the next call
+    re-traces against the current planner state (part of the single
+    ``tuner.clear_plan_cache`` reset: the cached closures re-consult the
+    planners at trace time, and stale jit entries keyed on old blocks are
+    unreachable once the planners re-decide)."""
+    _pallas_fn.cache_clear()
+    _batched_fn.cache_clear()
+    _ragged_fn.cache_clear()
+    _ragged_swiglu_fn.cache_clear()
 
 
 def project(x: jax.Array, w: jax.Array, *, out_dtype=None,

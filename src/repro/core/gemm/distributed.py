@@ -48,7 +48,7 @@ from ..compat import shard_map_unchecked as shard_map
 from .dispatch import (_backend, _float0_zeros, _run_planned_ragged,
                        _run_planned_ragged_dw, batched_matmul, matmul,
                        ragged_matmul, ragged_swiglu)
-from .tuner import plan_distributed
+from .tuner import note_plan_use, plan_distributed
 
 
 def _axes(axis) -> tuple[str, ...]:
@@ -94,7 +94,9 @@ def dist_matmul(
             f"(K = {k}) but b has shape {b.shape} (K = {k2})")
     nc = mesh.shape[axis]
     if strategy is None:
-        strategy = choose_strategy(m, k, n, nc, jnp.dtype(a.dtype).itemsize)
+        plan = plan_distributed(m, k, n, nc, jnp.dtype(a.dtype).itemsize)
+        note_plan_use("dist_dense", plan)
+        strategy = plan.strategy
     out_dtype = jnp.dtype(out_dtype or a.dtype)
 
     if strategy == "m_parallel":
@@ -437,6 +439,17 @@ def _ep_ragged_moe_fn(mesh: Mesh, axis: tuple, out_dtype_name: str,
 
     f.defvjp(fwd, bwd)
     return f
+
+
+def clear_executor_caches() -> None:
+    """Drop the bounded mesh-keyed executor caches.  Part of the single
+    ``tuner.clear_plan_cache`` reset: these closures re-plan their ragged
+    GEMMs at trace time, so an executor traced before a spec change /
+    plan-cache load would keep serving the stale blocking forever (the bug:
+    ``clear_plan_cache`` used to clear only the five planner LRUs)."""
+    _ep_ragged_fn.cache_clear()
+    _ep_ragged_swiglu_fn.cache_clear()
+    _ep_ragged_moe_fn.cache_clear()
 
 
 def _ep_prepare(x: jax.Array, w: jax.Array, mesh: Mesh, axis):

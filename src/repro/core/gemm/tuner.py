@@ -9,8 +9,9 @@ a unified *plan hierarchy*:
 
   * every planner (``plan_gemm`` / ``plan_batched_gemm`` /
     ``plan_ragged_gemm``) returns a ``Plan`` whose single-core tiling
-    (bm, bn, bk, dim_order) comes from enumerating aligned candidates and
-    scoring with ``cmr.estimate*`` under the VMEM budget;
+    (bm, bn, bk, dim_order) comes from ONE shared candidate enumeration
+    (``gemm_candidates`` / ``batched_candidates`` / ``ragged_candidates``)
+    scored with ``cmr.estimate*`` under the VMEM budget;
   * when asked to place the GEMM on a mesh (``num_shards > 1``), the same
     plan additionally carries a ``Placement`` — the cross-chip strategy
     (m_parallel / k_parallel / expert_parallel), the modeled ICI collective
@@ -22,6 +23,18 @@ a unified *plan hierarchy*:
     adjusting" happens once per (shape, dtype, placement request) and is
     free afterwards.
 
+Closing the paper's auto-tuning loop (pillar three), the analytic argmin is
+no longer the last word: each planner first consults the **persistent
+measured-plan store** (``plan_store`` — filled by ``autotune``'s on-device
+search over the CMR-shortlisted candidates) and every plan carries a
+``mode``:
+
+    "analytic"  — CMR argmin, never validated against hardware;
+    "measured"  — returned directly by ``autotune.autotune_*`` after timing
+                  the shortlist on the device;
+    "cached"    — served from the persistent store (a previous measured
+                  winner), re-estimated and re-validated at lookup.
+
 ``plan_distributed`` survives as the dense-only compat view (``DistPlan``);
 ``tgemm_plan`` reproduces the TGEMM strawman the paper compares against: one
 fixed micro-kernel/block configuration regardless of shape, with implicit
@@ -29,9 +42,11 @@ padding of N (its waste shows up in ``est.flops_padded`` / traffic).
 """
 from __future__ import annotations
 
+import collections
 import functools
 from dataclasses import dataclass, replace
 
+from . import plan_store
 from .cmr import (TPU_V5E, EpEstimate, PlanEstimate, TpuSpec, cdiv, ceil_to,
                   estimate, estimate_batched, estimate_ep, estimate_ragged)
 from .shapes import GemmClass, classify
@@ -60,10 +75,13 @@ class Placement:
 class Plan:
     """Base of the unified plan hierarchy: a local CMR estimate (``est``)
     plus an optional ``Placement``.  ``t_total`` composes them the same way
-    for every family: local time x imbalance waste + ICI collective."""
+    for every family: local time x imbalance waste + ICI collective.
+    ``mode`` records which tuning loop produced the plan (analytic CMR
+    argmin / measured on device / served from the persistent cache)."""
 
     est: PlanEstimate | None
     placement: Placement | None
+    mode: str
 
     @property
     def t_total(self) -> float:
@@ -89,6 +107,7 @@ class GemmPlan(Plan):
     gemm_class: GemmClass = GemmClass.REGULAR
     est: PlanEstimate | None = None
     placement: Placement | None = None
+    mode: str = "analytic"          # analytic | measured | cached
 
     def kernel_kwargs(self) -> dict:
         return dict(bm=self.bm, bn=self.bn, bk=self.bk,
@@ -103,6 +122,7 @@ class DistPlan(Plan):
     local: GemmPlan
     placement: Placement
     est: PlanEstimate | None = None
+    mode: str = "analytic"
 
     @property
     def num_cores(self) -> int:
@@ -136,26 +156,35 @@ def _bk_candidates(k: int) -> list[int]:
     return sorted(set(cands)) or [top]
 
 
-@functools.lru_cache(maxsize=8192)
-def plan_gemm(
-    m: int, k: int, n: int,
-    in_bytes: int = 4,
-    out_bytes: int = 4,
-    spec: TpuSpec = TPU_V5E,
-    *,
-    num_shards: int = 1,
-    axis: str | None = None,
-) -> GemmPlan:
-    """Pick the best tiling for C(M,N) += A(M,K) B(K,N) — and, when
-    ``num_shards > 1``, the cross-chip strategy too: the returned plan is the
-    per-shard tiling of the winning layout with its ``Placement`` attached
-    (m_parallel vs k_parallel, scored with the psum ICI term)."""
-    if num_shards > 1:
-        return _plan_dense_placed(m, k, n, num_shards, in_bytes, out_bytes,
-                                  spec, axis)
+def effective_spec(spec: TpuSpec) -> TpuSpec:
+    """Swap the stock default spec for its measured calibration, when the
+    persistent store carries one (``autotune.calibrate`` fits the achievable
+    flops fraction + effective HBM bandwidth from measured-vs-predicted
+    ratios).  Explicitly-passed custom specs are honored untouched — the
+    calibration corrects the *default* constants so shapes that were never
+    measured still plan against reality."""
+    if spec is not TPU_V5E:
+        return spec
+    cal = plan_store.get_store().calibration
+    if cal is None:
+        return spec
+    return spec.calibrated(cal.flops_frac, cal.bw_frac)
+
+
+# ---------------------------------------------------------------------------
+# Shared candidate enumeration — ONE generator per plan family, used by both
+# the analytic argmin below and autotune's measured shortlist.
+# ---------------------------------------------------------------------------
+
+def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
+                    out_bytes: int = 4,
+                    spec: TpuSpec = TPU_V5E) -> list[GemmPlan]:
+    """Every VMEM-feasible candidate tiling for the dense GEMM, scored by
+    the CMR model.  Never empty: when nothing fits the budget the degenerate
+    minimum tile is returned (and priced) as the only candidate."""
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
-    best: GemmPlan | None = None
+    cands: list[GemmPlan] = []
     for bm in _bm_candidates(m, sublane):
         for bn in _bn_candidates(n, spec.lane):
             for bk in _bk_candidates(k):
@@ -165,16 +194,104 @@ def plan_gemm(
                                  out_bytes=out_bytes, spec=spec)
                     if e.vmem_bytes > spec.vmem_budget:
                         continue
-                    cand = GemmPlan(bm=bm, bn=bn, bk=bk, dim_order=order,
-                                    gemm_class=cls, est=e)
-                    if best is None or _better(cand, best):
-                        best = cand
-    if best is None:  # degenerate: nothing fit; shrink to minimum tiles
+                    cands.append(GemmPlan(bm=bm, bn=bn, bk=bk,
+                                          dim_order=order, gemm_class=cls,
+                                          est=e))
+    if not cands:   # degenerate: nothing fit; shrink to minimum tiles
         bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
         e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
                      in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
-        best = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
-    return best
+        cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
+    return cands
+
+
+def batched_candidates(g: int, m: int, k: int, n: int, in_bytes: int = 4,
+                       out_bytes: int = 4, shared: str = "none",
+                       spec: TpuSpec = TPU_V5E) -> list[GemmPlan]:
+    """Candidate tilings for the batched/grouped GEMM (same enumeration as
+    the dense family; the batch-aware estimator decides whether a shared
+    panel earns cross-batch residency)."""
+    cls = classify(m, k, n)
+    sublane = spec.sublane(in_bytes)
+    shared_a, shared_b = shared == "a", shared == "b"
+    cands: list[GemmPlan] = []
+    for bm in _bm_candidates(m, sublane):
+        for bn in _bn_candidates(n, spec.lane):
+            for bk in _bk_candidates(k):
+                for order in ("mn", "nm"):
+                    e = estimate_batched(
+                        g, m, k, n, bm=bm, bn=bn, bk=bk, dim_order=order,
+                        shared_a=shared_a, shared_b=shared_b,
+                        in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+                    if e.vmem_bytes > spec.vmem_budget:
+                        continue
+                    cands.append(GemmPlan(bm=bm, bn=bn, bk=bk,
+                                          dim_order=order, gemm_class=cls,
+                                          est=e))
+    if not cands:
+        bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
+        e = estimate_batched(g, m, k, n, bm=bm, bn=bn, bk=bk,
+                             shared_a=shared_a, shared_b=shared_b,
+                             in_bytes=in_bytes, out_bytes=out_bytes,
+                             spec=spec)
+        cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
+    return cands
+
+
+def _ragged_tile_candidates(total: int, g: int, sublane: int) -> list[int]:
+    """Row-tile candidates for the ragged dimension.
+
+    Unlike the dense case, a smaller tile can win: every group boundary
+    wastes at most one tile of padded compute, so tiles near the *mean*
+    group size keep the boundary waste proportional to the distribution —
+    the whole point of pricing off actual sizes instead of the max."""
+    top = ceil_to(max(total, 1), sublane)
+    mean = max(total // max(g, 1), 1)
+    cands = {c for c in (64, 128, 256, 512) if c <= top}
+    cands.add(min(ceil_to(mean, sublane), 512, top))
+    if total < 64:
+        cands.add(top)
+    return sorted(cands)
+
+
+def ragged_candidates(g: int, total: int, k: int, n: int, in_bytes: int = 4,
+                      out_bytes: int = 4, ragged: str = "m",
+                      spec: TpuSpec = TPU_V5E) -> list[GemmPlan]:
+    """Candidate tilings for the ragged grouped GEMM: the ragged dimension's
+    tile list comes from the *distribution* (mean group size), the dense
+    dimensions from the shared dense lists.  No dim_order choice — the
+    ragged kernels fix their grid walk."""
+    sublane = spec.sublane(in_bytes)
+    mean = max(total // max(g, 1), 1)
+    if ragged == "m":
+        cls = classify(mean, k, n)
+        bms = _ragged_tile_candidates(total, g, sublane)
+        bns, bks = _bn_candidates(n, spec.lane), _bk_candidates(k)
+    elif ragged == "k":
+        cls = classify(k, mean, n)
+        bms = _bm_candidates(k, sublane)
+        bns, bks = _bn_candidates(n, spec.lane), \
+            _ragged_tile_candidates(total, g, sublane)
+    else:
+        raise ValueError(ragged)
+    cands: list[GemmPlan] = []
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
+                                    ragged=ragged, in_bytes=in_bytes,
+                                    out_bytes=out_bytes, spec=spec)
+                if e.vmem_bytes > spec.vmem_budget:
+                    continue
+                cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls,
+                                      est=e))
+    if not cands:
+        bm, bn, bk = min(128, ceil_to(max(total, 1), sublane)), 128, 128
+        e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
+                            ragged=ragged, in_bytes=in_bytes,
+                            out_bytes=out_bytes, spec=spec)
+        cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
+    return cands
 
 
 def _better(a: GemmPlan, b: GemmPlan) -> bool:
@@ -188,38 +305,336 @@ def _better(a: GemmPlan, b: GemmPlan) -> bool:
     return a.est.flops_padded < b.est.flops_padded
 
 
-def _plan_dense_placed(
-    m: int, k: int, n: int, nc: int,
-    in_bytes: int, out_bytes: int, spec: TpuSpec, axis: str | None,
-) -> GemmPlan:
+def argmin_plan(cands: list[GemmPlan]) -> GemmPlan:
+    """The analytic winner under the CMR model (with the paper's tie-break
+    rules) over one candidate list."""
+    best = cands[0]
+    for cand in cands[1:]:
+        if _better(cand, best):
+            best = cand
+    return best
+
+
+def shortlist(cands: list[GemmPlan], top_k: int) -> list[GemmPlan]:
+    """The model-pruned search space the measured auto-tuner times: the
+    analytic argmin first (so measured mode can never lose to it on the same
+    harness run), then the next-best candidates by modeled time."""
+    best = argmin_plan(cands)
+    ordered = [best] + sorted(
+        (c for c in cands if c is not best),
+        key=lambda c: (c.est.t_total, c.est.flops_padded))
+    seen: set[tuple] = set()
+    out: list[GemmPlan] = []
+    for c in ordered:
+        sig = (c.bm, c.bn, c.bk, c.nsplit, c.dim_order)
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(c)
+        if len(out) >= max(top_k, 1):
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Persistent-store consultation: cached measured winners are re-estimated
+# (fresh PlanEstimate at the requested spec) and re-validated — the cache
+# can suggest a tiling, never force a shape-invalid one.
+# ---------------------------------------------------------------------------
+
+def _plan_from_record(rec: dict, estimator, cls: GemmClass,
+                      spec: TpuSpec) -> GemmPlan | None:
+    try:
+        bm, bn, bk = int(rec["bm"]), int(rec["bn"]), int(rec["bk"])
+        nsplit = int(rec.get("nsplit", 1))
+        order = str(rec.get("dim_order", "mn"))
+    except (KeyError, TypeError, ValueError):
+        return None
+    if bm <= 0 or bn <= 0 or bk <= 0 or nsplit <= 0 \
+            or order not in ("mn", "nm") or bn % spec.lane:
+        return None
+    e = estimator(bm, bn, bk, order)
+    if e is None or e.vmem_bytes > spec.vmem_budget:
+        return None
+    return GemmPlan(bm=bm, bn=bn, bk=bk, nsplit=nsplit, dim_order=order,
+                    gemm_class=cls, est=e, mode="cached")
+
+
+def _cached_dense(m, k, n, in_bytes, out_bytes, spec) -> GemmPlan | None:
+    rec = plan_store.get_store().lookup(
+        plan_store.shape_key("dense", (m, k, n), in_bytes, out_bytes))
+    if rec is None:
+        return None
+
+    def est(bm, bn, bk, order):
+        return estimate(m, k, n, bm=bm, bn=bn, bk=bk, nsplit=1,
+                        dim_order=order, in_bytes=in_bytes,
+                        out_bytes=out_bytes, spec=spec)
+
+    return _plan_from_record(rec, est, classify(m, k, n), spec)
+
+
+def _cached_batched(g, m, k, n, in_bytes, out_bytes, shared,
+                    spec) -> GemmPlan | None:
+    rec = plan_store.get_store().lookup(
+        plan_store.shape_key("batched", (g, m, k, n), in_bytes, out_bytes,
+                             extra=f"shared:{shared}"))
+    if rec is None:
+        return None
+
+    def est(bm, bn, bk, order):
+        return estimate_batched(g, m, k, n, bm=bm, bn=bn, bk=bk,
+                                dim_order=order, shared_a=shared == "a",
+                                shared_b=shared == "b", in_bytes=in_bytes,
+                                out_bytes=out_bytes, spec=spec)
+
+    return _plan_from_record(rec, est, classify(m, k, n), spec)
+
+
+def _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged,
+                   spec) -> GemmPlan | None:
+    rec = plan_store.get_store().lookup(
+        plan_store.shape_key("ragged", (g, total, k, n), in_bytes, out_bytes,
+                             extra=f"ragged:{ragged}"))
+    if rec is None:
+        return None
+    mean = max(total // max(g, 1), 1)
+    cls = classify(mean, k, n) if ragged == "m" else classify(k, mean, n)
+
+    def est(bm, bn, bk, order):
+        if order != "mn":       # ragged kernels fix their grid walk
+            return None
+        return estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
+                               ragged=ragged, in_bytes=in_bytes,
+                               out_bytes=out_bytes, spec=spec)
+
+    return _plan_from_record(rec, est, cls, spec)
+
+
+def _cached_placed(family: str, dims: tuple, in_bytes: int, out_bytes: int,
+                   num_shards: int, options, spec: TpuSpec,
+                   extra: str = ""):
+    """Reconstruct a placed measured winner: find the stored strategy among
+    the analytic placement options (which carry the modeled collective/waste
+    terms) and re-validate the stored local tiling on that option's local
+    shape."""
+    rec = plan_store.get_store().lookup(
+        plan_store.shape_key(family, dims, in_bytes, out_bytes,
+                             num_shards=num_shards, extra=extra))
+    if rec is None:
+        return None
+    for opt in options:
+        if opt.placement.strategy != rec.get("strategy"):
+            continue
+        local = opt.cached_local(rec, in_bytes, out_bytes, spec)
+        if local is None:
+            return None
+        return replace(local, placement=opt.placement, mode="cached")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Placement options — the cross-chip layouts each family chooses between,
+# with their modeled ICI/waste terms.  Shared by the analytic placers, the
+# cached-plan reconstruction above, and autotune's measured placement search.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlacementOption:
+    """One candidate cross-chip layout: the per-shard local problem
+    (``local_dims`` in the family's positional order), the modeled
+    ``Placement``, and the margin a challenger must beat the preferred
+    (first, collective-free) option by — the paper's "clear modeled win"
+    rule for accepting a reduction/exchange strategy."""
+    family: str
+    local_dims: tuple
+    placement: Placement
+    margin: float = 1.0
+    extra: str = ""
+
+    def plan_local(self, in_bytes: int, out_bytes: int,
+                   spec: TpuSpec) -> GemmPlan:
+        if self.family == "dense":
+            return plan_gemm(*self.local_dims, in_bytes, out_bytes, spec)
+        if self.family == "batched":
+            return plan_batched_gemm(*self.local_dims, in_bytes, out_bytes,
+                                     self.extra, spec)
+        return plan_ragged_gemm(*self.local_dims, in_bytes, out_bytes,
+                                self.extra, spec)
+
+    def cached_local(self, rec: dict, in_bytes: int = 4, out_bytes: int = 4,
+                     spec: TpuSpec = TPU_V5E) -> GemmPlan | None:
+        """Re-validate a stored local tiling against this option's local
+        shape (fresh estimate under ``spec``); None if shape-invalid."""
+        if self.family == "dense":
+            m, k, n = self.local_dims
+
+            def est(bm, bn, bk, order):
+                return estimate(m, k, n, bm=bm, bn=bn, bk=bk,
+                                dim_order=order, in_bytes=in_bytes,
+                                out_bytes=out_bytes, spec=spec)
+
+            return _plan_from_record(rec, est, classify(m, k, n), spec)
+        if self.family == "batched":
+            g, m, k, n = self.local_dims
+
+            def est(bm, bn, bk, order):
+                return estimate_batched(
+                    g, m, k, n, bm=bm, bn=bn, bk=bk, dim_order=order,
+                    shared_a=self.extra == "a", shared_b=self.extra == "b",
+                    in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+
+            return _plan_from_record(rec, est, classify(m, k, n), spec)
+        g, total, k, n = self.local_dims
+        mean = max(total // max(g, 1), 1)
+        cls = classify(mean, k, n) if self.extra == "m" \
+            else classify(k, mean, n)
+
+        def est(bm, bn, bk, order):
+            if order != "mn":
+                return None
+            return estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
+                                   ragged=self.extra, in_bytes=in_bytes,
+                                   out_bytes=out_bytes, spec=spec)
+
+        return _plan_from_record(rec, est, cls, spec)
+
+
+def dense_placement_options(m: int, k: int, n: int, nc: int,
+                            in_bytes: int = 4, out_bytes: int = 4,
+                            spec: TpuSpec = TPU_V5E,
+                            axis: str | None = None) -> list[PlacementOption]:
     """M-parallel vs K-parallel across ``nc`` chips (paper Alg. 4 vs 5).
 
     M-parallel: shard M; B replicated; no steady-state collective but a load
     imbalance term when M doesn't fill the chips.  K-parallel: shard K;
-    partial C's reduced — a ring all-reduce of the fp32 partials over ICI.
-    """
+    partial C's reduced — a ring all-reduce of the fp32 partials over ICI —
+    so it must win by a clear modeled margin (paper §IV-C: K-parallel
+    "brings additional overhead of reduction")."""
     sublane = spec.sublane(in_bytes)
-
-    m_local = max(cdiv(m, nc), 1)
-    pm = plan_gemm(ceil_to(m_local, sublane), k, n, in_bytes, out_bytes, spec)
+    m_local = ceil_to(max(cdiv(m, nc), 1), sublane)
     waste_m = (cdiv(m, nc) * nc) / max(m, 1)
-    pm = replace(pm, placement=Placement("m_parallel", nc, axis=axis,
-                                         waste=waste_m))
+    opts = [PlacementOption(
+        "dense", (m_local, k, n),
+        Placement("m_parallel", nc, axis=axis, waste=waste_m))]
 
-    k_local = max(cdiv(k, nc), 1)
-    pk = plan_gemm(m, ceil_to(k_local, 128), n, in_bytes, out_bytes, spec)
+    k_local = ceil_to(max(cdiv(k, nc), 1), 128)
     ring = 2.0 * (nc - 1) / nc
     t_red = ring * (m * n * 4) / (spec.ici_bw_per_link * spec.ici_links)
-    pk = replace(pk, placement=Placement(
-        "k_parallel", nc, axis=axis, t_collective=t_red,
-        ici_bytes=ring * m * n * 4 * nc))
+    opts.append(PlacementOption(
+        "dense", (m, k_local, n),
+        Placement("k_parallel", nc, axis=axis, t_collective=t_red,
+                  ici_bytes=ring * m * n * 4 * nc),
+        margin=1.15))
+    return opts
 
-    # Paper §IV-C: K-parallel "brings additional overhead of reduction" and
-    # is reserved for shapes where M cannot occupy the cores — require a
-    # clear modeled win before accepting the reduction strategy.
-    if pm.t_total <= pk.t_total * 1.15:
-        return pm
-    return pk
+
+def batched_placement_options(g: int, m: int, k: int, n: int, nc: int,
+                              in_bytes: int = 4, out_bytes: int = 4,
+                              shared: str = "none", spec: TpuSpec = TPU_V5E,
+                              axis: str | None = None) -> list[PlacementOption]:
+    """Per-entry m_parallel (rows sharded, every shard streams all G panels)
+    vs expert_parallel (the G dim sharded, tokens all-to-all'd to their
+    owning shard and back, priced by ``estimate_ep``); EP must amortize its
+    exchange before it displaces the collective-free layout."""
+    sublane = spec.sublane(in_bytes)
+    m_l = ceil_to(max(cdiv(m, nc), 1), sublane)
+    waste_m = (cdiv(m, nc) * nc) / max(m, 1)
+    opts = [PlacementOption(
+        "batched", (g, m_l, k, n),
+        Placement("m_parallel", nc, axis=axis, waste=waste_m),
+        extra=shared)]
+
+    g_l = max(cdiv(g, nc), 1)
+    ex = estimate_ep(g * m, k, nc, elt_bytes=in_bytes, spec=spec) \
+        + estimate_ep(g * m, n, nc, elt_bytes=out_bytes, spec=spec)
+    waste_g = (g_l * nc) / max(g, 1)
+    opts.append(PlacementOption(
+        "batched", (g_l, m, k, n),
+        Placement("expert_parallel", nc, axis=axis,
+                  t_collective=ex.t_exchange, ici_bytes=ex.ici_bytes,
+                  waste=waste_g),
+        margin=1.1, extra=shared))
+    return opts
+
+
+def ragged_placement_options(g: int, total: int, k: int, n: int, nc: int,
+                             in_bytes: int = 4, out_bytes: int = 4,
+                             ragged: str = "m", spec: TpuSpec = TPU_V5E,
+                             axis: str | None = None) -> list[PlacementOption]:
+    """Token-parallel (rows sharded, weights replicated) vs expert-parallel
+    (groups sharded + the two all-to-all token-exchange legs).  The EP
+    backward dW (``ragged == "k"``) contracts rows that already live on the
+    owning shard after the forward exchange — expert-local, no collective,
+    no alternative."""
+    t_l = max(cdiv(total, nc), 1)
+    g_l = max(cdiv(g, nc), 1)
+    waste = (cdiv(total, nc) * nc) / max(total, 1)
+    if ragged == "k":
+        return [PlacementOption(
+            "ragged", (g_l, t_l, k, n),
+            Placement("expert_parallel", nc, axis=axis, waste=waste),
+            extra="k")]
+    opts = [PlacementOption(
+        "ragged", (g, t_l, k, n),
+        Placement("m_parallel", nc, axis=axis, waste=waste), extra="m")]
+    ex = estimate_ep(total, k, nc, elt_bytes=in_bytes, spec=spec) \
+        + estimate_ep(total, n, nc, elt_bytes=out_bytes, spec=spec)
+    opts.append(PlacementOption(
+        "ragged", (g_l, t_l, k, n),
+        Placement("expert_parallel", nc, axis=axis,
+                  t_collective=ex.t_exchange, ici_bytes=ex.ici_bytes,
+                  waste=waste),
+        margin=1.1, extra="m"))
+    return opts
+
+
+def _select_placed(scored: list[tuple[PlacementOption, GemmPlan]]) -> GemmPlan:
+    """Pick among placed candidates: the first (collective-free) option is
+    preferred; a challenger must beat it by its margin (the paper's "clear
+    modeled win" rule, shared with autotune's measured placement search)."""
+    best = scored[0][1]
+    for opt, cand in scored[1:]:
+        if cand.t_total * opt.margin < best.t_total:
+            best = cand
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Planners
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8192)
+def plan_gemm(
+    m: int, k: int, n: int,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    spec: TpuSpec = TPU_V5E,
+    *,
+    num_shards: int = 1,
+    axis: str | None = None,
+) -> GemmPlan:
+    """Pick the best tiling for C(M,N) += A(M,K) B(K,N) — and, when
+    ``num_shards > 1``, the cross-chip strategy too: the returned plan is the
+    per-shard tiling of the winning layout with its ``Placement`` attached
+    (m_parallel vs k_parallel, scored with the psum ICI term).  Consults the
+    persistent measured-plan store first (``mode == "cached"``); otherwise
+    falls back to the analytic CMR argmin."""
+    spec = effective_spec(spec)
+    if num_shards > 1:
+        opts = dense_placement_options(m, k, n, num_shards, in_bytes,
+                                       out_bytes, spec, axis)
+        cached = _cached_placed("dense", (m, k, n), in_bytes, out_bytes,
+                                num_shards, opts, spec)
+        if cached is not None:
+            return cached
+        scored = [(o, replace(o.plan_local(in_bytes, out_bytes, spec),
+                              placement=o.placement)) for o in opts]
+        return _select_placed(scored)
+    cached = _cached_dense(m, k, n, in_bytes, out_bytes, spec)
+    if cached is not None:
+        return cached
+    return argmin_plan(gemm_candidates(m, k, n, in_bytes, out_bytes, spec))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -236,9 +651,19 @@ def plan_distributed(
     whose num_shards=1 means "unplaced" — a degenerate single-core request
     still gets an (m_parallel, 1 shard, no collective) placement here, so
     ``.strategy`` / ``.num_cores`` always read."""
-    p = _plan_dense_placed(m, k, n, max(num_cores, 1), in_bytes, out_bytes,
-                           spec, None)
-    return DistPlan(local=p, placement=p.placement, est=p.est)
+    spec = effective_spec(spec)
+    nc = max(num_cores, 1)
+    opts = dense_placement_options(m, k, n, nc, in_bytes, out_bytes, spec,
+                                   None)
+    cached = _cached_placed("dense", (m, k, n), in_bytes, out_bytes, nc, opts,
+                            spec)
+    if cached is not None:
+        return DistPlan(local=cached, placement=cached.placement,
+                        est=cached.est, mode="cached")
+    scored = [(o, replace(o.plan_local(in_bytes, out_bytes, spec),
+                          placement=o.placement)) for o in opts]
+    p = _select_placed(scored)
+    return DistPlan(local=p, placement=p.placement, est=p.est, mode=p.mode)
 
 
 @functools.lru_cache(maxsize=8192)
@@ -265,78 +690,23 @@ def plan_batched_gemm(
     m_parallel (rows sharded, every shard streams all G panels) vs
     expert_parallel (the G dim sharded, tokens all-to-all'd to their owning
     shard and back, priced by ``estimate_ep``)."""
+    spec = effective_spec(spec)
     if num_shards > 1:
-        return _plan_batched_placed(g, m, k, n, num_shards, in_bytes,
-                                    out_bytes, shared, spec, axis)
-    cls = classify(m, k, n)
-    sublane = spec.sublane(in_bytes)
-    shared_a, shared_b = shared == "a", shared == "b"
-    best: GemmPlan | None = None
-    for bm in _bm_candidates(m, sublane):
-        for bn in _bn_candidates(n, spec.lane):
-            for bk in _bk_candidates(k):
-                for order in ("mn", "nm"):
-                    e = estimate_batched(
-                        g, m, k, n, bm=bm, bn=bn, bk=bk, dim_order=order,
-                        shared_a=shared_a, shared_b=shared_b,
-                        in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
-                    if e.vmem_bytes > spec.vmem_budget:
-                        continue
-                    cand = GemmPlan(bm=bm, bn=bn, bk=bk, dim_order=order,
-                                    gemm_class=cls, est=e)
-                    if best is None or _better(cand, best):
-                        best = cand
-    if best is None:  # degenerate: nothing fit; shrink to minimum tiles
-        bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
-        e = estimate_batched(g, m, k, n, bm=bm, bn=bn, bk=bk,
-                             shared_a=shared_a, shared_b=shared_b,
-                             in_bytes=in_bytes, out_bytes=out_bytes,
-                             spec=spec)
-        best = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
-    return best
-
-
-def _plan_batched_placed(
-    g: int, m: int, k: int, n: int, nc: int,
-    in_bytes: int, out_bytes: int, shared: str, spec: TpuSpec,
-    axis: str | None,
-) -> GemmPlan:
-    sublane = spec.sublane(in_bytes)
-    m_l = ceil_to(max(cdiv(m, nc), 1), sublane)
-    pm = plan_batched_gemm(g, m_l, k, n, in_bytes, out_bytes, shared, spec)
-    waste_m = (cdiv(m, nc) * nc) / max(m, 1)
-    pm = replace(pm, placement=Placement("m_parallel", nc, axis=axis,
-                                         waste=waste_m))
-
-    g_l = max(cdiv(g, nc), 1)
-    pe = plan_batched_gemm(g_l, m, k, n, in_bytes, out_bytes, shared, spec)
-    ex = estimate_ep(g * m, k, nc, elt_bytes=in_bytes, spec=spec) \
-        + estimate_ep(g * m, n, nc, elt_bytes=out_bytes, spec=spec)
-    waste_g = (g_l * nc) / max(g, 1)
-    pe = replace(pe, placement=Placement(
-        "expert_parallel", nc, axis=axis, t_collective=ex.t_exchange,
-        ici_bytes=ex.ici_bytes, waste=waste_g))
-    # EP must amortize its exchange before it displaces the collective-free
-    # token-parallel layout (same "clear win" rule as K-parallel).
-    if pe.t_total * 1.1 < pm.t_total:
-        return pe
-    return pm
-
-
-def _ragged_tile_candidates(total: int, g: int, sublane: int) -> list[int]:
-    """Row-tile candidates for the ragged dimension.
-
-    Unlike the dense case, a smaller tile can win: every group boundary
-    wastes at most one tile of padded compute, so tiles near the *mean*
-    group size keep the boundary waste proportional to the distribution —
-    the whole point of pricing off actual sizes instead of the max."""
-    top = ceil_to(max(total, 1), sublane)
-    mean = max(total // max(g, 1), 1)
-    cands = {c for c in (64, 128, 256, 512) if c <= top}
-    cands.add(min(ceil_to(mean, sublane), 512, top))
-    if total < 64:
-        cands.add(top)
-    return sorted(cands)
+        opts = batched_placement_options(g, m, k, n, num_shards, in_bytes,
+                                         out_bytes, shared, spec, axis)
+        cached = _cached_placed("batched", (g, m, k, n), in_bytes, out_bytes,
+                                num_shards, opts, spec,
+                                extra=f"shared:{shared}")
+        if cached is not None:
+            return cached
+        scored = [(o, replace(o.plan_local(in_bytes, out_bytes, spec),
+                              placement=o.placement)) for o in opts]
+        return _select_placed(scored)
+    cached = _cached_batched(g, m, k, n, in_bytes, out_bytes, shared, spec)
+    if cached is not None:
+        return cached
+    return argmin_plan(batched_candidates(g, m, k, n, in_bytes, out_bytes,
+                                          shared, spec))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -373,74 +743,23 @@ def plan_ragged_gemm(
     saving amortizes the exchange — few tokens against many/large expert
     panels, the MoE decode regime.
     """
+    spec = effective_spec(spec)
     if num_shards > 1:
-        return _plan_ragged_placed(g, total, k, n, num_shards, in_bytes,
-                                   out_bytes, ragged, spec, axis)
-    sublane = spec.sublane(in_bytes)
-    mean = max(total // max(g, 1), 1)
-    if ragged == "m":
-        cls = classify(mean, k, n)
-        bms = _ragged_tile_candidates(total, g, sublane)
-        bns, bks = _bn_candidates(n, spec.lane), _bk_candidates(k)
-    elif ragged == "k":
-        cls = classify(k, mean, n)
-        bms = _bm_candidates(k, sublane)
-        bns, bks = _bn_candidates(n, spec.lane), \
-            _ragged_tile_candidates(total, g, sublane)
-    else:
-        raise ValueError(ragged)
-    best: GemmPlan | None = None
-    for bm in bms:
-        for bn in bns:
-            for bk in bks:
-                e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
-                                    ragged=ragged, in_bytes=in_bytes,
-                                    out_bytes=out_bytes, spec=spec)
-                if e.vmem_bytes > spec.vmem_budget:
-                    continue
-                cand = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
-                if best is None or _better(cand, best):
-                    best = cand
-    if best is None:  # degenerate: nothing fit; shrink to minimum tiles
-        bm, bn, bk = min(128, ceil_to(max(total, 1), sublane)), 128, 128
-        e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
-                            ragged=ragged, in_bytes=in_bytes,
-                            out_bytes=out_bytes, spec=spec)
-        best = GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e)
-    return best
-
-
-def _plan_ragged_placed(
-    g: int, total: int, k: int, n: int, nc: int,
-    in_bytes: int, out_bytes: int, ragged: str, spec: TpuSpec,
-    axis: str | None,
-) -> GemmPlan:
-    t_l = max(cdiv(total, nc), 1)
-    g_l = max(cdiv(g, nc), 1)
-    waste = (cdiv(total, nc) * nc) / max(total, 1)
-    if ragged == "k":
-        # The EP backward dW contracts rows that already live on the owning
-        # shard after the forward exchange: expert-local, no collective.
-        pe = plan_ragged_gemm(g_l, t_l, k, n, in_bytes, out_bytes, ragged,
-                              spec)
-        return replace(pe, placement=Placement("expert_parallel", nc,
-                                               axis=axis, waste=waste))
-    # Token-parallel: rows sharded, every shard streams all G panels.
-    pm = plan_ragged_gemm(g, t_l, k, n, in_bytes, out_bytes, ragged, spec)
-    pm = replace(pm, placement=Placement("m_parallel", nc, axis=axis,
-                                         waste=waste))
-    # Expert-parallel: G/nc panels per shard + the two exchange legs.
-    pe = plan_ragged_gemm(g_l, t_l, k, n, in_bytes, out_bytes, ragged, spec)
-    ex = estimate_ep(total, k, nc, elt_bytes=in_bytes, spec=spec) \
-        + estimate_ep(total, n, nc, elt_bytes=out_bytes, spec=spec)
-    pe = replace(pe, placement=Placement(
-        "expert_parallel", nc, axis=axis, t_collective=ex.t_exchange,
-        ici_bytes=ex.ici_bytes, waste=waste))
-    # EP must amortize the exchange before it displaces the collective-free
-    # layout (paper §IV-C's "clear modeled win" rule for K-parallel, reused).
-    if pe.t_total * 1.1 < pm.t_total:
-        return pe
-    return pm
+        opts = ragged_placement_options(g, total, k, n, num_shards, in_bytes,
+                                        out_bytes, ragged, spec, axis)
+        cached = _cached_placed("ragged", (g, total, k, n), in_bytes,
+                                out_bytes, num_shards, opts, spec,
+                                extra=f"ragged:{ragged}")
+        if cached is not None:
+            return cached
+        scored = [(o, replace(o.plan_local(in_bytes, out_bytes, spec),
+                              placement=o.placement)) for o in opts]
+        return _select_placed(scored)
+    cached = _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged, spec)
+    if cached is not None:
+        return cached
+    return argmin_plan(ragged_candidates(g, total, k, n, in_bytes, out_bytes,
+                                         ragged, spec))
 
 
 @dataclass(frozen=True)
@@ -456,6 +775,7 @@ class MoeDispatchPlan(Plan):
     rows: int
     est: PlanEstimate | None = None
     placement: Placement | None = None
+    mode: str = "analytic"
 
 
 @functools.lru_cache(maxsize=8192)
@@ -477,6 +797,7 @@ def plan_moe_dispatch(
     hidden is produced and consumed on the shard owning the expert and
     never crosses the axis.  (``d_ff`` stays in the signature/cache key: it
     sizes the layer's GEMMs for the rows-based pricing consumers.)"""
+    spec = effective_spec(spec)
     if dispatch == "ragged":
         rows = t * top_k
     elif dispatch == "capacity":
@@ -508,7 +829,54 @@ def tgemm_plan(m: int, k: int, n: int,
     return GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=classify(m, k, n), est=e)
 
 
+# ---------------------------------------------------------------------------
+# Plan-mode telemetry: dispatch and the mesh executors report which tuning
+# loop (analytic / measured / cached) served each planned GEMM they trace.
+# ---------------------------------------------------------------------------
+
+PLAN_MODE_COUNTS: collections.Counter = collections.Counter()
+
+
+def note_plan_use(family: str, plan: Plan) -> None:
+    """Executors call this when a plan reaches an execution path (trace
+    time).  Keyed (family, mode) so ``plan_mode_stats`` shows whether the
+    workload is being served by measurements or by the unvalidated model."""
+    PLAN_MODE_COUNTS[(family, getattr(plan, "mode", "analytic"))] += 1
+
+
+def plan_mode_stats() -> dict[str, dict[str, int]]:
+    """{family: {mode: count}} census of plans that reached executors."""
+    out: dict[str, dict[str, int]] = {}
+    for (family, mode), count in sorted(PLAN_MODE_COUNTS.items()):
+        out.setdefault(family, {})[mode] = count
+    return out
+
+
 def clear_plan_cache() -> None:
+    """Reset EVERY plan-serving layer from one entry point: the five planner
+    LRUs, the in-memory persistent store view, the mode-telemetry counters,
+    the dispatch-level custom-VJP caches, and the bounded mesh-executor
+    caches in ``distributed`` — executors close over planner state when they
+    trace, so leaving them alive across a spec/cache reset serves stale
+    plans (the bug this replaces: only the five LRUs were cleared)."""
+    plan_gemm.cache_clear()
+    plan_batched_gemm.cache_clear()
+    plan_ragged_gemm.cache_clear()
+    plan_distributed.cache_clear()
+    plan_moe_dispatch.cache_clear()
+    PLAN_MODE_COUNTS.clear()
+    plan_store.reset_store()
+    # Executor layers import the tuner; import them lazily to avoid cycles.
+    from . import dispatch, distributed
+    dispatch.clear_dispatch_caches()
+    distributed.clear_executor_caches()
+
+
+def clear_planner_caches() -> None:
+    """Invalidate only the five planner LRUs — the minimal reset after the
+    persistent store gains entries/calibration (``autotune`` calls this so
+    the next ``plan_*`` consults the updated store; executors stay warm
+    because their traced plans are re-planned per shape signature)."""
     plan_gemm.cache_clear()
     plan_batched_gemm.cache_clear()
     plan_ragged_gemm.cache_clear()

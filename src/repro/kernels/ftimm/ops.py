@@ -43,6 +43,31 @@ def sublane(dtype) -> int:
     return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
 
 
+def bench(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` — the measured
+    auto-tuner's timing primitive.
+
+    Deliberately lives in the ops layer: candidate tilings are timed by
+    calling these block-parameterized wrappers DIRECTLY (explicit
+    bm/bn/bk), bypassing the planners and their caches entirely, so a
+    measurement can never be served by the plan cache it is trying to
+    validate.  The first call compiles (jit warms per static-block
+    signature); repeats are individually synced with ``block_until_ready``
+    and the median taken to shrug off scheduler noise."""
+    import time
+
+    jax.block_until_ready(fn(*args))            # compile + first warmup
+    for _ in range(max(warmup - 1, 0)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

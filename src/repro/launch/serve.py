@@ -1,18 +1,45 @@
 """Serving launcher: batched requests through the slot engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-smoke \
-        --requests 8 --max-new 16
+        --requests 8 --max-new 16 [--plan-cache results/plan_cache.json]
+
+Warmup loads the persistent measured-plan cache (``--plan-cache``, or
+``$REPRO_PLAN_CACHE``, or ``results/plan_cache.json`` when present) BEFORE
+the engine compiles anything, so every GEMM the serving graphs trace plans
+from measured winners (``mode == "cached"``) instead of the raw CMR model.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import pathlib
 
 import jax
 import numpy as np
 
 from ..configs import get_config
+from ..core.gemm import autotune, plan_mode_stats
 from ..models.model import init_params
 from ..serve.engine import Request, ServeEngine
+
+_DEFAULT_CACHE = pathlib.Path(__file__).resolve().parents[3] \
+    / "results" / "plan_cache.json"
+
+
+def load_plan_cache(path: str | None) -> int:
+    """Serve-warmup plan-cache load: explicit path > env > repo default.
+    Returns adopted entries (0 when nothing loadable — serving proceeds on
+    analytic plans, it never fails on a missing/corrupt cache)."""
+    path = path or os.environ.get(autotune.plan_store.ENV_VAR) \
+        or (str(_DEFAULT_CACHE) if _DEFAULT_CACHE.exists() else None)
+    if not path:
+        return 0
+    n = autotune.load_plan_cache(path)
+    cal = autotune.plan_store.get_store().calibration
+    print(f"plan cache: {n} measured plans from {path}"
+          + (f" (calibration flops_frac={cal.flops_frac:.3g} "
+               f"bw_frac={cal.bw_frac:.3g})" if cal else ""))
+    return n
 
 
 def main() -> None:
@@ -23,8 +50,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan-cache", default=None,
+                    help="persistent measured-plan cache to load at warmup")
     args = ap.parse_args()
 
+    load_plan_cache(args.plan_cache)
     cfg = get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, batch_slots=args.slots,
@@ -39,6 +69,7 @@ def main() -> None:
     engine.run(reqs)
     for r in reqs:
         print(f"req {r.rid}: {r.out_tokens}")
+    print("plan modes:", plan_mode_stats() or "(no planned GEMMs traced)")
     print("serving done")
 
 

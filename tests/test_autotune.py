@@ -1,0 +1,365 @@
+"""Measured auto-tuning: persistent plan cache round-trips, graceful
+degradation on bad cache files, measured plans never shape-invalid,
+interpret-mode timing-harness smoke, calibration tightening, and the
+one-entry-point cache reset (planners + dispatch + mesh executors)."""
+import importlib
+import json
+import os
+
+import pytest
+
+from repro.core.gemm import (autotune, dispatch, distributed, plan_store,
+                             tuner)
+from repro.core.gemm.cmr import TPU_V5E, estimate
+
+
+@pytest.fixture(autouse=True)
+def _clean_stores(monkeypatch):
+    monkeypatch.delenv(plan_store.ENV_VAR, raising=False)
+    tuner.clear_plan_cache()
+    yield
+    tuner.clear_plan_cache()
+
+
+def _tune_small(**kw):
+    kw.setdefault("top_k", 2)
+    kw.setdefault("repeats", 1)
+    kw.setdefault("engine", "xla")
+    kw.setdefault("max_elements", 1 << 16)
+    return autotune.autotune_gemm(20000, 999, 31, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+def test_measured_then_cached_roundtrip(tmp_path):
+    r = _tune_small()
+    assert r.plan.mode == "measured"
+    assert r.t_measured <= r.t_analytic          # analytic is candidate 0
+    served = tuner.plan_gemm(20000, 999, 31)
+    assert served.mode == "cached"
+    assert (served.bm, served.bn, served.bk) == \
+        (r.plan.bm, r.plan.bn, r.plan.bk)
+
+    path = tmp_path / "plans.json"
+    autotune.save_plan_cache(str(path))
+    autotune.clear_plan_store()
+    assert tuner.plan_gemm(20000, 999, 31).mode == "analytic"
+    assert autotune.load_plan_cache(str(path)) == 1
+    assert tuner.plan_gemm(20000, 999, 31).mode == "cached"
+
+
+def test_roundtrip_survives_fresh_process(tmp_path, monkeypatch):
+    """Write -> simulate a fresh process (importlib.reload of the store
+    module, which drops the in-memory view and re-arms the env auto-load)
+    -> the planner hits the persisted winner."""
+    path = tmp_path / "plans.json"
+    _tune_small()
+    autotune.save_plan_cache(str(path))
+
+    monkeypatch.setenv(plan_store.ENV_VAR, str(path))
+    importlib.reload(plan_store)
+    tuner.clear_planner_caches()
+    try:
+        served = tuner.plan_gemm(20000, 999, 31)
+        assert served.mode == "cached"
+    finally:
+        monkeypatch.delenv(plan_store.ENV_VAR)
+        importlib.reload(plan_store)
+
+
+def test_corrupt_cache_files_ignored(tmp_path):
+    cases = {
+        "missing.json": None,
+        "garbage.json": "{ not json !",
+        "not_dict.json": json.dumps([1, 2, 3]),
+        "bad_schema.json": json.dumps({"schema": 999, "device_kind":
+                                       plan_store.device_kind(),
+                                       "entries": {}}),
+        "bad_entries.json": json.dumps({"schema": 1, "device_kind":
+                                        plan_store.device_kind(),
+                                        "entries": "nope"}),
+    }
+    for name, blob in cases.items():
+        p = tmp_path / name
+        if blob is not None:
+            p.write_text(blob)
+        assert autotune.load_plan_cache(str(p)) == 0, name
+    # And the planners still work afterwards.
+    assert tuner.plan_gemm(256, 256, 32).mode == "analytic"
+
+
+def test_mismatched_device_kind_ignored(tmp_path):
+    r = _tune_small()
+    path = tmp_path / "plans.json"
+    autotune.save_plan_cache(str(path))
+    blob = json.loads(path.read_text())
+    blob["device_kind"] = "tpu_v9_imaginary"
+    path.write_text(json.dumps(blob))
+    autotune.clear_plan_store()
+    assert autotune.load_plan_cache(str(path)) == 0
+    assert tuner.plan_gemm(*r.dims).mode == "analytic"
+
+
+def test_cache_can_suggest_but_never_force_invalid_plans():
+    """A poisoned record (VMEM-busting blocks / misaligned lanes) must be
+    rejected at lookup: the planner falls back to analytic."""
+    m, k, n = 4096, 4096, 128
+    key = plan_store.shape_key("dense", (m, k, n), 4, 4)
+    st = plan_store.get_store()
+    st.put(key, {"bm": 8192, "bn": 8192, "bk": 8192, "dim_order": "mn"})
+    tuner.clear_planner_caches()
+    p = tuner.plan_gemm(m, k, n)
+    assert p.mode == "analytic"
+    assert p.est.vmem_bytes <= TPU_V5E.vmem_budget
+
+    st.put(key, {"bm": 128, "bn": 100, "bk": 128, "dim_order": "mn"})
+    tuner.clear_planner_caches()
+    assert tuner.plan_gemm(m, k, n).mode == "analytic"   # bn % lane != 0
+
+
+def test_measured_plan_is_analytic_valid():
+    """The measured winner always comes from the shared candidate
+    enumeration — i.e. a tiling the analytic model accepts as
+    shape-valid."""
+    for m, k, n in [(20000, 999, 31), (63, 4097, 130), (8, 8, 8)]:
+        r = autotune.autotune_gemm(m, k, n, top_k=3, repeats=1,
+                                   engine="xla", max_elements=1 << 16,
+                                   store=False)
+        sigs = {(c.bm, c.bn, c.bk, c.dim_order)
+                for c in tuner.gemm_candidates(m, k, n)}
+        assert (r.plan.bm, r.plan.bn, r.plan.bk, r.plan.dim_order) in sigs
+        assert r.plan.est.vmem_bytes <= TPU_V5E.vmem_budget
+
+
+def test_placed_measured_roundtrip():
+    r = autotune.autotune_gemm(1 << 14, 64, 32, num_shards=4, top_k=2,
+                               repeats=1, engine="xla",
+                               max_elements=1 << 14)
+    assert r.plan.mode == "measured"
+    assert r.plan.placement is not None
+    served = tuner.plan_gemm(1 << 14, 64, 32, num_shards=4)
+    assert served.mode == "cached"
+    assert served.placement.strategy == r.plan.placement.strategy
+
+
+def test_batched_and_ragged_roundtrip():
+    rb = autotune.autotune_batched_gemm(4, 256, 64, 128, top_k=2, repeats=1,
+                                        engine="xla", max_elements=1 << 16)
+    rr = autotune.autotune_ragged_gemm(4, 1024, 64, 128, top_k=2, repeats=1,
+                                       engine="xla", max_elements=1 << 16)
+    assert rb.plan.mode == rr.plan.mode == "measured"
+    assert tuner.plan_batched_gemm(4, 256, 64, 128).mode == "cached"
+    assert tuner.plan_ragged_gemm(4, 1024, 64, 128).mode == "cached"
+    # Different variant keys don't collide.
+    assert tuner.plan_ragged_gemm(4, 1024, 64, 128, ragged="k").mode == \
+        "analytic"
+
+
+# ---------------------------------------------------------------------------
+# Timing harness (interpret mode: plan-dependent timing without a TPU)
+# ---------------------------------------------------------------------------
+
+def test_timing_harness_interpret_smoke():
+    r = autotune.autotune_gemm(96, 64, 32, top_k=2, repeats=1,
+                               engine="pallas_interpret",
+                               max_elements=1 << 14, store=False)
+    assert r.engine == "pallas_interpret"
+    assert 0.0 < r.t_measured <= r.t_analytic
+    assert len(r.timed) <= 2 and all(t > 0 for *_sig, t in r.timed)
+
+
+def test_timing_harness_interpret_ragged_smoke():
+    r = autotune.autotune_ragged_gemm(2, 128, 32, 32, top_k=2, repeats=1,
+                                      engine="pallas_interpret",
+                                      max_elements=1 << 14, store=False)
+    assert 0.0 < r.t_measured <= r.t_analytic
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        autotune.autotune_gemm(64, 64, 64, engine="cuda")
+
+
+def test_unsupported_operand_width_rejected():
+    """int8 would silently time float32 operands (4x the bytes) and poison
+    both the stored winner and the calibration sample."""
+    with pytest.raises(ValueError, match="unsupported operand width"):
+        autotune.autotune_gemm(64, 64, 64, in_bytes=1, engine="xla",
+                               store=False)
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def _synthetic_samples(factor: float, shapes):
+    out = []
+    for m, k, n in shapes:
+        p = tuner.argmin_plan(tuner.gemm_candidates(m, k, n))
+        out.append((p.est, p.est.t_total * factor))
+    return out
+
+
+def test_calibration_tightens_prediction_on_heldout():
+    shapes = [(20000, 999, 31), (4096, 4096, 128), (63, 4097, 130),
+              (1 << 16, 64, 32), (32, 1 << 16, 32), (8192, 8192, 96)]
+    fit = _synthetic_samples(700.0, shapes[::2])
+    hold = _synthetic_samples(700.0, shapes[1::2])
+    cal = autotune.fit_calibration(fit)
+    before = autotune.prediction_error(hold)
+    after = autotune.prediction_error(hold, cal.flops_frac, cal.bw_frac)
+    assert after < before
+    assert after < 1.5      # constant-factor world: nearly exact recovery
+    assert abs(autotune.geomean_ratio(hold, cal.flops_frac, cal.bw_frac)
+               - 1.0) < 0.5
+
+
+def test_calibration_flows_into_default_planning(tmp_path):
+    r = _tune_small()
+    cal = autotune.calibrate([r])
+    spec = tuner.effective_spec(TPU_V5E)
+    assert spec is not TPU_V5E and spec.name.endswith("+cal")
+    assert spec.hbm_bw == pytest.approx(TPU_V5E.hbm_bw * cal.bw_frac)
+    # Persisted with the plans, reloaded with them.
+    path = tmp_path / "plans.json"
+    autotune.save_plan_cache(str(path))
+    autotune.clear_plan_store()
+    assert tuner.effective_spec(TPU_V5E) is TPU_V5E
+    autotune.load_plan_cache(str(path))
+    assert tuner.effective_spec(TPU_V5E).name.endswith("+cal")
+    # Custom specs are never silently rewritten.
+    custom = TPU_V5E.calibrated(1.0, 1.0)
+    assert tuner.effective_spec(custom) is custom
+
+
+def test_recalibration_composes_instead_of_collapsing():
+    """est_measured must be expressed in the RAW base spec even while a
+    calibration is installed — otherwise re-tuning under an active
+    calibration feeds already-corrected predictions back into the fit and
+    a re-calibration collapses to ~1.0, destroying the correction."""
+    r1 = _tune_small()
+    autotune.calibrate([r1])
+    r2 = _tune_small()      # tuned WITH the calibration installed
+    assert r2.est_measured.t_total == pytest.approx(
+        r1.est_measured.t_total, rel=1e-6)
+
+
+def test_reset_store_does_not_rearm_env_autoload(tmp_path, monkeypatch):
+    """clear_plan_store means EMPTY until an explicit load — the env
+    auto-load must not silently refill the clean slate."""
+    path = tmp_path / "plans.json"
+    _tune_small()
+    autotune.save_plan_cache(str(path))
+    monkeypatch.setenv(plan_store.ENV_VAR, str(path))
+    importlib.reload(plan_store)        # fresh process: auto-load armed
+    tuner.clear_planner_caches()
+    try:
+        assert tuner.plan_gemm(20000, 999, 31).mode == "cached"
+        autotune.clear_plan_store()
+        assert len(plan_store.get_store()) == 0
+        assert tuner.plan_gemm(20000, 999, 31).mode == "analytic"
+    finally:
+        monkeypatch.delenv(plan_store.ENV_VAR)
+        importlib.reload(plan_store)
+
+
+def test_calibrated_estimates_scale():
+    e0 = estimate(4096, 4096, 128, bm=256, bn=128, bk=512)
+    spec = TPU_V5E.calibrated(0.5, 0.25)
+    e1 = estimate(4096, 4096, 128, bm=256, bn=128, bk=512, spec=spec)
+    assert e1.t_compute == pytest.approx(e0.t_compute / 0.5)
+    assert e1.t_memory == pytest.approx(e0.t_memory / 0.25)
+
+
+# ---------------------------------------------------------------------------
+# Mode telemetry + the single-entry-point reset (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_plan_mode_stats_counts_dispatch():
+    import jax.numpy as jnp
+    from repro.core.gemm import matmul, plan_mode_stats
+    _tune_small()       # (20000, 999, 31) now cached
+    a = jnp.ones((20000, 999), jnp.float32)
+    b = jnp.ones((999, 31), jnp.float32)
+    matmul(a, b, backend="xla")
+    stats = plan_mode_stats()
+    assert stats.get("dense", {}).get("cached", 0) >= 1
+
+
+def test_clear_plan_cache_clears_every_layer():
+    import jax.numpy as jnp
+    from repro.core.gemm import matmul, ragged_matmul
+
+    _tune_small()
+    a = jnp.ones((64, 32), jnp.float32)
+    matmul(a, jnp.ones((32, 16), jnp.float32), backend="pallas_interpret")
+    x = jnp.ones((32, 16), jnp.float32)
+    w = jnp.ones((2, 16, 8), jnp.float32)
+    ragged_matmul(x, w, jnp.asarray([0, 16, 32]), backend="xla")
+
+    assert dispatch._pallas_fn.cache_info().currsize > 0
+    assert dispatch._ragged_fn.cache_info().currsize > 0
+    assert tuner.plan_gemm.cache_info().currsize > 0
+    assert len(plan_store.get_store()) > 0
+    assert tuner.PLAN_MODE_COUNTS
+
+    tuner.clear_plan_cache()
+    assert dispatch._pallas_fn.cache_info().currsize == 0
+    assert dispatch._ragged_fn.cache_info().currsize == 0
+    assert distributed._ep_ragged_fn.cache_info().currsize == 0
+    assert distributed._ep_ragged_swiglu_fn.cache_info().currsize == 0
+    assert distributed._ep_ragged_moe_fn.cache_info().currsize == 0
+    for f in (tuner.plan_gemm, tuner.plan_batched_gemm,
+              tuner.plan_ragged_gemm, tuner.plan_distributed,
+              tuner.plan_moe_dispatch):
+        assert f.cache_info().currsize == 0
+    assert len(plan_store.get_store()) == 0
+    assert not tuner.PLAN_MODE_COUNTS
+
+
+def test_clear_plan_cache_clears_mesh_executors():
+    """The satellite bug: stale mesh executors used to survive a cache
+    reset.  Populate one EP executor on a 1-device mesh and check the
+    single entry point drops it."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.compat import make_mesh
+    from repro.core.gemm import ep_ragged_matmul
+
+    if len(jax.devices()) < 1:      # pragma: no cover
+        pytest.skip("no devices")
+    mesh = make_mesh((1,), ("data",))
+    x = jnp.ones((32, 16), jnp.float32)
+    w = jnp.ones((2, 16, 8), jnp.float32)
+    out = ep_ragged_matmul(x, w, jnp.asarray([0, 16, 32]), mesh=mesh,
+                           axis="data", backend="xla")
+    assert out.shape == (32, 8)
+    assert distributed._ep_ragged_fn.cache_info().currsize == 1
+    tuner.clear_plan_cache()
+    assert distributed._ep_ragged_fn.cache_info().currsize == 0
+
+
+# ---------------------------------------------------------------------------
+# Shared candidate generator (satellite simplification)
+# ---------------------------------------------------------------------------
+
+def test_shortlist_leads_with_analytic_argmin():
+    cands = tuner.gemm_candidates(20000, 999, 31)
+    sl = tuner.shortlist(cands, 4)
+    best = tuner.argmin_plan(cands)
+    assert (sl[0].bm, sl[0].bn, sl[0].bk, sl[0].dim_order) == \
+        (best.bm, best.bn, best.bk, best.dim_order)
+    assert len(sl) <= 4
+    sigs = [(c.bm, c.bn, c.bk, c.nsplit, c.dim_order) for c in sl]
+    assert len(sigs) == len(set(sigs))      # deduped
+
+
+def test_planners_agree_with_shared_enumeration():
+    for m, k, n in [(2**20, 64, 32), (32, 2**20, 32), (20480, 20480, 32),
+                    (4096, 4096, 4096)]:
+        p = tuner.plan_gemm(m, k, n)
+        best = tuner.argmin_plan(tuner.gemm_candidates(m, k, n))
+        assert (p.bm, p.bn, p.bk, p.dim_order) == \
+            (best.bm, best.bn, best.bk, best.dim_order)
