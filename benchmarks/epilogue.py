@@ -1,0 +1,275 @@
+"""Fused-epilogue / zero-copy-edge benchmark leg.
+
+    PYTHONPATH=src python -m benchmarks.epilogue [--smoke] [--engine ...]
+    PYTHONPATH=src python -m benchmarks.run --only epilogue
+
+Two sweeps over the paper's T1/T2/T3 irregular shapes plus the registry
+models' MLP projections, on the measured-autotuning harness's scaled
+problems (jit + block_until_ready, median of repeats):
+
+  * **fused vs unfused** — the model-layer elementwise tail (silu +
+    residual add, the MLP gate / down-proj epilogue) as ONE pass over the
+    output vs one separate compiled pass PER op.  The GEMM itself is shared
+    (identical computation for both candidates), so it is timed once and
+    the tail variants are timed on its stored output — the per-shape
+    difference then isolates the pass-count mechanism instead of drowning
+    in multi-ms GEMM jitter.  On the TPU kernels the fused tail costs ZERO
+    extra passes (it rides the accumulator flush); the one-pass fused
+    timing here is the CPU upper bound of that.
+  * **masked vs padded** — the zero-copy in-kernel edge-tile policy vs the
+    legacy pad -> kernel -> slice wrapper on the same blocking, timed
+    end-to-end through ``autotune.time_dense_plans`` (the pad copies and
+    the enlarged padded GEMM are the difference being measured).
+
+Writes ``results/BENCH_epilogue.json`` (``*_smoke`` under ``--smoke``, the
+CI leg) recording per shape both times and the speedups; a run record keeps
+the trajectory across replays.  The committed baseline demonstrates
+fused <= unfused and masked <= padded per shape on the same run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+from dataclasses import replace
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+
+import jax  # noqa: E402
+
+from repro.core.gemm import autotune, plan_store, tuner  # noqa: E402
+from repro.core.gemm.shapes import classify  # noqa: E402
+from repro.kernels.ftimm.epilogue import Epilogue  # noqa: E402
+
+from .autotune import SMOKE_SHAPES, T_SHAPES, model_shapes  # noqa: E402
+
+RESULTS = _ROOT / "results"
+DEFAULT_OUT = RESULTS / "BENCH_epilogue.json"
+
+# The model layers' tail: the MLP down projection's residual add plus the
+# activation — two elementwise passes when unfused.
+EPI = Epilogue(activation="silu", residual=True)
+
+
+def _mlp_shapes():
+    return [s for s in model_shapes() if s[0].endswith("_mlp")]
+
+
+BUDGET_S = 3.0      # per-comparison interleaved-sampling wall-clock budget
+
+
+def _min_interleaved(thunks, repeats: int) -> list[float]:
+    """Per-thunk min over an interleaved sampling loop.
+
+    The candidates being compared differ by a *deterministic* amount of
+    work, so min is the right statistic under background load, and
+    alternating them in one loop makes load drift hit both distributions
+    equally instead of biasing whichever ran during a spike.  The sample
+    count adapts to the thunks' cost under a fixed wall-clock budget."""
+    import time
+
+    warm = []
+    for t in thunks:
+        t0 = time.perf_counter()
+        jax.block_until_ready(t())          # compile + warm
+        jax.block_until_ready(t())
+        warm.append(time.perf_counter() - t0)
+    per_round = max(sum(warm) / 2.0, 1e-6)
+    n = int(min(max(repeats * 20, 40), max(BUDGET_S / per_round, 8)))
+    best = [float("inf")] * len(thunks)
+    for _ in range(n):
+        for i, t in enumerate(thunks):
+            t0 = time.perf_counter()
+            jax.block_until_ready(t())
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def _fusion_times(m: int, k: int, n: int, repeats: int,
+                  max_elements: int) -> tuple[float, float, float]:
+    """(t_gemm, t_tail_fused, t_tail_unfused) on the scaled problem.
+
+    The GEMM is identical for both fusion candidates, so it is timed once;
+    the tail variants (one combined pass vs one pass per op) are timed on
+    its stored output.  Totals compose as t_gemm + tail."""
+    import jax.numpy as jnp
+
+    mm, kk, nn = autotune._scale_dense(m, k, n, max_elements)
+    a = autotune._rand((mm, kk), jnp.float32)
+    b = autotune._rand((kk, nn), jnp.float32, seed=1)
+    gemm_fn = autotune._jit_dense_ref("float32")
+    y = jax.block_until_ready(gemm_fn(a, b))
+    bias, res = autotune._epi_operands(EPI, mm, nn, a.dtype)
+    (t_gemm,) = _min_interleaved([lambda: gemm_fn(a, b)], repeats)
+
+    def tail_run(passes):
+        def run():
+            out = y
+            for p in passes:
+                out = p(out, bias, res)
+            return out
+        return run
+
+    one = autotune._tail_passes(EPI, jnp.float32, True)
+    per = autotune._tail_passes(EPI, jnp.float32, False)
+    t_tail_f, t_tail_u = _min_interleaved(
+        [tail_run(one), tail_run(per)], repeats)
+    # Tiny-output shapes (T2: M, N ~ 32..128) have ~10us tails; when the two
+    # candidates land within timer resolution of each other they are
+    # indistinguishable and recorded as a tie (the shared min) rather than
+    # pretending sub-microsecond precision.
+    if abs(t_tail_f - t_tail_u) < 2e-6:
+        t_tail_f = t_tail_u = min(t_tail_f, t_tail_u)
+    return t_gemm, t_tail_f, t_tail_u
+
+
+def _edge_times(m: int, k: int, n: int, base, repeats: int,
+                max_elements: int, engine: str) -> tuple[float, float]:
+    """(t_masked, t_padded) on the scaled problem via the autotune harness's
+    runners, interleaved.  When the (clamped) blocking already divides the
+    scaled shape the two candidates are physically identical — no pad, no
+    slice, no in-kernel mask emitted — and one measurement serves both (the
+    pallas runner signatures still differ, carrying ``edge``, so identity is
+    decided from the alignment itself)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ftimm.ops import _clamp_blocks
+
+    mm, kk, nn = autotune._scale_dense(m, k, n, max_elements)
+    a = autotune._rand((mm, kk), jnp.float32)
+    b = autotune._rand((kk, nn), jnp.float32, seed=1)
+    _, thunk_m = autotune._dense_runner(
+        engine, a, b, replace(base, edge="masked"), jnp.float32)
+    _, thunk_p = autotune._dense_runner(
+        engine, a, b, replace(base, edge="padded"), jnp.float32)
+    bm, bn, bk, _ = _clamp_blocks(mm, kk, nn, base.bm, base.bn, base.bk,
+                                  1, jnp.float32)
+    if mm % bm == 0 and nn % bn == 0 and kk % bk == 0:
+        (t,) = _min_interleaved([thunk_m], repeats)
+        return t, t
+    return tuple(_min_interleaved([thunk_m, thunk_p], repeats))
+
+
+def sweep(engine: str, repeats: int, max_elements: int, smoke: bool,
+          out_path: pathlib.Path) -> dict:
+    shapes = SMOKE_SHAPES if smoke else T_SHAPES + _mlp_shapes()
+    rows = []
+    for name, m, k, n in shapes:
+        base = tuner.argmin_plan(tuner.gemm_candidates(m, k, n))
+        t_g, t_tf, t_tu = _fusion_times(m, k, n, repeats, max_elements)
+        t_f, t_u = t_g + t_tf, t_g + t_tu
+        t_m, t_p = _edge_times(m, k, n, base, repeats, max_elements, engine)
+        rows.append({
+            "name": name, "class": classify(m, k, n).value,
+            "m": m, "k": k, "n": n,
+            "plan": {"bm": base.bm, "bn": base.bn, "bk": base.bk,
+                     "dim_order": base.dim_order},
+            "t_gemm_us": round(t_g * 1e6, 3),
+            "t_tail_fused_us": round(t_tf * 1e6, 3),
+            "t_tail_unfused_us": round(t_tu * 1e6, 3),
+            "t_fused_us": round(t_f * 1e6, 3),
+            "t_unfused_us": round(t_u * 1e6, 3),
+            "fused_speedup": round(t_u / max(t_f, 1e-12), 4),
+            "t_masked_us": round(t_m * 1e6, 3),
+            "t_padded_us": round(t_p * 1e6, 3),
+            "masked_speedup": round(t_p / max(t_m, 1e-12), 4),
+        })
+        print(f"{name}: fused={t_f*1e6:.1f}us unfused={t_u*1e6:.1f}us "
+              f"(x{rows[-1]['fused_speedup']:.2f}); "
+              f"masked={t_m*1e6:.1f}us padded={t_p*1e6:.1f}us "
+              f"(x{rows[-1]['masked_speedup']:.2f})")
+
+    fused_ok = all(r["t_fused_us"] <= r["t_unfused_us"] for r in rows)
+    masked_ok = all(r["t_masked_us"] <= r["t_padded_us"] for r in rows)
+    payload = _load_or_new(out_path)
+    payload.update({
+        "config": {"engine": engine, "repeats": repeats,
+                   "max_elements": max_elements,
+                   "epilogue": {"activation": EPI.activation,
+                                "residual": EPI.residual},
+                   "device_kind": plan_store.device_kind(),
+                   "backend": jax.default_backend(),
+                   "jax": jax.__version__},
+        "shapes": rows,
+    })
+    payload.setdefault("runs", []).append({
+        "date": time.strftime("%Y-%m-%d"),
+        "engine": engine, "n_shapes": len(rows),
+        "device_kind": plan_store.device_kind(),
+        "fused_never_slower": fused_ok,
+        "masked_never_slower": masked_ok,
+        "geomean_fused_speedup": _geomean([r["fused_speedup"] for r in rows]),
+        "geomean_masked_speedup": _geomean(
+            [r["masked_speedup"] for r in rows]),
+    })
+    out_path.parent.mkdir(exist_ok=True)
+    with open(out_path, "w") as fp:
+        json.dump(payload, fp, indent=1)
+    print(f"wrote {out_path} ({len(rows)} shapes); "
+          f"fused_never_slower={fused_ok} masked_never_slower={masked_ok}")
+    return payload
+
+
+def _geomean(xs) -> float:
+    import math
+    if not xs:
+        return 1.0
+    return round(math.exp(sum(math.log(max(x, 1e-12)) for x in xs)
+                          / len(xs)), 4)
+
+
+def _load_or_new(out_path: pathlib.Path) -> dict:
+    if out_path.exists():
+        try:
+            with open(out_path) as fp:
+                payload = json.load(fp)
+            if isinstance(payload, dict) and payload.get("bench") == \
+                    "epilogue":
+                return payload
+        except (OSError, ValueError):
+            pass
+    return {"bench": "epilogue", "schema": 1,
+            "created": time.strftime("%Y-%m-%d")}
+
+
+def run() -> None:
+    """The ``benchmarks/run.py --only epilogue`` leg: re-run the sweep with
+    the defaults and record each shape in the common CSV."""
+    from .common import record
+
+    payload = sweep(autotune.default_engine(), repeats=3,
+                    max_elements=1 << 20, smoke=False, out_path=DEFAULT_OUT)
+    for r in payload["shapes"]:
+        record(f"epilogue_{r['name']}", r["t_fused_us"],
+               f"fused_x{r['fused_speedup']};masked_x{r['masked_speedup']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 repeat, *_smoke output — the CI leg")
+    ap.add_argument("--engine", default=None,
+                    choices=["xla", "pallas", "pallas_interpret"])
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--max-elements", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        engine = args.engine or autotune.default_engine()
+        repeats = args.repeats or 1
+        max_elements = args.max_elements or (1 << 16)
+        out = pathlib.Path(args.out or RESULTS / "BENCH_epilogue_smoke.json")
+    else:
+        engine = args.engine or autotune.default_engine()
+        repeats = args.repeats or 5
+        max_elements = args.max_elements or (1 << 20)
+        out = pathlib.Path(args.out or DEFAULT_OUT)
+    sweep(engine, repeats, max_elements, args.smoke, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,9 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from . import (autotune, common, cpu_compare, microkernel,  # noqa: E402
-               moe_ep, multi_core, roofline_table, scalability, single_core)
+from . import (autotune, common, cpu_compare, epilogue,  # noqa: E402
+               microkernel, moe_ep, multi_core, roofline_table, scalability,
+               single_core)
 
 SUITES = {
     "fig3": microkernel.run,
@@ -25,6 +26,9 @@ SUITES = {
     # Replays the T1/T2/T3 sweep from the committed plan cache (no search)
     # and appends a run record to results/BENCH_irregular.json.
     "irregular": autotune.run,
+    # Fused-vs-unfused epilogue + masked-vs-padded edge sweep
+    # (results/BENCH_epilogue.json).
+    "epilogue": epilogue.run,
 }
 
 

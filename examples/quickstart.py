@@ -11,9 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gemm import (autotune_gemm, classify, clear_plan_store,
-                             load_plan_cache, matmul, plan_gemm,
-                             plan_distributed, save_plan_cache, tgemm_plan)
+from repro.core.gemm import (Epilogue, autotune_gemm, classify,
+                             clear_plan_store, load_plan_cache, matmul,
+                             matmul_swiglu, plan_gemm, plan_distributed,
+                             save_plan_cache, tgemm_plan)
 
 key = jax.random.PRNGKey(0)
 
@@ -77,3 +78,29 @@ with tempfile.NamedTemporaryFile(suffix=".json") as f:
     assert plan_gemm(20000, 999, 31).mode == "analytic"
     print("reloaded entries:", load_plan_cache(f.name),
           "-> mode:", plan_gemm(20000, 999, 31).mode)
+
+# 7. Fused epilogues + zero-copy edge tiles: the elementwise tail
+#    (bias / activation / residual / scale) rides the GEMM's fp32
+#    accumulator flush instead of separate passes over the output, and
+#    non-block-multiple shapes run UNPADDED (in-kernel edge-tile masks —
+#    note the deliberately awkward 4096+1 x 999 x 31 shape: no pad copy in,
+#    no slice out).  Everything differentiates.
+x = jax.random.normal(key, (4097, 999))
+w = jax.random.normal(jax.random.fold_in(key, 2), (999, 31))
+bias = jax.random.normal(jax.random.fold_in(key, 3), (31,))
+h = jax.random.normal(jax.random.fold_in(key, 4), (4097, 31))
+y = matmul(x, w, epilogue=Epilogue(bias=True, activation="gelu",
+                                   residual=True),
+           bias=bias, residual=h)
+np.testing.assert_allclose(
+    y, jax.nn.gelu((x @ w) + bias) + h, rtol=1e-3, atol=1e-3)
+print("\nfused epilogue matches reference on the unpadded path:", y.shape)
+
+# The dense MLP front half is ONE launch: silu(x@Wg) * (x@Wu).
+wg = jax.random.normal(jax.random.fold_in(key, 5), (999, 64))
+wu = jax.random.normal(jax.random.fold_in(key, 6), (999, 64))
+hh = matmul_swiglu(x, wg, wu)
+np.testing.assert_allclose(hh, jax.nn.silu(x @ wg) * (x @ wu),
+                           rtol=1e-3, atol=1e-3)
+plan = plan_gemm(4097, 999, 31, epi_ops=2)   # fusion is a planned decision
+print(f"plan for the fused layer: edge={plan.edge} fuse={plan.fuse}")

@@ -37,6 +37,7 @@ Layering, bottom-up:
     the fused ``ep_ragged_moe`` exchanges d_model-wide tokens once each way
     for the whole gate/up/down pipeline).
 """
+from ...kernels.ftimm.epilogue import Epilogue
 from .shapes import GemmClass, ShapeThresholds, classify, is_irregular
 from .cmr import (TPU_V5E, TpuSpec, EpEstimate, PlanEstimate, estimate,
                   estimate_batched, estimate_ep, estimate_ragged,
@@ -44,8 +45,10 @@ from .cmr import (TPU_V5E, TpuSpec, EpEstimate, PlanEstimate, estimate,
 from .tuner import (GemmPlan, DistPlan, MoeDispatchPlan, Placement, Plan,
                     plan_gemm, plan_batched_gemm, plan_distributed,
                     plan_moe_dispatch, plan_ragged_gemm, tgemm_plan,
-                    clear_plan_cache, effective_spec, plan_mode_stats)
-from .dispatch import (batched_matmul, grouped_matmul, matmul, project,
+                    clear_plan_cache, effective_spec, epilogue_stats,
+                    plan_mode_stats)
+from .dispatch import (batched_matmul, grouped_matmul, grouped_swiglu,
+                       matmul, matmul_swiglu, project, project_swiglu,
                        ragged_matmul, ragged_swiglu)
 from .distributed import (choose_strategy, dist_batched_matmul, dist_matmul,
                           ep_ragged_matmul, ep_ragged_moe, ep_ragged_swiglu)
@@ -63,8 +66,10 @@ __all__ = [
     "plan_gemm", "plan_batched_gemm", "plan_distributed",
     "plan_moe_dispatch", "plan_ragged_gemm", "tgemm_plan",
     "clear_plan_cache",
-    "effective_spec", "plan_mode_stats",
-    "matmul", "batched_matmul", "grouped_matmul", "project",
+    "effective_spec", "epilogue_stats", "plan_mode_stats",
+    "Epilogue",
+    "matmul", "batched_matmul", "grouped_matmul", "grouped_swiglu",
+    "matmul_swiglu", "project", "project_swiglu",
     "ragged_matmul", "ragged_swiglu",
     "dist_matmul", "dist_batched_matmul", "choose_strategy",
     "ep_ragged_matmul", "ep_ragged_moe", "ep_ragged_swiglu",

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
+from ...kernels.ftimm.epilogue import Epilogue
 from . import plan_store, tuner
 from .cmr import (TPU_V5E, PlanEstimate, TpuSpec, ceil_to, estimate,
                   estimate_batched, estimate_ragged)
@@ -226,23 +227,80 @@ def _clamp_blocks(plan: GemmPlan, bm_top: int, bn_top: int,
     return (min(plan.bm, bm_top), min(plan.bn, bn_top), min(plan.bk, bk_top))
 
 
-def _dense_runner(engine, a, b, plan, out_dtype):
+@functools.lru_cache(maxsize=None)
+def _jit_epilogue(epi: Epilogue, out_dtype_name: str):
+    """One compiled tail pass over a stored output."""
+    od = jnp.dtype(out_dtype_name)
+    return jax.jit(lambda y, bias, res: epi.apply(
+        y.astype(jnp.float32), bias=bias, residual=res).astype(od))
+
+
+def _tail_passes(epi: Epilogue, out_dtype, fused: bool):
+    """The tail as compiled passes: the FUSED candidate runs it as one pass
+    (its cost is an upper bound — on the TPU kernels it is zero, folded into
+    the accumulator flush; an XLA:CPU emitter quirk makes a tail inlined
+    into the dot jit run single-threaded, i.e. slower than a standalone
+    pass, so inline fusion is deliberately not what this harness times),
+    the UNFUSED candidate as one separate pass per op — the extra HBM
+    round-trips ``cmr._epilogue_bytes`` prices."""
+    specs = (epi,) if fused else epi.decompose()
+    return [_jit_epilogue(s, jnp.dtype(out_dtype).name) for s in specs]
+
+
+def _epi_operands(epi: Epilogue | None, m: int, n: int, dtype):
+    if epi is None:
+        return None, None
+    bias = _rand((n,), dtype, seed=2) if epi.bias else None
+    res = _rand((m, n), dtype, seed=3) if epi.residual else None
+    return bias, res
+
+
+def _dense_runner(engine, a, b, plan, out_dtype, epi: Epilogue | None = None):
     m, k = a.shape
     n = b.shape[1]
     sub = _ops.sublane(a.dtype)
     bm, bn, bk = _clamp_blocks(plan, ceil_to(m, sub), ceil_to(n, 128),
                                ceil_to(k, 128))
+    bias, res = _epi_operands(epi, m, n, a.dtype)
+    fused = epi is not None and plan.fuse
+
+    def with_tail(thunk, passes):
+        """Chain tail passes over the GEMM result (sliced to the true shape
+        first when the padded engine produced a padded output)."""
+        if not passes:
+            return thunk
+
+        def run():
+            y = thunk()[:m, :n]
+            for p in passes:
+                y = p(y, bias, res)
+            return y
+
+        return run
+
     if engine == "xla":
-        mp, kp, np_ = ceil_to(m, bm), ceil_to(k, bk), ceil_to(n, bn)
-        a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
-        b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+        if plan.edge == "padded":
+            mp, kp, np_ = ceil_to(m, bm), ceil_to(k, bk), ceil_to(n, bn)
+            a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+            b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+        else:
+            mp, kp, np_ = m, k, n
+            a_p, b_p = a, b
         fn = _jit_dense_ref(jnp.dtype(out_dtype).name)
-        return ("xla", mp, kp, np_), (lambda: fn(a_p, b_p))
+        passes = [] if epi is None else _tail_passes(epi, out_dtype, fused)
+        return (("xla", mp, kp, np_, epi, fused),
+                with_tail(lambda: fn(a_p, b_p), passes))
     interp = engine == "pallas_interpret"
-    sig = ("pl", bm, bn, bk, plan.dim_order, interp)
-    return sig, (lambda: _ops.gemm(
-        a, b, bm=bm, bn=bn, bk=bk, dim_order=plan.dim_order,
-        out_dtype=out_dtype, interpret=interp))
+    sig = ("pl", bm, bn, bk, plan.dim_order, plan.edge, interp, epi, fused)
+    kw = dict(bm=bm, bn=bn, bk=bk, dim_order=plan.dim_order,
+              out_dtype=out_dtype, interpret=interp, edge=plan.edge)
+    if fused:
+        # True in-kernel fusion: the tail rides the accumulator flush.
+        return sig, (lambda: _ops.gemm(a, b, epilogue=epi, bias=bias,
+                                       residual=res, **kw))
+    return sig, with_tail(lambda: _ops.gemm(a, b, **kw),
+                          [] if epi is None
+                          else _tail_passes(epi, out_dtype, False))
 
 
 def _batched_runner(engine, a, b, plan, out_dtype):
@@ -252,21 +310,25 @@ def _batched_runner(engine, a, b, plan, out_dtype):
     bm, bn, bk = _clamp_blocks(plan, ceil_to(m, sub), ceil_to(n, 128),
                                ceil_to(k, 128))
     if engine == "xla":
-        mp, kp, np_ = ceil_to(m, bm), ceil_to(k, bk), ceil_to(n, bn)
+        if plan.edge == "padded":
+            mp, kp, np_ = ceil_to(m, bm), ceil_to(k, bk), ceil_to(n, bn)
 
-        def pad(x, last2):
-            pads = [(0, 0)] * (x.ndim - 2) + \
-                [(0, t - s) for s, t in zip(x.shape[-2:], last2)]
-            return jnp.pad(x, pads)
+            def pad(x, last2):
+                pads = [(0, 0)] * (x.ndim - 2) + \
+                    [(0, t - s) for s, t in zip(x.shape[-2:], last2)]
+                return jnp.pad(x, pads)
 
-        a_p, b_p = pad(a, (mp, kp)), pad(b, (kp, np_))
+            a_p, b_p = pad(a, (mp, kp)), pad(b, (kp, np_))
+        else:
+            mp, kp, np_ = m, k, n
+            a_p, b_p = a, b
         fn = _jit_batched_ref(jnp.dtype(out_dtype).name, a.ndim, b.ndim)
         return ("xla", mp, kp, np_), (lambda: fn(a_p, b_p))
     interp = engine == "pallas_interpret"
-    sig = ("pl", bm, bn, bk, plan.dim_order, interp)
+    sig = ("pl", bm, bn, bk, plan.dim_order, plan.edge, interp)
     return sig, (lambda: _ops.batched_gemm(
         a, b, bm=bm, bn=bn, bk=bk, dim_order=plan.dim_order,
-        out_dtype=out_dtype, interpret=interp))
+        out_dtype=out_dtype, interpret=interp, edge=plan.edge))
 
 
 def _ragged_runner(engine, x, w, offsets, plan, out_dtype, ragged):
@@ -318,6 +380,7 @@ def _store_result(res: TuneResult, *, num_shards: int = 1,
     rec = {
         "bm": res.plan.bm, "bn": res.plan.bn, "bk": res.plan.bk,
         "nsplit": res.plan.nsplit, "dim_order": res.plan.dim_order,
+        "edge": res.plan.edge, "fuse": res.plan.fuse,
         "t_measured_us": round(res.t_measured * 1e6, 3),
         "t_analytic_us": round(res.t_analytic * 1e6, 3),
         "t_model_us": round(res.est_measured.t_total * 1e6, 6),
@@ -333,16 +396,19 @@ def time_dense_plans(m: int, k: int, n: int, plans, *,
                      in_bytes: int = 4, out_bytes: int = 4,
                      engine: str | None = None,
                      repeats: int = DEFAULT_REPEATS,
-                     max_elements: int = DEFAULT_MAX_ELEMENTS) -> list[float]:
+                     max_elements: int = DEFAULT_MAX_ELEMENTS,
+                     epilogue: Epilogue | None = None) -> list[float]:
     """Time an explicit list of dense plans on the harness (one shared
     scaled problem, physically-identical runs memoized) — the replay path:
-    no search, no store, just seconds per plan."""
+    no search, no store, just seconds per plan.  ``epilogue`` times each
+    plan WITH the elementwise tail, fused or separate per its ``fuse``."""
     engine = _check_engine(engine or default_engine())
     mm, kk, nn = _scale_dense(m, k, n, max_elements)
     in_dt, out_dt = _dtype(in_bytes), _dtype(out_bytes)
     a, b = _rand((mm, kk), in_dt), _rand((kk, nn), in_dt, seed=1)
     times, _ = _measure_shortlist(
-        list(plans), lambda c: _dense_runner(engine, a, b, c, out_dt),
+        list(plans),
+        lambda c: _dense_runner(engine, a, b, c, out_dt, epilogue),
         repeats)
     return times
 
@@ -364,12 +430,20 @@ def autotune_gemm(
     engine: str | None = None,
     max_elements: int = DEFAULT_MAX_ELEMENTS,
     store: bool = True,
+    epilogue: Epilogue | None = None,
 ) -> TuneResult:
     """Measured search for the dense GEMM: CMR shortlist -> time -> winner
     (``mode == "measured"``), persisted to the plan store unless
     ``store=False``.  ``num_shards > 1`` runs the hybrid placed search
-    (measured local GEMM per strategy + modeled collective)."""
+    (measured local GEMM per strategy + modeled collective).
+
+    ``epilogue`` widens the search to the fusion decision: candidates fork
+    on running the elementwise tail in the accumulator flush (``fuse=True``)
+    vs as separate compiled passes over the stored output, and every
+    candidate is timed WITH its tail — so the persisted winner records
+    whether fusion actually paid on this engine, not just in the model."""
     engine = _check_engine(engine or default_engine())
+    epi_ops = epilogue.num_ops if epilogue is not None else 0
     # Shortlist under the calibrated view (better pruning), but express
     # est_measured in the RAW base spec: calibration fractions are absolute
     # w.r.t. that spec, so fitting against already-calibrated predictions
@@ -384,20 +458,24 @@ def autotune_gemm(
             lambda dims: autotune_gemm(
                 *dims, in_bytes, out_bytes, spec, top_k=top_k,
                 repeats=repeats, engine=engine, max_elements=max_elements,
-                store=False),
+                store=False, epilogue=epilogue),
             num_shards=num_shards, engine=engine, store=store)
 
-    cands = tuner.gemm_candidates(m, k, n, in_bytes, out_bytes, spec)
+    cands = tuner.gemm_candidates(m, k, n, in_bytes, out_bytes, spec,
+                                  epi_ops)
     sl = tuner.shortlist(cands, top_k)
     mm, kk, nn = _scale_dense(m, k, n, max_elements)
     in_dt, out_dt = _dtype(in_bytes), _dtype(out_bytes)
     a, b = _rand((mm, kk), in_dt), _rand((kk, nn), in_dt, seed=1)
     times, widx = _measure_shortlist(
-        sl, lambda c: _dense_runner(engine, a, b, c, out_dt), repeats)
+        sl, lambda c: _dense_runner(engine, a, b, c, out_dt, epilogue),
+        repeats)
     winner = replace(sl[widx], mode="measured")
     est_meas = estimate(mm, kk, nn, bm=winner.bm, bn=winner.bn, bk=winner.bk,
                         dim_order=winner.dim_order, in_bytes=in_bytes,
-                        out_bytes=out_bytes, spec=base_spec)
+                        out_bytes=out_bytes, edge=winner.edge,
+                        epi_ops=epi_ops, epi_fused=winner.fuse,
+                        spec=base_spec)
     res = TuneResult(
         family="dense", dims=(m, k, n), measured_dims=(mm, kk, nn),
         key=plan_store.shape_key("dense", (m, k, n), in_bytes, out_bytes),
@@ -456,7 +534,7 @@ def autotune_batched_gemm(
         gg, mm, kk, nn, bm=winner.bm, bn=winner.bn, bk=winner.bk,
         dim_order=winner.dim_order, shared_a=shared == "a",
         shared_b=shared == "b", in_bytes=in_bytes, out_bytes=out_bytes,
-        spec=base_spec)
+        edge=winner.edge, spec=base_spec)
     res = TuneResult(
         family="batched", dims=(g, m, k, n), measured_dims=(gg, mm, kk, nn),
         key=plan_store.shape_key("batched", (g, m, k, n), in_bytes,

@@ -112,6 +112,26 @@ class PlanEstimate:
         return "compute" if self.t_compute >= self.t_memory else "memory"
 
 
+def _pad_copy_bytes(orig: int, padded: int, elt_bytes: int) -> float:
+    """HBM traffic of one materialized pad (or slice) copy: the original is
+    read once and the padded buffer written once (slicing is the mirror
+    image).  Zero when already aligned — the copy is elided."""
+    if padded == orig:
+        return 0.0
+    return float(orig + padded) * elt_bytes
+
+
+def _epilogue_bytes(m: int, n: int, out_bytes: int, epi_ops: int,
+                    epi_fused: bool) -> float:
+    """Post-GEMM elementwise tail traffic.  Fused into the accumulator flush
+    it is free (the output write already happens; bias/residual reads are
+    counted small enough to ignore at this altitude); run as ``epi_ops``
+    separate XLA passes each one re-reads and re-writes C through HBM."""
+    if epi_fused or epi_ops <= 0:
+        return 0.0
+    return float(epi_ops) * 2.0 * m * n * out_bytes
+
+
 def estimate(
     m: int, k: int, n: int,
     *,
@@ -120,6 +140,9 @@ def estimate(
     dim_order: str = "mn",
     in_bytes: int = 4,
     out_bytes: int = 4,
+    edge: str = "masked",
+    epi_ops: int = 0,
+    epi_fused: bool = True,
     spec: TpuSpec = TPU_V5E,
 ) -> PlanEstimate:
     """Model one tiling of C(M,N) += A(M,K) B(K,N) on one TPU core.
@@ -134,6 +157,12 @@ def estimate(
     whole inner sweep — the TPU analogue of the paper's "B panel cached in
     GSM" (Alg. 4): e.g. T1 (M >> K ~ N <= 128) with bk=K, bn=ceil(N,128),
     dim_order="nm" streams A exactly once and loads B exactly once.
+
+    ``edge="padded"`` prices the legacy pad -> kernel -> slice wrapper: each
+    unaligned operand pays a materialized pad copy and the output a slice
+    copy; ``"masked"`` (in-kernel edge tiles) pays nothing extra.  ``epi_ops``
+    is the post-GEMM elementwise tail length: fused (``epi_fused``) it rides
+    the accumulator flush for free, unfused each op re-reads + re-writes C.
     """
     mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk * nsplit)
     gm, gn, gk = mp // bm, np_ // bn, kp // (bk * nsplit)
@@ -158,6 +187,13 @@ def estimate(
         # here through HBM within a chip / ICI across chips).
         traffic_c += 2.0 * nsplit * mp * np_ * 4 + mp * np_ * 4
     hbm_bytes = traffic_a + traffic_b + traffic_c
+    if edge == "padded":
+        # Pad copies in (A, B) and the slice copy out, each a full HBM
+        # round-trip the masked path never makes.
+        hbm_bytes += _pad_copy_bytes(m * k, mp * kp, in_bytes)
+        hbm_bytes += _pad_copy_bytes(k * n, kp * np_, in_bytes)
+        hbm_bytes += _pad_copy_bytes(m * n, mp * np_, out_bytes)
+    hbm_bytes += _epilogue_bytes(m, n, out_bytes, epi_ops, epi_fused)
 
     frac = upper_bound_fraction(mp, np_, kp, spec)
     peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)
@@ -188,6 +224,9 @@ def estimate_batched(
     shared_b: bool = False,
     in_bytes: int = 4,
     out_bytes: int = 4,
+    edge: str = "masked",
+    epi_ops: int = 0,
+    epi_fused: bool = True,
     spec: TpuSpec = TPU_V5E,
 ) -> PlanEstimate:
     """Model one tiling of the batched GEMM C(g) += A(g) B(g), g in [0, G).
@@ -226,6 +265,15 @@ def estimate_batched(
     traffic_b = (kp * np_ * in_bytes) if b_resident else tb_entry * g
     traffic_c = g * mp * np_ * out_bytes
     hbm_bytes = traffic_a + traffic_b + traffic_c
+    if edge == "padded":
+        # Per-group pad copies (a shared 2-D operand pads once) + the
+        # per-group output slice copy.
+        hbm_bytes += _pad_copy_bytes(m * k, mp * kp, in_bytes) \
+            * (1 if shared_a else g)
+        hbm_bytes += _pad_copy_bytes(k * n, kp * np_, in_bytes) \
+            * (1 if shared_b else g)
+        hbm_bytes += _pad_copy_bytes(m * n, mp * np_, out_bytes) * g
+    hbm_bytes += _epilogue_bytes(g * m, n, out_bytes, epi_ops, epi_fused)
 
     frac = upper_bound_fraction(mp, np_, kp, spec)
     peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)

@@ -25,10 +25,22 @@ import jax.numpy as jnp
 
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
-from .tuner import (note_plan_use, plan_batched_gemm, plan_gemm,
-                    plan_ragged_gemm)
+from ...kernels.ftimm.epilogue import IDENTITY, Epilogue
+from .tuner import (note_epilogue, note_plan_use, plan_batched_gemm,
+                    plan_gemm, plan_ragged_gemm)
 
 _REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
+
+
+def _check_epi(epi: Epilogue, bias, residual) -> None:
+    if epi.bias != (bias is not None):
+        raise ValueError(
+            f"epilogue.bias={epi.bias} but bias operand "
+            f"{'missing' if bias is None else 'given'}")
+    if epi.residual != (residual is not None):
+        raise ValueError(
+            f"epilogue.residual={epi.residual} but residual operand "
+            f"{'missing' if residual is None else 'given'}")
 
 
 def _backend() -> str:
@@ -49,51 +61,99 @@ def _mkn(trans: str, a_shape, b_shape):
 
 
 def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
-                 interpret: bool) -> jax.Array:
+                 interpret: bool, epi: Epilogue = IDENTITY,
+                 bias=None, residual=None) -> jax.Array:
     m, k, n = _mkn(trans, a.shape, b.shape)
     in_bytes = jnp.dtype(a.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
-    plan = plan_gemm(m, k, n, in_bytes, out_bytes)
+    plan = plan_gemm(m, k, n, in_bytes, out_bytes, epi_ops=epi.num_ops)
     note_plan_use("dense", plan)
-    return _ops.gemm(
-        a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
-        **plan.kernel_kwargs(),
-    )
+    if epi.is_identity:
+        return _ops.gemm(
+            a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
+            **plan.kernel_kwargs(),
+        )
+    note_epilogue("dense", plan.fuse)
+    if plan.fuse:
+        return _ops.gemm(
+            a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
+            epilogue=epi, bias=bias, residual=residual,
+            **plan.kernel_kwargs(),
+        )
+    # The plan declined fusion (a measured winner can): identity kernel +
+    # the tail as its own pass, exactly what the tuner priced.
+    z = _ops.gemm(a, b, trans=trans, out_dtype=jnp.float32,
+                  interpret=interpret, **plan.kernel_kwargs())
+    return epi.apply(z, bias=bias, residual=residual).astype(out_dtype)
 
 
 @functools.lru_cache(maxsize=None)
-def _pallas_fn(trans: str, out_dtype_name: str, interpret: bool):
-    """Build the custom-VJP'd Pallas matmul for one (trans, dtype) combo."""
+def _pallas_fn(trans: str, out_dtype_name: str, interpret: bool,
+               epi: Epilogue = IDENTITY):
+    """Build the custom-VJP'd Pallas matmul for one (trans, dtype, epilogue)
+    combo.  ``extras`` is the tuple of present epilogue operands (bias
+    and/or residual, in that order) so the custom_vjp signature stays fixed
+    per spec.  The backward rematerializes the pre-epilogue fp32 GEMM (the
+    same remat the ragged SwiGLU backward does), pulls the elementwise
+    tail's cotangents out with ``jax.vjp`` (exact for every activation), and
+    runs the two planned backward GEMMs on the pre-activation cotangent."""
     out_dtype = jnp.dtype(out_dtype_name)
 
     @jax.custom_vjp
-    def f(a, b):
-        return _run_planned(a, b, trans, out_dtype, interpret)
+    def f(a, b, extras):
+        bias, residual = epi.unpack(extras)
+        return _run_planned(a, b, trans, out_dtype, interpret, epi,
+                            bias, residual)
 
-    def fwd(a, b):
-        return f(a, b), (a, b)
+    def fwd(a, b, extras):
+        return f(a, b, extras), (a, b, extras)
 
     def bwd(res, g):
-        a, b = res
+        a, b, extras = res
         run = lambda x, y, t, dt: _run_planned(x, y, t, dt, interpret)  # noqa: E731
+        if epi.is_identity:
+            dz, d_extras = g, ()
+        else:
+            z = run(a, b, trans, jnp.float32)       # remat pre-activation
+
+            def epi_fn(z_, *extras_):
+                bias_, residual_ = epi.unpack(extras_)
+                return epi.apply(z_, bias=bias_, residual=residual_)
+
+            _, epi_vjp = jax.vjp(epi_fn, z, *extras)
+            grads = epi_vjp(g.astype(jnp.float32))
+            dz = grads[0].astype(a.dtype)
+            d_extras = tuple(d.astype(x.dtype)
+                             for d, x in zip(grads[1:], extras))
         if trans == "nn":          # y = a @ b
-            da = run(g, b, "nt", a.dtype)
-            db = run(a, g, "tn", b.dtype)   # T2: K = tokens >> M ~ N
+            da = run(dz, b, "nt", a.dtype)
+            db = run(a, dz, "tn", b.dtype)  # T2: K = tokens >> M ~ N
         elif trans == "tn":        # y = a.T @ b, a: (K, M)
-            da = run(b, g, "nt", a.dtype)   # (K,N)@(N,M) -> (K,M)
-            db = run(a, g, "nn", b.dtype)   # (K,M)@(M,N) -> (K,N)
+            da = run(b, dz, "nt", a.dtype)  # (K,N)@(N,M) -> (K,M)
+            db = run(a, dz, "nn", b.dtype)  # (K,M)@(M,N) -> (K,N)
         else:                      # y = a @ b.T, b: (N, K)
-            da = run(g, b, "nn", a.dtype)   # (M,N)@(N,K) -> (M,K)
-            db = run(g, a, "tn", b.dtype)   # g.T @ a -> (N,K)
-        return da, db
+            da = run(dz, b, "nn", a.dtype)  # (M,N)@(N,K) -> (M,K)
+            db = run(dz, a, "tn", b.dtype)  # g.T @ a -> (N,K)
+        return da, db, d_extras
 
     f.defvjp(fwd, bwd)
     return f
 
 
 def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
-           out_dtype=None, backend: str | None = None) -> jax.Array:
-    """2-D GEMM through the ftIMM planner. fp32 accumulation always."""
+           out_dtype=None, backend: str | None = None,
+           epilogue: Epilogue | None = None,
+           bias: jax.Array | None = None,
+           residual: jax.Array | None = None) -> jax.Array:
+    """2-D GEMM through the ftIMM planner. fp32 accumulation always.
+
+    ``epilogue`` fuses the elementwise tail (bias add / activation /
+    residual add / scale, ``kernels.ftimm.Epilogue``) into the accumulator
+    flush on the Pallas path — and into the same jit on the XLA fallback, so
+    CPU/TPU stay comparable — instead of separate XLA passes over the stored
+    output.  ``bias`` is (N,), ``residual`` (M, N); both differentiable."""
+    epi = IDENTITY if epilogue is None else epilogue
+    _check_epi(epi, bias, residual)
     out_dtype = jnp.dtype(out_dtype or a.dtype)
     backend = backend or _backend()
     if backend == "xla":
@@ -103,12 +163,17 @@ def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
         m, k, n = _mkn(trans, a.shape, b.shape)
         note_plan_use("dense", plan_gemm(m, k, n,
                                          jnp.dtype(a.dtype).itemsize,
-                                         out_dtype.itemsize))
-        return _REF[trans](a, b, out_dtype)
-    if backend == "pallas":
-        return _pallas_fn(trans, out_dtype.name, False)(a, b)
-    if backend == "pallas_interpret":
-        return _pallas_fn(trans, out_dtype.name, True)(a, b)
+                                         out_dtype.itemsize,
+                                         epi_ops=epi.num_ops))
+        if epi.is_identity:
+            return _REF[trans](a, b, out_dtype)
+        note_epilogue("dense", True)    # one jit: XLA fuses the tail
+        z = _REF[trans](a, b, jnp.float32)
+        return epi.apply(z, bias=bias, residual=residual).astype(out_dtype)
+    if backend in ("pallas", "pallas_interpret"):
+        extras = tuple(x for x in (bias, residual) if x is not None)
+        return _pallas_fn(trans, out_dtype.name,
+                          backend == "pallas_interpret", epi)(a, b, extras)
     raise ValueError(f"unknown gemm backend: {backend}")
 
 
@@ -153,7 +218,7 @@ def _run_planned_batched(a: jax.Array, b: jax.Array, trans: str, out_dtype,
         return _ref_batched(a, b, trans, out_dtype)
     return _ops.batched_gemm(
         a, b, bm=plan.bm, bn=plan.bn, bk=plan.bk, dim_order=plan.dim_order,
-        trans=trans, out_dtype=out_dtype,
+        trans=trans, out_dtype=out_dtype, edge=plan.edge,
         interpret=(backend == "pallas_interpret"),
     )
 
@@ -227,6 +292,144 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, trans: str = "nn",
     sites read as what they are (experts, not batches)."""
     return batched_matmul(x, w, trans=trans, out_dtype=out_dtype,
                           backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Fused dense / grouped SwiGLU pairs — one kernel launch for gate + up +
+# silu(gate)*up, mirroring the ragged ragged_swiglu entry point.
+# ---------------------------------------------------------------------------
+
+def _swiglu_bwd_products(run, x, wg, wu, a, b, g):
+    """Shared SwiGLU backward: given the rematerialized fp32 pre-activations
+    ``a = x@Wg`` / ``b = x@Wu`` and the output cotangent ``g``, produce
+    (dx, dwg, dwu) with every GEMM planned through ``run(x, y, trans,
+    out_dtype)``."""
+    sg = jax.nn.sigmoid(a)
+    g32 = g.astype(jnp.float32)
+    da = (g32 * b * sg * (1.0 + a * (1.0 - sg))).astype(x.dtype)
+    db = (g32 * a * sg).astype(x.dtype)
+    dx = (run(da, wg, "nt", jnp.float32)
+          + run(db, wu, "nt", jnp.float32)).astype(x.dtype)
+    dwg = run(x, da, "tn", wg.dtype)
+    dwu = run(x, db, "tn", wu.dtype)
+    return dx, dwg, dwu
+
+
+def _make_swiglu_fn(out_dtype, backend: str, family: str, plan_fn, run_fn,
+                    fused_kernel):
+    """Shared custom-VJP scaffolding for the fused SwiGLU pairs.
+
+    ``plan_fn(x, wg)`` plans + records telemetry, ``run_fn(p, q, trans,
+    out_dtype)`` is the family's planned GEMM for the unfused forward and
+    every backward product, ``fused_kernel(x, wg, wu, plan)`` the
+    one-launch forward.  Backward rematerializes the two fp32
+    pre-activations (the usual fused-epilogue remat — exactly like the
+    ragged SwiGLU backward), then two planned "nt" dX products and two
+    planned T2 dW products."""
+
+    @jax.custom_vjp
+    def f(x, wg, wu):
+        plan = plan_fn(x, wg)
+        fused = backend != "xla" and plan.fuse
+        note_epilogue(family, backend == "xla" or plan.fuse)
+        if fused:
+            return fused_kernel(x, wg, wu, plan)
+        a = run_fn(x, wg, "nn", jnp.float32)
+        b = run_fn(x, wu, "nn", jnp.float32)
+        return (jax.nn.silu(a) * b).astype(out_dtype)
+
+    def fwd(x, wg, wu):
+        return f(x, wg, wu), (x, wg, wu)
+
+    def bwd(res, g):
+        x, wg, wu = res
+        a = run_fn(x, wg, "nn", jnp.float32)
+        b = run_fn(x, wu, "nn", jnp.float32)
+        return _swiglu_bwd_products(run_fn, x, wg, wu, a, b, g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _swiglu_fn(out_dtype_name: str, backend: str):
+    """Custom-VJP'd dense fused SwiGLU pair (one kernel launch forward)."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    interp = backend == "pallas_interpret"
+    if backend == "xla":
+        run = lambda p, q, t, dt: _REF[t](p, q, dt)  # noqa: E731
+    else:
+        run = lambda p, q, t, dt: _run_planned(  # noqa: E731
+            p, q, t, dt, interp)
+
+    def plan_fn(x, wg):
+        plan = plan_gemm(x.shape[0], x.shape[1], wg.shape[1],
+                         jnp.dtype(x.dtype).itemsize, out_dtype.itemsize,
+                         epi_ops=2)
+        note_plan_use("dense", plan)
+        return plan
+
+    def fused_kernel(x, wg, wu, plan):
+        return _ops.gemm_swiglu(
+            x, wg, wu, bm=plan.bm, bn=plan.bn, bk=plan.bk, edge=plan.edge,
+            out_dtype=out_dtype, interpret=interp)
+
+    return _make_swiglu_fn(out_dtype, backend, "dense", plan_fn, run,
+                           fused_kernel)
+
+
+def matmul_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+                  out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Dense fused MLP front half: silu(x @ Wg) * (x @ Wu) in ONE kernel
+    launch — x streamed once against both panels, the SwiGLU nonlinearity
+    applied at the fp32 accumulator flush.  ``x`` (M, K), panels (K, N)."""
+    assert x.ndim == 2 and w_gate.ndim == 2, (x.shape, w_gate.shape)
+    assert w_gate.shape == w_up.shape, (w_gate.shape, w_up.shape)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown gemm backend: {backend}")
+    return _swiglu_fn(out_dtype.name, backend)(x, w_gate, w_up)
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_swiglu_fn(out_dtype_name: str, backend: str):
+    """Custom-VJP'd grouped fused SwiGLU pair — the capacity-mode MoE
+    gate/up projections (E, C, D) @ (E, D, F) as one launch.  Backward uses
+    the planned batched products (dX "nt", dW the per-group T2)."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    run = lambda p, q, t, dt: _run_planned_batched(  # noqa: E731
+        p, q, t, dt, backend)
+
+    def plan_fn(x, wg):
+        plan = plan_batched_gemm(wg.shape[0], x.shape[-2], x.shape[-1],
+                                 wg.shape[2], jnp.dtype(x.dtype).itemsize,
+                                 out_dtype.itemsize, "none", epi_ops=2)
+        note_plan_use("batched", plan)
+        return plan
+
+    def fused_kernel(x, wg, wu, plan):
+        return _ops.batched_gemm_swiglu(
+            x, wg, wu, bm=plan.bm, bn=plan.bn, bk=plan.bk, edge=plan.edge,
+            out_dtype=out_dtype,
+            interpret=(backend == "pallas_interpret"))
+
+    return _make_swiglu_fn(out_dtype, backend, "batched", plan_fn, run,
+                           fused_kernel)
+
+
+def grouped_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+                   out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Grouped fused MoE front half: silu(x_g @ Wg_g) * (x_g @ Wu_g) per
+    group in ONE launch — the capacity-mode analogue of ``ragged_swiglu``.
+    ``x`` (G, M, K), panels (G, K, N); returns (G, M, N)."""
+    assert x.ndim == 3 and w_gate.ndim == 3, (x.shape, w_gate.shape)
+    assert w_gate.shape == w_up.shape, (w_gate.shape, w_up.shape)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    backend = backend or _backend()
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown gemm backend: {backend}")
+    return _grouped_swiglu_fn(out_dtype.name, backend)(x, w_gate, w_up)
 
 
 # ---------------------------------------------------------------------------
@@ -412,16 +615,38 @@ def clear_dispatch_caches() -> None:
     _batched_fn.cache_clear()
     _ragged_fn.cache_clear()
     _ragged_swiglu_fn.cache_clear()
+    _swiglu_fn.cache_clear()
+    _grouped_swiglu_fn.cache_clear()
 
 
 def project(x: jax.Array, w: jax.Array, *, out_dtype=None,
-            backend: str | None = None) -> jax.Array:
+            backend: str | None = None,
+            epilogue: Epilogue | None = None,
+            bias: jax.Array | None = None,
+            residual: jax.Array | None = None) -> jax.Array:
     """(..., D) @ (D, N) -> (..., N): flattens leading dims into the paper's
-    M dimension (tokens — typically the tall axis of T1/T3)."""
+    M dimension (tokens — typically the tall axis of T1/T3).  ``epilogue``
+    fuses the layer's elementwise tail into the projection; ``residual``
+    (..., N) is flattened alongside x, ``bias`` is (N,)."""
     lead = x.shape[:-1]
     m = 1
     for s in lead:
         m *= s
+    res = None if residual is None else residual.reshape(m, w.shape[-1])
     y = matmul(x.reshape(m, x.shape[-1]), w, out_dtype=out_dtype,
-               backend=backend)
+               backend=backend, epilogue=epilogue, bias=bias, residual=res)
     return y.reshape(*lead, w.shape[-1])
+
+
+def project_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+                   out_dtype=None, backend: str | None = None) -> jax.Array:
+    """(..., D) fused SwiGLU front half: silu(x @ Wg) * (x @ Wu) with the
+    leading dims flattened into M — ONE kernel launch for a dense MLP's
+    gate/up pair."""
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    y = matmul_swiglu(x.reshape(m, x.shape[-1]), w_gate, w_up,
+                      out_dtype=out_dtype, backend=backend)
+    return y.reshape(*lead, w_gate.shape[-1])

@@ -44,10 +44,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ...kernels.ftimm.epilogue import IDENTITY, Epilogue
 from ..compat import shard_map_unchecked as shard_map
-from .dispatch import (_backend, _float0_zeros, _run_planned_ragged,
-                       _run_planned_ragged_dw, batched_matmul, matmul,
-                       ragged_matmul, ragged_swiglu)
+from .dispatch import (_backend, _check_epi, _float0_zeros,
+                       _run_planned_ragged, _run_planned_ragged_dw,
+                       batched_matmul, matmul, ragged_matmul, ragged_swiglu)
 from .tuner import note_plan_use, plan_distributed
 
 
@@ -79,12 +80,22 @@ def dist_matmul(
     strategy: str | None = None,
     out_dtype=None,
     backend: str | None = None,
+    epilogue: Epilogue | None = None,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
 ) -> jax.Array:
     """C = A(M,K) @ B(K,N) parallelized over ``mesh[axis]``.
 
     Operands may be global arrays with any sharding; shard_map re-shards to
     the strategy's layout.  Output is M-sharded (m_parallel) or replicated
     (k_parallel) over ``axis``.
+
+    ``epilogue`` (with ``bias`` (N,) / ``residual`` (M, N)) fuses the
+    elementwise tail per shard: under m_parallel the residual's rows shard
+    with A and each shard flushes its own fused tile; under k_parallel the
+    tail applies AFTER the psum of the fp32 partials (the activation is
+    nonlinear — applying it per shard would be wrong), still inside the
+    shard_map body, so no extra pass over a stored output either way.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -92,6 +103,8 @@ def dist_matmul(
         raise ValueError(
             f"dist_matmul contraction mismatch: a has shape {a.shape} "
             f"(K = {k}) but b has shape {b.shape} (K = {k2})")
+    epi = IDENTITY if epilogue is None else epilogue
+    _check_epi(epi, bias, residual)
     nc = mesh.shape[axis]
     if strategy is None:
         plan = plan_distributed(m, k, n, nc, jnp.dtype(a.dtype).itemsize)
@@ -99,19 +112,37 @@ def dist_matmul(
         strategy = plan.strategy
     out_dtype = jnp.dtype(out_dtype or a.dtype)
 
+    bias2 = None if bias is None else bias.reshape(1, n)
+
     if strategy == "m_parallel":
         pad_m = (-m) % nc
         a_p = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
+        res_p = None
+        if residual is not None:
+            res_p = jnp.pad(residual, ((0, pad_m), (0, 0))) if pad_m \
+                else residual
+
+        in_specs = [P(axis, None), P(None, None)]
+        operands = [a_p, b]
+        if bias2 is not None:
+            in_specs.append(P(None, None))
+            operands.append(bias2)
+        if res_p is not None:
+            in_specs.append(P(axis, None))      # residual rows shard with A
+            operands.append(res_p)
 
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(P(axis, None), P(None, None)),
+            in_specs=tuple(in_specs),
             out_specs=P(axis, None),
         )
-        def f(a_l, b_l):
-            return matmul(a_l, b_l, out_dtype=out_dtype, backend=backend)
+        def f(a_l, b_l, *extras_l):
+            bias_l, res_l = epi.unpack(extras_l)
+            bias_l = None if bias_l is None else bias_l.reshape(-1)
+            return matmul(a_l, b_l, out_dtype=out_dtype, backend=backend,
+                          epilogue=epilogue, bias=bias_l, residual=res_l)
 
-        out = f(a_p, b)
+        out = f(*operands)
         return out[:m] if pad_m else out
 
     if strategy == "k_parallel":
@@ -119,18 +150,32 @@ def dist_matmul(
         a_p = jnp.pad(a, ((0, 0), (0, pad_k))) if pad_k else a
         b_p = jnp.pad(b, ((0, pad_k), (0, 0))) if pad_k else b
 
+        in_specs = [P(None, axis), P(axis, None)]
+        operands = [a_p, b_p]
+        if bias2 is not None:
+            in_specs.append(P(None, None))
+            operands.append(bias2)
+        if residual is not None:
+            in_specs.append(P(None, None))
+            operands.append(residual)
+
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(P(None, axis), P(axis, None)),
+            in_specs=tuple(in_specs),
             out_specs=P(None, None),
         )
-        def f(a_l, b_l):
+        def f(a_l, b_l, *extras_l):
             partial_c = matmul(a_l, b_l, out_dtype=jnp.float32,
                                backend=backend)
             # Paper Alg. 5 line 12: reduce partial C among cores (GSM -> ICI).
-            return jax.lax.psum(partial_c, axis)
+            full = jax.lax.psum(partial_c, axis)
+            if epi.is_identity:
+                return full
+            bias_l, res_l = epi.unpack(extras_l)
+            bias_l = None if bias_l is None else bias_l.reshape(-1)
+            return epi.apply(full, bias=bias_l, residual=res_l)
 
-        return f(a_p, b_p).astype(out_dtype)
+        return f(*operands).astype(out_dtype)
 
     raise ValueError(f"unknown strategy: {strategy}")
 

@@ -41,9 +41,9 @@ SCHEMA_VERSION = 1
 ENV_VAR = "REPRO_PLAN_CACHE"
 
 # Fields a record may carry.  Only "blocks" is mandatory; everything else is
-# provenance or placement detail.
+# provenance or placement/edge/fusion detail.
 _RECORD_KEYS = frozenset({
-    "bm", "bn", "bk", "nsplit", "dim_order", "strategy",
+    "bm", "bn", "bk", "nsplit", "dim_order", "strategy", "edge", "fuse",
     "t_measured_us", "t_analytic_us", "t_model_us", "engine", "mode",
 })
 

@@ -108,10 +108,13 @@ class GemmPlan(Plan):
     est: PlanEstimate | None = None
     placement: Placement | None = None
     mode: str = "analytic"          # analytic | measured | cached
+    edge: str = "masked"            # masked (zero-copy) | padded (pad/slice)
+    fuse: bool = True               # fuse the requested epilogue in-kernel
 
     def kernel_kwargs(self) -> dict:
         return dict(bm=self.bm, bn=self.bn, bk=self.bk,
-                    nsplit=self.nsplit, dim_order=self.dim_order)
+                    nsplit=self.nsplit, dim_order=self.dim_order,
+                    edge=self.edge)
 
 
 @dataclass(frozen=True)
@@ -176,12 +179,31 @@ def effective_spec(spec: TpuSpec) -> TpuSpec:
 # the analytic argmin below and autotune's measured shortlist.
 # ---------------------------------------------------------------------------
 
+def _edge_variants(m: int, k: int, n: int, bm: int, bn: int,
+                   bk: int) -> tuple[str, ...]:
+    """Edge policies worth enumerating for one blocking: ``padded`` only
+    differs from ``masked`` (and only costs anything) when some dimension is
+    not a block multiple."""
+    if m % bm or n % bn or k % bk:
+        return ("masked", "padded")
+    return ("masked",)
+
+
+def _fuse_variants(epi_ops: int) -> tuple[bool, ...]:
+    return (True, False) if epi_ops > 0 else (True,)
+
+
 def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
                     out_bytes: int = 4,
-                    spec: TpuSpec = TPU_V5E) -> list[GemmPlan]:
+                    spec: TpuSpec = TPU_V5E,
+                    epi_ops: int = 0) -> list[GemmPlan]:
     """Every VMEM-feasible candidate tiling for the dense GEMM, scored by
-    the CMR model.  Never empty: when nothing fits the budget the degenerate
-    minimum tile is returned (and priced) as the only candidate."""
+    the CMR model.  The candidate space is (blocking x dim order x edge
+    policy x epilogue fusion): ``edge`` only forks on non-block-multiple
+    shapes (where the padded wrapper pays real copies) and ``fuse`` only
+    when the caller carries an epilogue (``epi_ops > 0``).  Never empty:
+    when nothing fits the budget the degenerate minimum tile is returned
+    (and priced) as the only candidate."""
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
     cands: list[GemmPlan] = []
@@ -189,17 +211,22 @@ def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
         for bn in _bn_candidates(n, spec.lane):
             for bk in _bk_candidates(k):
                 for order in ("mn", "nm"):
-                    e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
-                                 dim_order=order, in_bytes=in_bytes,
-                                 out_bytes=out_bytes, spec=spec)
-                    if e.vmem_bytes > spec.vmem_budget:
-                        continue
-                    cands.append(GemmPlan(bm=bm, bn=bn, bk=bk,
-                                          dim_order=order, gemm_class=cls,
-                                          est=e))
+                    for edge in _edge_variants(m, k, n, bm, bn, bk):
+                        for fuse in _fuse_variants(epi_ops):
+                            e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
+                                         dim_order=order, in_bytes=in_bytes,
+                                         out_bytes=out_bytes, edge=edge,
+                                         epi_ops=epi_ops, epi_fused=fuse,
+                                         spec=spec)
+                            if e.vmem_bytes > spec.vmem_budget:
+                                continue
+                            cands.append(GemmPlan(
+                                bm=bm, bn=bn, bk=bk, dim_order=order,
+                                gemm_class=cls, est=e, edge=edge,
+                                fuse=fuse))
     if not cands:   # degenerate: nothing fit; shrink to minimum tiles
         bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
-        e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
+        e = estimate(m, k, n, bm=bm, bn=bn, bk=bk, epi_ops=epi_ops,
                      in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
         cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
     return cands
@@ -207,10 +234,12 @@ def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
 
 def batched_candidates(g: int, m: int, k: int, n: int, in_bytes: int = 4,
                        out_bytes: int = 4, shared: str = "none",
-                       spec: TpuSpec = TPU_V5E) -> list[GemmPlan]:
+                       spec: TpuSpec = TPU_V5E,
+                       epi_ops: int = 0) -> list[GemmPlan]:
     """Candidate tilings for the batched/grouped GEMM (same enumeration as
-    the dense family; the batch-aware estimator decides whether a shared
-    panel earns cross-batch residency)."""
+    the dense family, including the edge-policy and epilogue-fusion forks;
+    the batch-aware estimator decides whether a shared panel earns
+    cross-batch residency)."""
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
     shared_a, shared_b = shared == "a", shared == "b"
@@ -219,21 +248,26 @@ def batched_candidates(g: int, m: int, k: int, n: int, in_bytes: int = 4,
         for bn in _bn_candidates(n, spec.lane):
             for bk in _bk_candidates(k):
                 for order in ("mn", "nm"):
-                    e = estimate_batched(
-                        g, m, k, n, bm=bm, bn=bn, bk=bk, dim_order=order,
-                        shared_a=shared_a, shared_b=shared_b,
-                        in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
-                    if e.vmem_bytes > spec.vmem_budget:
-                        continue
-                    cands.append(GemmPlan(bm=bm, bn=bn, bk=bk,
-                                          dim_order=order, gemm_class=cls,
-                                          est=e))
+                    for edge in _edge_variants(m, k, n, bm, bn, bk):
+                        for fuse in _fuse_variants(epi_ops):
+                            e = estimate_batched(
+                                g, m, k, n, bm=bm, bn=bn, bk=bk,
+                                dim_order=order, shared_a=shared_a,
+                                shared_b=shared_b, in_bytes=in_bytes,
+                                out_bytes=out_bytes, edge=edge,
+                                epi_ops=epi_ops, epi_fused=fuse, spec=spec)
+                            if e.vmem_bytes > spec.vmem_budget:
+                                continue
+                            cands.append(GemmPlan(
+                                bm=bm, bn=bn, bk=bk, dim_order=order,
+                                gemm_class=cls, est=e, edge=edge,
+                                fuse=fuse))
     if not cands:
         bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
         e = estimate_batched(g, m, k, n, bm=bm, bn=bn, bk=bk,
                              shared_a=shared_a, shared_b=shared_b,
                              in_bytes=in_bytes, out_bytes=out_bytes,
-                             spec=spec)
+                             epi_ops=epi_ops, spec=spec)
         cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
     return cands
 
@@ -299,10 +333,15 @@ def _better(a: GemmPlan, b: GemmPlan) -> bool:
     if abs(ta - tb) > 0.02 * max(ta, tb):
         return ta < tb
     # Tie-break as the paper does: prefer larger bk (more accumulator reuse),
-    # then smaller padding waste.
+    # then smaller padding waste, then the zero-copy edge policy and the
+    # fused epilogue (fewer HBM round-trips at equal modeled time).
     if a.bk != b.bk:
         return a.bk > b.bk
-    return a.est.flops_padded < b.est.flops_padded
+    if a.est.flops_padded != b.est.flops_padded:
+        return a.est.flops_padded < b.est.flops_padded
+    if a.edge != b.edge:
+        return a.edge == "masked"
+    return a.fuse and not b.fuse
 
 
 def argmin_plan(cands: list[GemmPlan]) -> GemmPlan:
@@ -326,7 +365,7 @@ def shortlist(cands: list[GemmPlan], top_k: int) -> list[GemmPlan]:
     seen: set[tuple] = set()
     out: list[GemmPlan] = []
     for c in ordered:
-        sig = (c.bm, c.bn, c.bk, c.nsplit, c.dim_order)
+        sig = (c.bm, c.bn, c.bk, c.nsplit, c.dim_order, c.edge, c.fuse)
         if sig in seen:
             continue
         seen.add(sig)
@@ -348,16 +387,20 @@ def _plan_from_record(rec: dict, estimator, cls: GemmClass,
         bm, bn, bk = int(rec["bm"]), int(rec["bn"]), int(rec["bk"])
         nsplit = int(rec.get("nsplit", 1))
         order = str(rec.get("dim_order", "mn"))
+        edge = str(rec.get("edge", "masked"))
+        fuse = bool(rec.get("fuse", True))
     except (KeyError, TypeError, ValueError):
         return None
     if bm <= 0 or bn <= 0 or bk <= 0 or nsplit <= 0 \
-            or order not in ("mn", "nm") or bn % spec.lane:
+            or order not in ("mn", "nm") or bn % spec.lane \
+            or edge not in ("masked", "padded"):
         return None
-    e = estimator(bm, bn, bk, order)
+    e = estimator(bm, bn, bk, order, edge)
     if e is None or e.vmem_bytes > spec.vmem_budget:
         return None
     return GemmPlan(bm=bm, bn=bn, bk=bk, nsplit=nsplit, dim_order=order,
-                    gemm_class=cls, est=e, mode="cached")
+                    gemm_class=cls, est=e, mode="cached", edge=edge,
+                    fuse=fuse)
 
 
 def _cached_dense(m, k, n, in_bytes, out_bytes, spec) -> GemmPlan | None:
@@ -366,10 +409,10 @@ def _cached_dense(m, k, n, in_bytes, out_bytes, spec) -> GemmPlan | None:
     if rec is None:
         return None
 
-    def est(bm, bn, bk, order):
+    def est(bm, bn, bk, order, edge="masked"):
         return estimate(m, k, n, bm=bm, bn=bn, bk=bk, nsplit=1,
                         dim_order=order, in_bytes=in_bytes,
-                        out_bytes=out_bytes, spec=spec)
+                        out_bytes=out_bytes, edge=edge, spec=spec)
 
     return _plan_from_record(rec, est, classify(m, k, n), spec)
 
@@ -382,11 +425,11 @@ def _cached_batched(g, m, k, n, in_bytes, out_bytes, shared,
     if rec is None:
         return None
 
-    def est(bm, bn, bk, order):
+    def est(bm, bn, bk, order, edge="masked"):
         return estimate_batched(g, m, k, n, bm=bm, bn=bn, bk=bk,
                                 dim_order=order, shared_a=shared == "a",
                                 shared_b=shared == "b", in_bytes=in_bytes,
-                                out_bytes=out_bytes, spec=spec)
+                                out_bytes=out_bytes, edge=edge, spec=spec)
 
     return _plan_from_record(rec, est, classify(m, k, n), spec)
 
@@ -401,7 +444,7 @@ def _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged,
     mean = max(total // max(g, 1), 1)
     cls = classify(mean, k, n) if ragged == "m" else classify(k, mean, n)
 
-    def est(bm, bn, bk, order):
+    def est(bm, bn, bk, order, edge="masked"):
         if order != "mn":       # ragged kernels fix their grid walk
             return None
         return estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
@@ -469,20 +512,21 @@ class PlacementOption:
         if self.family == "dense":
             m, k, n = self.local_dims
 
-            def est(bm, bn, bk, order):
+            def est(bm, bn, bk, order, edge="masked"):
                 return estimate(m, k, n, bm=bm, bn=bn, bk=bk,
                                 dim_order=order, in_bytes=in_bytes,
-                                out_bytes=out_bytes, spec=spec)
+                                out_bytes=out_bytes, edge=edge, spec=spec)
 
             return _plan_from_record(rec, est, classify(m, k, n), spec)
         if self.family == "batched":
             g, m, k, n = self.local_dims
 
-            def est(bm, bn, bk, order):
+            def est(bm, bn, bk, order, edge="masked"):
                 return estimate_batched(
                     g, m, k, n, bm=bm, bn=bn, bk=bk, dim_order=order,
                     shared_a=self.extra == "a", shared_b=self.extra == "b",
-                    in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+                    in_bytes=in_bytes, out_bytes=out_bytes, edge=edge,
+                    spec=spec)
 
             return _plan_from_record(rec, est, classify(m, k, n), spec)
         g, total, k, n = self.local_dims
@@ -490,7 +534,7 @@ class PlacementOption:
         cls = classify(mean, k, n) if self.extra == "m" \
             else classify(k, mean, n)
 
-        def est(bm, bn, bk, order):
+        def est(bm, bn, bk, order, edge="masked"):
             if order != "mn":
                 return None
             return estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
@@ -613,13 +657,20 @@ def plan_gemm(
     *,
     num_shards: int = 1,
     axis: str | None = None,
+    epi_ops: int = 0,
 ) -> GemmPlan:
     """Pick the best tiling for C(M,N) += A(M,K) B(K,N) — and, when
     ``num_shards > 1``, the cross-chip strategy too: the returned plan is the
     per-shard tiling of the winning layout with its ``Placement`` attached
     (m_parallel vs k_parallel, scored with the psum ICI term).  Consults the
     persistent measured-plan store first (``mode == "cached"``); otherwise
-    falls back to the analytic CMR argmin."""
+    falls back to the analytic CMR argmin.
+
+    ``epi_ops > 0`` declares a post-GEMM elementwise tail of that many ops
+    (``Epilogue.num_ops``): the candidate space then forks on fusing it into
+    the accumulator flush vs running it as separate passes, and the winner's
+    ``fuse`` records the decision (alongside ``edge``, the masked-vs-padded
+    remainder-tile policy)."""
     spec = effective_spec(spec)
     if num_shards > 1:
         opts = dense_placement_options(m, k, n, num_shards, in_bytes,
@@ -634,7 +685,8 @@ def plan_gemm(
     cached = _cached_dense(m, k, n, in_bytes, out_bytes, spec)
     if cached is not None:
         return cached
-    return argmin_plan(gemm_candidates(m, k, n, in_bytes, out_bytes, spec))
+    return argmin_plan(gemm_candidates(m, k, n, in_bytes, out_bytes, spec,
+                                       epi_ops))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -676,6 +728,7 @@ def plan_batched_gemm(
     *,
     num_shards: int = 1,
     axis: str | None = None,
+    epi_ops: int = 0,
 ) -> GemmPlan:
     """Pick the best tiling for the batched GEMM C(g) += A(g) B(g).
 
@@ -706,7 +759,7 @@ def plan_batched_gemm(
     if cached is not None:
         return cached
     return argmin_plan(batched_candidates(g, m, k, n, in_bytes, out_bytes,
-                                          shared, spec))
+                                          shared, spec, epi_ops))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -835,6 +888,7 @@ def tgemm_plan(m: int, k: int, n: int,
 # ---------------------------------------------------------------------------
 
 PLAN_MODE_COUNTS: collections.Counter = collections.Counter()
+EPILOGUE_COUNTS: collections.Counter = collections.Counter()
 
 
 def note_plan_use(family: str, plan: Plan) -> None:
@@ -844,11 +898,35 @@ def note_plan_use(family: str, plan: Plan) -> None:
     PLAN_MODE_COUNTS[(family, getattr(plan, "mode", "analytic"))] += 1
 
 
+def note_epilogue(family: str, fused: bool) -> None:
+    """Executors call this when they serve a GEMM that CARRIES an epilogue
+    (identity epilogues don't count): ``fused`` means the elementwise tail
+    ran in the same kernel/jit as the GEMM (the accumulator-flush fusion or
+    the single-jit XLA fallback), not as separate output passes."""
+    EPILOGUE_COUNTS[(family, "fused" if fused else "separate")] += 1
+
+
+def epilogue_stats() -> dict[str, dict[str, int]]:
+    """{family: {"fused"|"separate": count}} census of epilogue servings."""
+    out: dict[str, dict[str, int]] = {}
+    for (family, kind), count in sorted(EPILOGUE_COUNTS.items()):
+        out.setdefault(family, {})[kind] = count
+    return out
+
+
 def plan_mode_stats() -> dict[str, dict[str, int]]:
-    """{family: {mode: count}} census of plans that reached executors."""
+    """{family: {mode: count}} census of plans that reached executors.  When
+    any epilogue-carrying GEMMs were served, an extra ``"epilogue"`` entry
+    reports fused-vs-separate coverage (``epilogue_stats`` aggregated) so
+    serve warmup can print fusion coverage alongside the plan modes."""
     out: dict[str, dict[str, int]] = {}
     for (family, mode), count in sorted(PLAN_MODE_COUNTS.items()):
         out.setdefault(family, {})[mode] = count
+    epi: dict[str, int] = {}
+    for (_family, kind), count in EPILOGUE_COUNTS.items():
+        epi[kind] = epi.get(kind, 0) + count
+    if epi:
+        out["epilogue"] = dict(sorted(epi.items()))
     return out
 
 
@@ -865,6 +943,7 @@ def clear_plan_cache() -> None:
     plan_distributed.cache_clear()
     plan_moe_dispatch.cache_clear()
     PLAN_MODE_COUNTS.clear()
+    EPILOGUE_COUNTS.clear()
     plan_store.reset_store()
     # Executor layers import the tuner; import them lazily to avoid cycles.
     from . import dispatch, distributed

@@ -1,12 +1,17 @@
-from .kernel import (ftimm_gemm, ftimm_gemm_batched, ftimm_gemm_grouped,
+from .kernel import (Epilogue, ftimm_gemm, ftimm_gemm_batched,
+                     ftimm_gemm_grouped, ftimm_gemm_grouped_swiglu,
                      ftimm_gemm_ragged, ftimm_gemm_ragged_dw,
-                     ftimm_gemm_ragged_swiglu, ftimm_gemm_splitk)
-from .ops import (batched_gemm, gemm, ragged_gemm, ragged_gemm_dw,
-                  ragged_gemm_swiglu, sublane)
+                     ftimm_gemm_ragged_swiglu, ftimm_gemm_splitk,
+                     ftimm_gemm_swiglu)
+from .ops import (batched_gemm, batched_gemm_swiglu, gemm, gemm_swiglu,
+                  ragged_gemm, ragged_gemm_dw, ragged_gemm_swiglu, sublane)
 from . import ref
 
-__all__ = ["ftimm_gemm", "ftimm_gemm_batched", "ftimm_gemm_grouped",
+__all__ = ["Epilogue", "ftimm_gemm", "ftimm_gemm_batched",
+           "ftimm_gemm_grouped", "ftimm_gemm_grouped_swiglu",
            "ftimm_gemm_ragged", "ftimm_gemm_ragged_dw",
            "ftimm_gemm_ragged_swiglu", "ftimm_gemm_splitk",
-           "batched_gemm", "gemm", "ragged_gemm", "ragged_gemm_dw",
-           "ragged_gemm_swiglu", "sublane", "ref"]
+           "ftimm_gemm_swiglu",
+           "batched_gemm", "batched_gemm_swiglu", "gemm", "gemm_swiglu",
+           "ragged_gemm", "ragged_gemm_dw", "ragged_gemm_swiglu",
+           "sublane", "ref"]

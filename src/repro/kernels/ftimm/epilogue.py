@@ -1,0 +1,100 @@
+"""The fused-epilogue spec shared by every GEMM engine.
+
+Lives in its own leaf module (imports nothing from the package) so the
+kernel layer, the ops wrappers, the dispatch layer and ``core.gemm`` can all
+import it without participating in the kernels <-> core import cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = ("none", "silu", "gelu")
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """What to fuse into the accumulator flush of a GEMM.
+
+    Applied in fp32 VMEM before the output cast, in this order:
+
+        y = act(acc * scale + bias) + residual
+
+    ``bias`` / ``residual`` are flags — the operands themselves ride along as
+    extra kernel inputs (bias an (N,)-wide vector broadcast over rows,
+    residual shaped like the output).  Hashable, so it can key jit static
+    arguments and the dispatch-level function caches."""
+    bias: bool = False
+    activation: str = "none"        # none | silu | gelu
+    residual: bool = False
+    scale: float | None = None
+
+    def __post_init__(self):
+        if self.activation not in _ACTIVATIONS:
+            raise ValueError(
+                f"unknown epilogue activation: {self.activation!r} "
+                f"(expected one of {_ACTIVATIONS})")
+
+    @property
+    def is_identity(self) -> bool:
+        return (not self.bias and not self.residual
+                and self.activation == "none" and self.scale is None)
+
+    @property
+    def num_ops(self) -> int:
+        """How many separate elementwise output passes the unfused path runs
+        — what fusing saves (each pass re-reads and re-writes C in HBM)."""
+        return (int(self.scale is not None) + int(self.bias)
+                + int(self.activation != "none") + int(self.residual))
+
+    def unpack(self, extras):
+        """Split a positional ``extras`` tuple back into (bias, residual).
+
+        The packing convention — bias first, then residual, each present
+        only when its flag is set — is used by every fixed-arity carrier of
+        epilogue operands (the dispatch custom-VJP args, the shard_map
+        bodies in ``dist_matmul``); this is its ONE inverse."""
+        i = 0
+        bias = residual = None
+        if self.bias:
+            bias = extras[i]
+            i += 1
+        if self.residual:
+            residual = extras[i]
+        return bias, residual
+
+    def decompose(self) -> tuple["Epilogue", ...]:
+        """The tail as single-op specs, in application order — what the
+        UNFUSED path executes: one separate pass over the output per op.
+        Applying them sequentially reproduces ``apply`` exactly."""
+        ops = []
+        if self.scale is not None:
+            ops.append(Epilogue(scale=self.scale))
+        if self.bias:
+            ops.append(Epilogue(bias=True))
+        if self.activation != "none":
+            ops.append(Epilogue(activation=self.activation))
+        if self.residual:
+            ops.append(Epilogue(residual=True))
+        return tuple(ops)
+
+    def apply(self, acc: jax.Array, bias=None, residual=None) -> jax.Array:
+        """fp32 in / fp32 out.  Shared by the in-kernel flush, the split-K
+        post-reduction, and the XLA fallback — ONE definition of the math so
+        every engine stays bit-comparable."""
+        if self.scale is not None:
+            acc = acc * jnp.float32(self.scale)
+        if self.bias:
+            acc = acc + bias.astype(jnp.float32)
+        if self.activation == "silu":
+            acc = acc * jax.nn.sigmoid(acc)
+        elif self.activation == "gelu":
+            acc = jax.nn.gelu(acc)
+        if self.residual:
+            acc = acc + residual.astype(jnp.float32)
+        return acc
+
+
+IDENTITY = Epilogue()

@@ -24,8 +24,23 @@ Paper mapping (Yin et al., 2022):
 
 All kernels accumulate in fp32 regardless of input dtype.  Block shapes must
 be multiples of the TPU register tiling — (8,128) fp32 / (16,128) bf16 — a
-constraint the tuner enforces; the kernels themselves only require that the
-(padded) operand shapes divide into the blocks.
+constraint the tuner enforces.  Operand shapes need NOT divide into the
+blocks: remainder tiles are handled in-kernel (the grid is ``cdiv``-sized and
+the contraction remainder is masked with iota compares), so the ops wrappers
+can pass unpadded operands straight through — zero-copy in, unsliced out.
+Out-of-range rows/cols of edge blocks read as garbage (Mosaic) / NaN
+(interpret) but only ever land in output elements the store drops; only the
+contraction dimension's garbage could poison valid outputs, hence only it is
+masked (both operands — 0 * NaN is NaN, so masking one side is not enough).
+
+Epilogues: every kernel family takes an ``Epilogue`` spec applied to the fp32
+accumulator at the flush (scale -> bias add -> activation -> residual add ->
+output cast), so dense model layers stop running silu/bias/residual as
+separate XLA passes over the output.  The fused ``silu(x@Wg) * (x@Wu)`` pair
+exists as a dense (``ftimm_gemm_swiglu``) and grouped
+(``ftimm_gemm_grouped_swiglu``) two-accumulator variant mirroring the ragged
+one.  The split-K kernel applies the epilogue after its partials reduction
+(the activation is nonlinear; flushing it per split would be wrong).
 """
 from __future__ import annotations
 
@@ -38,44 +53,68 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.compat import pallas_compiler_params, prefetch_scalar_grid_spec
+from .epilogue import IDENTITY, Epilogue
 
 DimOrder = Literal["mn", "nm"]
 
 
-def _accum_body(a_blk, b_blk, c_ref, acc_ref, *, k, nk, dims):
-    """Shared accumulate-and-flush epilogue across all kernel variants."""
+def _k_limit(k_total: int, bk: int, kb_idx):
+    """Valid contraction extent of K block ``kb_idx`` — ``bk`` for interior
+    blocks, the remainder for the edge block, 0 for fully out-of-range blocks
+    (split-K grids can produce those)."""
+    return jnp.clip(k_total - kb_idx * bk, 0, bk)
+
+
+def _mask_contract(blk, k_lim, dim: int):
+    """Zero a block's out-of-range contraction rows/cols (iota compare)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, blk.shape, dim)
+    return jnp.where(iota < k_lim, blk, jnp.zeros_like(blk))
+
+
+def _unpack_epi(rest, epi: Epilogue):
+    """Split a kernel's trailing refs into (bias, residual, c, *scratch)."""
+    i = 0
+    bias_ref = rest[i] if epi.bias else None
+    i += int(epi.bias)
+    res_ref = rest[i] if epi.residual else None
+    i += int(epi.residual)
+    return bias_ref, res_ref, rest[i], rest[i + 1:]
+
+
+def _accum_body(a_blk, b_blk, c_ref, acc_ref, *, k, nk, dims, k_lim=None,
+                epi: Epilogue = IDENTITY, bias_ref=None, res_ref=None):
+    """Shared accumulate-and-flush body across all kernel variants."""
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    if k_lim is not None:
+        a_blk = _mask_contract(a_blk, k_lim, dims[0][0])
+        b_blk = _mask_contract(b_blk, k_lim, dims[1][0])
     acc_ref[...] += jax.lax.dot_general(
         a_blk, b_blk, (dims, ((), ())), preferred_element_type=jnp.float32
     )
 
     @pl.when(k == nk - 1)
     def _flush():
-        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+        acc = acc_ref[...]
+        if not epi.is_identity:
+            acc = epi.apply(
+                acc,
+                bias=None if bias_ref is None else bias_ref[...],
+                residual=None if res_ref is None else res_ref[...])
+        c_ref[...] = acc.astype(c_ref.dtype)
 
 
-def _nn_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk):
-    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref,
-                k=pl.program_id(2), nk=nk, dims=((1,), (0,)))
-
-
-def _tn_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk):
-    # A is (K, M): contract dim 0 of both operands.
-    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref,
-                k=pl.program_id(2), nk=nk, dims=((0,), (0,)))
-
-
-def _nt_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk):
-    # B is (N, K): contract dim 1 of both operands.
-    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref,
-                k=pl.program_id(2), nk=nk, dims=((1,), (1,)))
-
-
-_KERNELS = {"nn": _nn_kernel, "tn": _tn_kernel, "nt": _nt_kernel}
+def _dense_kernel(a_ref, b_ref, *rest, nk, dims, bk, k_total, mask_k,
+                  epi: Epilogue):
+    bias_ref, res_ref, c_ref, (acc_ref,) = _unpack_epi(rest, epi)
+    k = pl.program_id(2)
+    k_lim = _k_limit(k_total, bk, k) if mask_k else None
+    _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref, k=k, nk=nk,
+                dims=dims, k_lim=k_lim, epi=epi, bias_ref=bias_ref,
+                res_ref=res_ref)
 
 
 def _specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder):
@@ -105,7 +144,8 @@ def _specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder):
     else:  # pragma: no cover
         raise ValueError(trans)
     c_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i_of(i, j, k), j_of(i, j, k)))
-    return a_spec, b_spec, c_spec
+    bias_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j_of(i, j, k)))
+    return a_spec, b_spec, c_spec, bias_spec
 
 
 def _mkn(trans: str, a_shape, b_shape):
@@ -116,6 +156,9 @@ def _mkn(trans: str, a_shape, b_shape):
     else:  # nt
         (m, k), (n, _) = a_shape, b_shape
     return m, k, n
+
+
+_DIMS = {"nn": ((1,), (0,)), "tn": ((0,), (0,)), "nt": ((1,), (1,))}
 
 
 def ftimm_gemm(
@@ -129,21 +172,36 @@ def ftimm_gemm(
     dim_order: DimOrder = "mn",
     out_dtype=None,
     interpret: bool = False,
+    epilogue: Epilogue = IDENTITY,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
 ) -> jax.Array:
-    """M-parallel ftIMM GEMM. Shapes must already be padded to block multiples.
+    """M-parallel ftIMM GEMM.  Shapes need not be block multiples: the grid
+    is cdiv-sized and remainder K tiles are masked in-kernel (zero-copy edge
+    tiles); out-of-range output elements are dropped by the store.
 
     trans: "nn" A(M,K)@B(K,N); "tn" A(K,M).T@B(K,N); "nt" A(M,K)@B(N,K).T.
+    ``epilogue`` is applied to the fp32 accumulator at the flush; ``bias``
+    (N,) and ``residual`` (M, N) ride along as extra inputs when the spec
+    asks for them.
     """
     m, k, n = _mkn(trans, a.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, k, n, bm, bn, bk)
     out_dtype = out_dtype or a.dtype
-    gm, gn, gk = m // bm, n // bn, k // bk
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
     grid = (gm, gn, gk) if dim_order == "mn" else (gn, gm, gk)
-    a_spec, b_spec, c_spec = _specs(trans, bm, bn, bk, dim_order)
+    a_spec, b_spec, c_spec, bias_spec = _specs(trans, bm, bn, bk, dim_order)
+    in_specs, inputs = [a_spec, b_spec], [a, b]
+    if epilogue.bias:
+        in_specs.append(bias_spec)
+        inputs.append(bias.reshape(1, n))
+    if epilogue.residual:
+        in_specs.append(c_spec)
+        inputs.append(residual)
     return pl.pallas_call(
-        functools.partial(_KERNELS[trans], nk=gk),
+        functools.partial(_dense_kernel, nk=gk, dims=_DIMS[trans], bk=bk,
+                          k_total=k, mask_k=bool(k % bk), epi=epilogue),
         grid=grid,
-        in_specs=[a_spec, b_spec],
+        in_specs=in_specs,
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
@@ -151,18 +209,19 @@ def ftimm_gemm(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(a, b)
+    )(*inputs)
 
 
-_DIMS = {"nn": ((1,), (0,)), "tn": ((0,), (0,)), "nt": ((1,), (1,))}
-
-
-def _batched_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims,
-                    a_batched, b_batched):
+def _batched_kernel(a_ref, b_ref, *rest, nk, dims, a_batched, b_batched,
+                    bk, k_total, mask_k, epi: Epilogue):
+    bias_ref, res_ref, c_ref, (acc_ref,) = _unpack_epi(rest, epi)
     a_blk = a_ref[0] if a_batched else a_ref[...]
     b_blk = b_ref[0] if b_batched else b_ref[...]
-    _accum_body(a_blk, b_blk, c_ref.at[0], acc_ref,
-                k=pl.program_id(3), nk=nk, dims=dims)
+    k = pl.program_id(3)
+    k_lim = _k_limit(k_total, bk, k) if mask_k else None
+    _accum_body(a_blk, b_blk, c_ref.at[0], acc_ref, k=k, nk=nk, dims=dims,
+                k_lim=k_lim, epi=epi, bias_ref=bias_ref,
+                res_ref=None if res_ref is None else res_ref.at[0])
 
 
 def _batched_specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder,
@@ -207,7 +266,8 @@ def _batched_specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder,
     c_spec = pl.BlockSpec(
         (1, bm, bn),
         lambda g, i, j, k: (g, i_of(g, i, j, k), j_of(g, i, j, k)))
-    return a_spec, b_spec, c_spec
+    bias_spec = pl.BlockSpec((1, bn), lambda g, i, j, k: (0, j_of(g, i, j, k)))
+    return a_spec, b_spec, c_spec, bias_spec
 
 
 def ftimm_gemm_grouped(
@@ -221,14 +281,19 @@ def ftimm_gemm_grouped(
     dim_order: DimOrder = "mn",
     out_dtype=None,
     interpret: bool = False,
+    epilogue: Epilogue = IDENTITY,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
 ) -> jax.Array:
     """Grouped ftIMM GEMM: per-group operands with optional sharing.
 
     Either operand may be 3-D ``(G, ., .)`` (one panel per group — the MoE
     expert-weight case ``(E, C, D) @ (E, D, F)``) or 2-D (one panel shared by
     every group, e.g. a common activation against per-group weights or vice
-    versa).  At least one operand must be 3-D.  Per-group shapes must already
-    be padded to block multiples; returns ``(G, M, N)``.
+    versa).  At least one operand must be 3-D.  Per-group shapes need not be
+    block multiples (remainder K tiles masked in-kernel); returns
+    ``(G, M, N)``.  ``epilogue`` flushes fused: ``bias`` (N,) is shared
+    across the batch, ``residual`` is (G, M, N).
     """
     a_batched, b_batched = a.ndim == 3, b.ndim == 3
     assert a_batched or b_batched, (a.shape, b.shape)
@@ -236,18 +301,25 @@ def ftimm_gemm_grouped(
         assert a.shape[0] == b.shape[0], (a.shape, b.shape)
     gsize = a.shape[0] if a_batched else b.shape[0]
     m, k, n = _mkn(trans, a.shape[-2:], b.shape[-2:])
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, k, n, bm, bn, bk)
     out_dtype = out_dtype or a.dtype
-    gm, gn, gk = m // bm, n // bn, k // bk
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
     grid = ((gsize, gm, gn, gk) if dim_order == "mn"
             else (gsize, gn, gm, gk))
-    a_spec, b_spec, c_spec = _batched_specs(
+    a_spec, b_spec, c_spec, bias_spec = _batched_specs(
         trans, bm, bn, bk, dim_order, a_batched, b_batched)
+    in_specs, inputs = [a_spec, b_spec], [a, b]
+    if epilogue.bias:
+        in_specs.append(bias_spec)
+        inputs.append(bias.reshape(1, n))
+    if epilogue.residual:
+        in_specs.append(c_spec)
+        inputs.append(residual)
     return pl.pallas_call(
         functools.partial(_batched_kernel, nk=gk, dims=_DIMS[trans],
-                          a_batched=a_batched, b_batched=b_batched),
+                          a_batched=a_batched, b_batched=b_batched, bk=bk,
+                          k_total=k, mask_k=bool(k % bk), epi=epilogue),
         grid=grid,
-        in_specs=[a_spec, b_spec],
+        in_specs=in_specs,
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct((gsize, m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
@@ -256,7 +328,7 @@ def ftimm_gemm_grouped(
                                  "arbitrary"),
         ),
         interpret=interpret,
-    )(a, b)
+    )(*inputs)
 
 
 def ftimm_gemm_batched(
@@ -270,6 +342,9 @@ def ftimm_gemm_batched(
     dim_order: DimOrder = "mn",
     out_dtype=None,
     interpret: bool = False,
+    epilogue: Epilogue = IDENTITY,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
 ) -> jax.Array:
     """Batched ftIMM GEMM: leading batch grid dim over independent per-entry
     GEMMs, ``(G, M, K) @ (G, K, N) -> (G, M, N)`` (trans variants as in
@@ -279,7 +354,8 @@ def ftimm_gemm_batched(
     assert a.ndim == 3 and b.ndim == 3, (a.shape, b.shape)
     return ftimm_gemm_grouped(
         a, b, bm=bm, bn=bn, bk=bk, trans=trans, dim_order=dim_order,
-        out_dtype=out_dtype, interpret=interpret)
+        out_dtype=out_dtype, interpret=interpret, epilogue=epilogue,
+        bias=bias, residual=residual)
 
 
 # ---------------------------------------------------------------------------
@@ -564,9 +640,12 @@ def ftimm_gemm_ragged_dw(
     )(group_ids, tile_ids, valid, group_offsets, x, dy)
 
 
-def _splitk_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims):
+def _splitk_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk, dims, gk, bk,
+                   k_total, mask_k):
+    s, k = pl.program_id(0), pl.program_id(3)
+    k_lim = _k_limit(k_total, bk, s * gk + k) if mask_k else None
     _accum_body(a_ref[...], b_ref[...], c_ref.at[0], acc_ref,
-                k=pl.program_id(3), nk=nk, dims=dims)
+                k=k, nk=nk, dims=dims, k_lim=k_lim)
 
 
 def ftimm_gemm_splitk(
@@ -580,21 +659,29 @@ def ftimm_gemm_splitk(
     trans: str = "nn",
     out_dtype=None,
     interpret: bool = False,
+    epilogue: Epilogue = IDENTITY,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
 ) -> jax.Array:
     """K-parallel ftIMM GEMM (paper Alg. 5).
 
     Returns the REDUCED (M, N) result; the fp32 partials buffer
     (nsplit, M, N) is produced by the kernel and summed outside it — the
     TPU analogue of the paper's reduction of per-core partial C through GSM.
-    K must divide into nsplit * bk-multiples.
+    K need not divide into nsplit * bk-multiples: each split owns
+    ``cdiv(cdiv(K, bk), nsplit)`` K blocks and out-of-range blocks mask to
+    zero contributions.  The epilogue applies AFTER the reduction (its
+    activation is nonlinear, so per-split flushing would be wrong) — still
+    one fused elementwise pass over the fp32 partial sum, not per-op XLA
+    passes over a stored output.
     """
     m, k, n = _mkn(trans, a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
-    assert k % nsplit == 0, (k, nsplit)
-    ks = k // nsplit
-    assert m % bm == 0 and n % bn == 0 and ks % bk == 0, (m, ks, n, bm, bn, bk)
-    gm, gn, gk = m // bm, n // bn, ks // bk
-    dims = {"nn": ((1,), (0,)), "tn": ((0,), (0,)), "nt": ((1,), (1,))}[trans]
+    nkb = pl.cdiv(k, bk)                 # total K blocks over the real K
+    gk = pl.cdiv(nkb, nsplit)            # K blocks per split
+    mask_k = bool(k % bk) or bool(nkb % nsplit)
+    gm, gn = pl.cdiv(m, bm), pl.cdiv(n, bn)
+    dims = _DIMS[trans]
 
     # Index maps: split s owns K blocks [s*gk, (s+1)*gk).
     if trans == "nn":
@@ -609,7 +696,8 @@ def ftimm_gemm_splitk(
     c_spec = pl.BlockSpec((1, bm, bn), lambda s, i, j, k: (s, i, j))
 
     partials = pl.pallas_call(
-        functools.partial(_splitk_kernel, nk=gk, dims=dims),
+        functools.partial(_splitk_kernel, nk=gk, dims=dims, gk=gk, bk=bk,
+                          k_total=k, mask_k=mask_k),
         grid=(nsplit, gm, gn, gk),
         in_specs=[a_spec, b_spec],
         out_specs=c_spec,
@@ -620,4 +708,144 @@ def ftimm_gemm_splitk(
         ),
         interpret=interpret,
     )(a, b)
-    return jnp.sum(partials, axis=0).astype(out_dtype)
+    out = jnp.sum(partials, axis=0)
+    if not epilogue.is_identity:
+        out = epilogue.apply(out, bias=bias, residual=residual)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused silu(x@Wg) * (x@Wu) pair — the dense/grouped two-output epilogue
+# variant mirroring the ragged ftimm_gemm_ragged_swiglu: both panels stream
+# against the same x tile (one fetch of x per step instead of two), two fp32
+# accumulators ride the K loop, and the SwiGLU nonlinearity is applied in
+# VMEM at the flush.  One kernel launch for a dense MLP's gate/up pair.
+# ---------------------------------------------------------------------------
+
+
+def _swiglu_body(x_blk, wg_blk, wu_blk, o_ref, accg_ref, accu_ref, *,
+                 k, nk, k_lim):
+    @pl.when(k == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    if k_lim is not None:
+        x_blk = _mask_contract(x_blk, k_lim, 1)
+        wg_blk = _mask_contract(wg_blk, k_lim, 0)
+        wu_blk = _mask_contract(wu_blk, k_lim, 0)
+    accg_ref[...] += jax.lax.dot_general(
+        x_blk, wg_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    accu_ref[...] += jax.lax.dot_general(
+        x_blk, wu_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        gate = accg_ref[...]
+        act = gate * jax.nn.sigmoid(gate) * accu_ref[...]
+        o_ref[...] = act.astype(o_ref.dtype)
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, o_ref, accg_ref, accu_ref, *,
+                   nk, bk, k_total, mask_k):
+    k = pl.program_id(2)
+    k_lim = _k_limit(k_total, bk, k) if mask_k else None
+    _swiglu_body(x_ref[...], wg_ref[...], wu_ref[...], o_ref,
+                 accg_ref, accu_ref, k=k, nk=nk, k_lim=k_lim)
+
+
+def ftimm_gemm_swiglu(
+    x: jax.Array,                 # (M, K)
+    w_gate: jax.Array,            # (K, N)
+    w_up: jax.Array,              # (K, N)
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dense fused SwiGLU pair: silu(x @ Wg) * (x @ Wu) in ONE kernel launch
+    (shapes need not be block multiples — remainder K tiles mask in-kernel).
+    """
+    m, k = x.shape
+    kw, n = w_gate.shape
+    assert kw == k and w_up.shape == w_gate.shape, (
+        x.shape, w_gate.shape, w_up.shape)
+    out_dtype = out_dtype or x.dtype
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    return pl.pallas_call(
+        functools.partial(_swiglu_kernel, nk=gk, bk=bk, k_total=k,
+                          mask_k=bool(k % bk)),
+        grid=(gm, gn, gk),
+        in_specs=[x_spec, w_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w_gate, w_up)
+
+
+def _grouped_swiglu_kernel(x_ref, wg_ref, wu_ref, o_ref, accg_ref, accu_ref,
+                           *, nk, bk, k_total, mask_k, x_batched):
+    k = pl.program_id(3)
+    k_lim = _k_limit(k_total, bk, k) if mask_k else None
+    x_blk = x_ref[0] if x_batched else x_ref[...]
+    _swiglu_body(x_blk, wg_ref[0], wu_ref[0], o_ref.at[0],
+                 accg_ref, accu_ref, k=k, nk=nk, k_lim=k_lim)
+
+
+def ftimm_gemm_grouped_swiglu(
+    x: jax.Array,                 # (G, M, K) per-group rows | (M, K) shared
+    w_gate: jax.Array,            # (G, K, N)
+    w_up: jax.Array,              # (G, K, N)
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped fused SwiGLU pair: silu(x_g @ Wg_g) * (x_g @ Wu_g) per group
+    in ONE launch — the capacity-mode MoE gate/up projections
+    ``(E, C, D) @ (E, D, F)`` without the separate silu/mul XLA passes.
+    ``x`` may be 2-D (shared rows against per-group panels)."""
+    x_batched = x.ndim == 3
+    g, kw, n = w_gate.shape
+    m, k = x.shape[-2:]
+    assert kw == k and w_up.shape == w_gate.shape, (
+        x.shape, w_gate.shape, w_up.shape)
+    if x_batched:
+        assert x.shape[0] == g, (x.shape, w_gate.shape)
+    out_dtype = out_dtype or x.dtype
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
+    if x_batched:
+        x_spec = pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k))
+    else:
+        x_spec = pl.BlockSpec((bm, bk), lambda g, i, j, k: (i, k))
+    w_spec = pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j))
+    o_spec = pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j))
+    return pl.pallas_call(
+        functools.partial(_grouped_swiglu_kernel, nk=gk, bk=bk, k_total=k,
+                          mask_k=bool(k % bk), x_batched=x_batched),
+        grid=(g, gm, gn, gk),
+        in_specs=[x_spec, w_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w_gate, w_up)

@@ -1,11 +1,20 @@
 """jit'd public wrappers around the ftIMM Pallas kernels.
 
-Handles what the paper calls the "implicit padding" problem explicitly: the
-wrapper pads operands up to the chosen block multiples, runs the specialized
-kernel, and slices the result.  The *tuner* (``repro.core.gemm``) is
-responsible for choosing blocks that minimize this padding waste — the very
-thing the paper's auto-generated micro-kernels achieve over TGEMM's fixed
-(m_s=6, n_a=96) kernel.
+Handles what the paper calls the "implicit padding" problem.  Two edge
+policies exist (``edge=``):
+
+  * ``"masked"`` (default) — zero-copy: unpadded operands go straight to the
+    kernels, whose cdiv grids + in-kernel iota masks handle the remainder
+    tiles; the output comes back unsliced.  No extra HBM round-trip.
+  * ``"padded"`` — the legacy pad -> kernel -> slice path (two extra HBM
+    round-trips per GEMM on non-block-multiple shapes).  Kept as the
+    comparison point the tuner/benchmarks price and measure against.
+
+The *tuner* (``repro.core.gemm``) chooses blocks that minimize alignment
+waste — the very thing the paper's auto-generated micro-kernels achieve over
+TGEMM's fixed (m_s=6, n_a=96) kernel — and, since the epilogue generator,
+also whether the post-GEMM elementwise tail (bias/activation/residual/scale,
+``kernel.Epilogue``) fuses into the accumulator flush.
 
 On non-TPU backends the kernels run in interpret mode (Python emulation of
 the kernel body) — correct but slow; the framework's model code therefore
@@ -68,10 +77,29 @@ def bench(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+def _clamp_blocks(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                  nsplit: int, dtype) -> tuple[int, int, int, int]:
+    """Clamp a plan's blocks to the (rounded) problem extent.
+
+    ``bk`` is clamped exactly like ``bm``/``bn`` — a K=64 problem under a
+    bk=512 plan used to pad K 8x (the plan cache can legitimately suggest
+    such blocks for a different shape of the same signature family).  A
+    clamped ``bk`` may leave ``nsplit`` covering fewer K blocks than splits;
+    the split count shrinks with it (degenerating to 1 = the M-parallel
+    kernel)."""
+    bm_ = min(bm, _ceil_to(m, sublane(dtype)))
+    bn_ = min(bn, _ceil_to(n, 128))
+    bk_ = min(bk, _ceil_to(k, 128))
+    if nsplit > 1:
+        nsplit = max(1, min(nsplit, -(-_ceil_to(k, 128) // bk_)))
+    return bm_, bn_, bk_, nsplit
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bm", "bn", "bk", "nsplit", "trans", "dim_order", "out_dtype", "interpret",
+        "bm", "bn", "bk", "nsplit", "trans", "dim_order", "out_dtype",
+        "interpret", "epilogue", "edge",
     ),
 )
 def gemm(
@@ -86,46 +114,64 @@ def gemm(
     dim_order: str = "mn",
     out_dtype=None,
     interpret: bool | None = None,
+    epilogue: "_k.Epilogue | None" = None,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    edge: str = "masked",
 ) -> jax.Array:
-    """General entry: pads, dispatches to the M-parallel or split-K kernel,
-    un-pads.  ``nsplit > 1`` selects the K-parallel strategy."""
+    """General entry: dispatches to the M-parallel or split-K kernel
+    (``nsplit > 1`` selects K-parallel) with the epilogue fused at the flush.
+    ``edge="masked"`` passes operands through unpadded (in-kernel edge
+    tiles); ``edge="padded"`` pads to block multiples and slices back."""
     if interpret is None:
         interpret = _auto_interpret()
+    if edge not in ("masked", "padded"):
+        raise ValueError(f"unknown edge policy: {edge!r}")
+    epilogue = _k.IDENTITY if epilogue is None else epilogue
     out_dtype = out_dtype or a.dtype
     m, k, n = _k._mkn(trans, a.shape, b.shape)
+    bm_, bn_, bk_, nsplit = _clamp_blocks(m, k, n, bm, bn, bk, nsplit,
+                                          a.dtype)
 
-    bm_ = min(bm, _ceil_to(m, sublane(a.dtype)))
-    bn_, bk_ = min(bn, _ceil_to(n, 128)), bk
-    mp, np_, = _ceil_to(m, bm_), _ceil_to(n, bn_)
-    kp = _ceil_to(k, bk_ * nsplit) if nsplit > 1 else _ceil_to(k, bk_)
-    kp = max(kp, bk_ * nsplit)
-
-    if trans == "nn":
-        a_p, b_p = _pad_to(a, (mp, kp)), _pad_to(b, (kp, np_))
-    elif trans == "tn":
-        a_p, b_p = _pad_to(a, (kp, mp)), _pad_to(b, (kp, np_))
-    elif trans == "nt":
-        a_p, b_p = _pad_to(a, (mp, kp)), _pad_to(b, (np_, kp))
+    if edge == "padded":
+        mp, np_ = _ceil_to(m, bm_), _ceil_to(n, bn_)
+        kp = _ceil_to(k, bk_ * nsplit) if nsplit > 1 else _ceil_to(k, bk_)
+        kp = max(kp, bk_ * nsplit)
+        if trans == "nn":
+            a_p, b_p = _pad_to(a, (mp, kp)), _pad_to(b, (kp, np_))
+        elif trans == "tn":
+            a_p, b_p = _pad_to(a, (kp, mp)), _pad_to(b, (kp, np_))
+        elif trans == "nt":
+            a_p, b_p = _pad_to(a, (mp, kp)), _pad_to(b, (np_, kp))
+        else:
+            raise ValueError(trans)
+        bias_p = None if bias is None else _pad_to(bias, (np_,))
+        res_p = None if residual is None else _pad_to(residual, (mp, np_))
     else:
-        raise ValueError(trans)
+        if trans not in ("nn", "tn", "nt"):
+            raise ValueError(trans)
+        a_p, b_p, bias_p, res_p = a, b, bias, residual
 
     if nsplit > 1:
         out = _k.ftimm_gemm_splitk(
             a_p, b_p, bm=bm_, bn=bn_, bk=bk_, nsplit=nsplit, trans=trans,
-            out_dtype=out_dtype, interpret=interpret,
+            out_dtype=out_dtype, interpret=interpret, epilogue=epilogue,
+            bias=bias_p, residual=res_p,
         )
     else:
         out = _k.ftimm_gemm(
             a_p, b_p, bm=bm_, bn=bn_, bk=bk_, trans=trans,
             dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
+            epilogue=epilogue, bias=bias_p, residual=res_p,
         )
-    return out[:m, :n]
+    return out if edge == "masked" else out[:m, :n]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "bm", "bn", "bk", "trans", "dim_order", "out_dtype", "interpret",
+        "epilogue", "edge",
     ),
 )
 def batched_gemm(
@@ -139,37 +185,129 @@ def batched_gemm(
     dim_order: str = "mn",
     out_dtype=None,
     interpret: bool | None = None,
+    epilogue: "_k.Epilogue | None" = None,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    edge: str = "masked",
 ) -> jax.Array:
-    """Batched/grouped entry: pads per-group panels to block multiples, runs
-    the batched kernel, un-pads.  Either operand may be 2-D (shared across
-    the batch — the grouped-GEMM case); the batch dim itself is never padded
-    (it maps 1:1 onto the leading grid dim)."""
+    """Batched/grouped entry.  Either operand may be 2-D (shared across the
+    batch — the grouped-GEMM case); the batch dim itself is never padded (it
+    maps 1:1 onto the leading grid dim).  ``edge="masked"`` (default) runs
+    the kernel on unpadded per-group panels; ``edge="padded"`` is the legacy
+    pad/slice path.  ``bias`` is (N,) shared across the batch, ``residual``
+    (G, M, N)."""
     if interpret is None:
         interpret = _auto_interpret()
+    if edge not in ("masked", "padded"):
+        raise ValueError(f"unknown edge policy: {edge!r}")
+    epilogue = _k.IDENTITY if epilogue is None else epilogue
     out_dtype = out_dtype or a.dtype
     m, k, n = _k._mkn(trans, a.shape[-2:], b.shape[-2:])
+    bm_, bn_, bk_, _ = _clamp_blocks(m, k, n, bm, bn, bk, 1, a.dtype)
 
-    bm_ = min(bm, _ceil_to(m, sublane(a.dtype)))
-    bn_, bk_ = min(bn, _ceil_to(n, 128)), bk
-    mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(k, bk_)
+    if edge == "padded":
+        mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(k, bk_)
 
-    def pad_panels(x, last2):
-        return _pad_to(x, x.shape[:-2] + last2)
+        def pad_panels(x, last2):
+            return _pad_to(x, x.shape[:-2] + last2)
 
-    if trans == "nn":
-        a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (kp, np_))
-    elif trans == "tn":
-        a_p, b_p = pad_panels(a, (kp, mp)), pad_panels(b, (kp, np_))
-    elif trans == "nt":
-        a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (np_, kp))
+        if trans == "nn":
+            a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (kp, np_))
+        elif trans == "tn":
+            a_p, b_p = pad_panels(a, (kp, mp)), pad_panels(b, (kp, np_))
+        elif trans == "nt":
+            a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (np_, kp))
+        else:
+            raise ValueError(trans)
+        bias_p = None if bias is None else _pad_to(bias, (np_,))
+        res_p = None if residual is None else \
+            _pad_to(residual, (residual.shape[0], mp, np_))
     else:
-        raise ValueError(trans)
+        if trans not in ("nn", "tn", "nt"):
+            raise ValueError(trans)
+        a_p, b_p, bias_p, res_p = a, b, bias, residual
 
     out = _k.ftimm_gemm_grouped(
         a_p, b_p, bm=bm_, bn=bn_, bk=bk_, trans=trans,
         dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
+        epilogue=epilogue, bias=bias_p, residual=res_p,
     )
-    return out[:, :m, :n]
+    return out if edge == "masked" else out[:, :m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret", "edge"),
+)
+def gemm_swiglu(
+    x: jax.Array,                 # (M, K)
+    w_gate: jax.Array,            # (K, N)
+    w_up: jax.Array,              # (K, N)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool | None = None,
+    edge: str = "masked",
+) -> jax.Array:
+    """Dense fused SwiGLU pair: silu(x @ Wg) * (x @ Wu) in one launch — the
+    dense MLP's gate/up projections without the separate silu/mul passes."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    if edge not in ("masked", "padded"):
+        raise ValueError(f"unknown edge policy: {edge!r}")
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    n = w_gate.shape[1]
+    bm_, bn_, bk_, _ = _clamp_blocks(m, k, n, bm, bn, bk, 1, x.dtype)
+    if edge == "padded":
+        mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+        out = _k.ftimm_gemm_swiglu(
+            _pad_to(x, (mp, kp)), _pad_to(w_gate, (kp, np_)),
+            _pad_to(w_up, (kp, np_)), bm=bm_, bn=bn_, bk=bk_,
+            out_dtype=out_dtype, interpret=interpret)
+        return out[:m, :n]
+    return _k.ftimm_gemm_swiglu(x, w_gate, w_up, bm=bm_, bn=bn_, bk=bk_,
+                                out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret", "edge"),
+)
+def batched_gemm_swiglu(
+    x: jax.Array,                 # (G, M, K) | (M, K) shared
+    w_gate: jax.Array,            # (G, K, N)
+    w_up: jax.Array,              # (G, K, N)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool | None = None,
+    edge: str = "masked",
+) -> jax.Array:
+    """Grouped fused SwiGLU pair — the capacity-mode MoE gate/up projections
+    (E, C, D) @ (E, D, F) as ONE launch with the silu(gate)*up epilogue."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    if edge not in ("masked", "padded"):
+        raise ValueError(f"unknown edge policy: {edge!r}")
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape[-2:]
+    g, _, n = w_gate.shape
+    bm_, bn_, bk_, _ = _clamp_blocks(m, k, n, bm, bn, bk, 1, x.dtype)
+    if edge == "padded":
+        mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+        x_p = _pad_to(x, x.shape[:-2] + (mp, kp))
+        out = _k.ftimm_gemm_grouped_swiglu(
+            x_p, _pad_to(w_gate, (g, kp, np_)), _pad_to(w_up, (g, kp, np_)),
+            bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype, interpret=interpret)
+        return out[:, :m, :n]
+    return _k.ftimm_gemm_grouped_swiglu(
+        x, w_gate, w_up, bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ import jax
 import numpy as np
 
 from ..configs import get_config
-from ..core.gemm import autotune, plan_mode_stats
+from ..core.gemm import autotune, epilogue_stats, plan_mode_stats
 from ..models.model import init_params
 from ..serve.engine import Request, ServeEngine
 
@@ -40,6 +40,21 @@ def load_plan_cache(path: str | None) -> int:
           + (f" (calibration flops_frac={cal.flops_frac:.3g} "
                f"bw_frac={cal.bw_frac:.3g})" if cal else ""))
     return n
+
+
+def fusion_coverage() -> str:
+    """Human-readable epilogue-fusion census of the traced serving graphs:
+    how many epilogue-carrying GEMMs ran their elementwise tail fused into
+    the kernel/jit vs as separate output passes, per plan family."""
+    stats = epilogue_stats()
+    if not stats:
+        return "(no epilogue-carrying GEMMs traced)"
+    fused = sum(v.get("fused", 0) for v in stats.values())
+    total = fused + sum(v.get("separate", 0) for v in stats.values())
+    per_family = ", ".join(
+        f"{fam}: {v.get('fused', 0)}/{v.get('fused', 0) + v.get('separate', 0)}"
+        for fam, v in sorted(stats.items()))
+    return f"{fused}/{total} fused ({per_family})"
 
 
 def main() -> None:
@@ -69,7 +84,12 @@ def main() -> None:
     engine.run(reqs)
     for r in reqs:
         print(f"req {r.rid}: {r.out_tokens}")
-    print("plan modes:", plan_mode_stats() or "(no planned GEMMs traced)")
+    # plan_mode_stats carries an "epilogue" summary entry too; the census is
+    # printed once here as the dedicated coverage line instead.
+    modes = {fam: v for fam, v in plan_mode_stats().items()
+             if fam != "epilogue"}
+    print("plan modes:", modes or "(no planned GEMMs traced)")
+    print("epilogue fusion:", fusion_coverage())
     print("serving done")
 
 

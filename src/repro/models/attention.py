@@ -237,6 +237,7 @@ def attention(
     compute_dtype=jnp.bfloat16,
     block_kv: int = 1024,
     unroll: bool = False,
+    residual: jax.Array | None = None,
 ):
     """Full attention layer. Returns (out, new_kv_cache | None).
 
@@ -244,6 +245,9 @@ def attention(
     * decode: ``kv_cache`` given + ``cache_index`` = current position; the
       new token's K/V are inserted and attention runs over the whole buffer.
     * cross-attention: ``cross_kv`` precomputed (B, S_enc, KVH, D) pair.
+    * ``residual``: the block's residual stream (B, S, D_model), added in
+      the out-projection's fused epilogue — the transformer's ``h + attn``
+      without a separate elementwise pass over the output.
     """
     b, s, _ = x.shape
     q = dense(x, params["wq"], compute_dtype).reshape(b, s, num_heads, head_dim)
@@ -302,4 +306,5 @@ def attention(
             new_cache = None
 
     out = out.reshape(b, s, num_heads * head_dim)
-    return dense(out, params["wo"], compute_dtype), new_cache
+    return dense(out, params["wo"], compute_dtype,
+                 residual=residual), new_cache

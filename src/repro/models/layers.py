@@ -4,6 +4,12 @@ All dense contractions route through ``repro.core.gemm.project`` so the
 ftIMM planner sees every GEMM in the framework (and dispatches to the Pallas
 kernels on TPU).  Weights are kept in ``param_dtype`` (fp32 master) and cast
 to ``compute_dtype`` at use.
+
+Elementwise layer tails fuse into their producing GEMM: ``dense`` takes
+optional ``bias`` / ``residual`` / ``activation`` (an ``Epilogue`` applied at
+the fp32 accumulator flush instead of separate XLA passes over the output),
+and ``swiglu`` runs its gate/up pair as ONE fused kernel launch
+(``project_swiglu``) with the residual add fused into the down projection.
 """
 from __future__ import annotations
 
@@ -11,13 +17,28 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dist import shard_act
-from ..core.gemm import project
+from ..core.gemm import Epilogue, project, project_swiglu
 
 
-def dense(x: jax.Array, w: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
-    """y = x @ w with fp32 accumulation; w cast to compute dtype at use."""
-    return project(x.astype(compute_dtype), w.astype(compute_dtype),
-                   out_dtype=compute_dtype)
+def dense(x: jax.Array, w: jax.Array, compute_dtype=jnp.bfloat16, *,
+          bias: jax.Array | None = None,
+          residual: jax.Array | None = None,
+          activation: str = "none") -> jax.Array:
+    """y = act(x @ w + bias) + residual with fp32 accumulation; w cast to
+    compute dtype at use.  The bias/activation/residual tail (when present)
+    is a fused GEMM epilogue — applied to the fp32 accumulator in VMEM, not
+    as separate passes over the stored output."""
+    epi = Epilogue(bias=bias is not None, activation=activation,
+                   residual=residual is not None)
+    if epi.is_identity:
+        return project(x.astype(compute_dtype), w.astype(compute_dtype),
+                       out_dtype=compute_dtype)
+    return project(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        out_dtype=compute_dtype, epilogue=epi,
+        bias=None if bias is None else bias.astype(compute_dtype),
+        residual=None if residual is None
+        else residual.astype(compute_dtype))
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -40,12 +61,17 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
 
 
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
-           compute_dtype=jnp.bfloat16) -> jax.Array:
-    """SwiGLU MLP: down(silu(gate(x)) * up(x)).  gate/up are T3-shaped GEMMs
-    in training (tokens x d_model x d_ff)."""
-    g = dense(x, w_gate, compute_dtype)
-    u = dense(x, w_up, compute_dtype)
-    return dense(jax.nn.silu(g) * u, w_down, compute_dtype)
+           compute_dtype=jnp.bfloat16,
+           residual: jax.Array | None = None) -> jax.Array:
+    """SwiGLU MLP: down(silu(gate(x)) * up(x)) [+ residual].  gate/up are
+    T3-shaped GEMMs in training (tokens x d_model x d_ff), run as ONE fused
+    kernel launch (x streamed once against both panels, silu(gate)*up at the
+    accumulator flush); the residual add fuses into the down projection's
+    epilogue instead of a separate pass over the layer output."""
+    h = project_swiglu(x.astype(compute_dtype),
+                       w_gate.astype(compute_dtype),
+                       w_up.astype(compute_dtype), out_dtype=compute_dtype)
+    return dense(h, w_down, compute_dtype, residual=residual)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:

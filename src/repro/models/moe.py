@@ -53,8 +53,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dist import current_dist, shard_act
-from ..core.gemm import (ep_ragged_moe, grouped_matmul, plan_moe_dispatch,
-                         project, ragged_matmul, ragged_swiglu)
+from ..core.gemm import (ep_ragged_moe, grouped_matmul, grouped_swiglu,
+                         plan_moe_dispatch, project, ragged_matmul,
+                         ragged_swiglu)
 
 
 def _ep_axis(num_experts: int):
@@ -168,10 +169,12 @@ def moe_mlp(
     # through the CMR planner — the batch dim is the expert index, the
     # per-expert shape is the paper's irregular (capacity x d_model x d_ff);
     # their backward dW is the T2-shaped grouped GEMM, planned the same way.
+    # The gate/up pair is ONE fused silu(gate)*up launch (the capacity-mode
+    # analogue of the ragged path's fused SwiGLU).
     wg = params["w_gate"].astype(compute_dtype)
     wu = params["w_up"].astype(compute_dtype)
     wd = params["w_down"].astype(compute_dtype)
-    h = jax.nn.silu(grouped_matmul(buf, wg)) * grouped_matmul(buf, wu)
+    h = grouped_swiglu(buf, wg, wu)
     y_buf = grouped_matmul(h, wd).reshape(e * c, d)
 
     # Gather back and combine with gate weights.

@@ -131,8 +131,11 @@ def _mlp_or_moe(h, p, cfg: ModelConfig):
                          compute_dtype=_cdt(cfg),
                          dispatch=cfg.moe_dispatch)
         return h + y.reshape(b, s, d), aux
-    return h + swiglu(x, p["mlp"]["w_gate"], p["mlp"]["w_up"],
-                      p["mlp"]["w_down"], _cdt(cfg)), jnp.float32(0.0)
+    # Residual add fused into the down projection's epilogue (and the
+    # gate/up pair is one fused kernel launch inside swiglu).
+    return swiglu(x, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                  p["mlp"]["w_down"], _cdt(cfg),
+                  residual=h), jnp.float32(0.0)
 
 
 def _gathered(x, cfg):
@@ -150,24 +153,24 @@ def _gathered(x, cfg):
 def dense_block(h, p, cfg: ModelConfig, *, positions, window,
                 kv=None, cache_index=None, cross_kv=None, causal=True,
                 use_rope=True):
-    """Returns (h, new_kv, aux)."""
-    attn_out, new_kv = attention(
+    """Returns (h, new_kv, aux).  The residual adds around attention (and
+    the MLP, see ``_mlp_or_moe``) ride the out-projections' fused epilogues
+    instead of separate elementwise passes over the block output."""
+    h, new_kv = attention(
         _gathered(rms_norm(h, p["ln1"]), cfg), p["attn"],
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.head_dim_, positions=positions, window=window,
         causal=causal, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
         use_rope=use_rope, kv_cache=kv, cache_index=cache_index,
-        compute_dtype=_cdt(cfg), unroll=cfg.scan_unroll)
-    h = h + attn_out
+        compute_dtype=_cdt(cfg), unroll=cfg.scan_unroll, residual=h)
     if cross_kv is not None:
-        x_out, _ = attention(
+        h, _ = attention(
             rms_norm(h, p["ln_cross"]), p["cross"],
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim_, positions=positions, window=0,
             causal=False, qk_norm=False, rope_theta=cfg.rope_theta,
             use_rope=False, cross_kv=cross_kv, compute_dtype=_cdt(cfg),
-            unroll=cfg.scan_unroll)
-        h = h + x_out
+            unroll=cfg.scan_unroll, residual=h)
     h, aux = _mlp_or_moe(h, p, cfg)
     # Sequence parallelism on the residual stream (training): the layer-scan
     # carry is the dominant live activation (L x B x S x D saved for the

@@ -1,0 +1,383 @@
+"""Fused-epilogue generator + zero-copy edge tiles: conformance suite.
+
+Covers the PR-5 acceptance bar: the fused-epilogue matmul matches the
+unfused reference to fp32-accumulation tolerance (fwd and VJP) on every
+trans / dim-order / split-K / batched variant, including non-block-multiple
+shapes with the padded path fully bypassed (edge="masked"), on both the
+pallas_interpret and XLA engines; plus the planner/candidate-space and
+telemetry extensions and the bk-clamp bugfix.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core.gemm import (Epilogue, clear_plan_cache, epilogue_stats,
+                             grouped_swiglu, matmul, matmul_swiglu,
+                             plan_gemm, plan_mode_stats)
+from repro.core.gemm import autotune, tuner
+from repro.kernels.ftimm import ops, ref
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _mk(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY, seed), shape, dtype)
+
+
+def _operands(trans, m, k, n, seed=0, dtype=jnp.float32):
+    shapes = {"nn": ((m, k), (k, n)), "tn": ((k, m), (k, n)),
+              "nt": ((m, k), (n, k))}[trans]
+    return _mk(shapes[0], seed), _mk(shapes[1], seed + 1, dtype)
+
+
+def _ref(trans):
+    return {"nn": ref.matmul_nn, "tn": ref.matmul_tn,
+            "nt": ref.matmul_nt}[trans]
+
+
+FULL_EPI = Epilogue(bias=True, activation="silu", residual=True, scale=0.5)
+
+
+def _apply_ref(epi, z, bias=None, residual=None):
+    return epi.apply(z, bias=bias, residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy edge tiles: masked == padded == reference on unaligned shapes.
+# ---------------------------------------------------------------------------
+
+EDGE_SHAPES = [(33, 257, 65), (100, 60, 96), (8, 128, 8), (129, 130, 131)]
+
+
+@pytest.mark.parametrize("m,k,n", EDGE_SHAPES)
+@pytest.mark.parametrize("trans", ["nn", "tn", "nt"])
+@pytest.mark.parametrize("dim_order", ["mn", "nm"])
+def test_masked_edge_matches_reference(m, k, n, trans, dim_order):
+    a, b = _operands(trans, m, k, n, seed=m + k)
+    want = _ref(trans)(a, b)
+    out = ops.gemm(a, b, trans=trans, dim_order=dim_order, edge="masked",
+                   interpret=True)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+    padded = ops.gemm(a, b, trans=trans, dim_order=dim_order, edge="padded",
+                      interpret=True)
+    np.testing.assert_allclose(out, padded, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 80), k=st.integers(1, 150), n=st.integers(1, 80))
+def test_masked_edge_property(m, k, n):
+    """Random non-block-multiple shapes through the zero-copy path."""
+    a, b = _operands("nn", m, k, n, seed=m * 131 + k * 7 + n)
+    out = ops.gemm(a, b, edge="masked", interpret=True)
+    np.testing.assert_allclose(out, ref.matmul_nn(a, b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("nsplit", [2, 4])
+def test_masked_splitk_unaligned(nsplit):
+    """Split-K with K not a multiple of nsplit*bk: out-of-range K blocks
+    mask to zero contributions."""
+    a, b = _operands("nn", 16, 1000, 96, seed=3)
+    out = ops.gemm(a, b, nsplit=nsplit, edge="masked", interpret=True)
+    np.testing.assert_allclose(out, ref.matmul_nn(a, b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bk_clamped_to_problem_extent():
+    """Regression (satellite bugfix): a K=64 problem under a bk=512 plan
+    must clamp bk instead of padding K 8x — and a split-K plan whose clamped
+    bk covers all of K degenerates to one split."""
+    a, b = _operands("nn", 128, 64, 32, seed=5)
+    want = ref.matmul_nn(a, b)
+    for edge in ("masked", "padded"):
+        out = ops.gemm(a, b, bk=512, edge=edge, interpret=True)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+    out = ops.gemm(a, b, bk=512, nsplit=4, interpret=True)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+    # batched wrapper clamps the same way
+    a3, b3 = _mk((3, 64, 64), 6), _mk((3, 64, 32), 7)
+    out = ops.batched_gemm(a3, b3, bk=512, interpret=True)
+    np.testing.assert_allclose(out, jnp.einsum("gmk,gkn->gmn", a3, b3),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_batched_masked_edge_matches_reference():
+    a3, b3 = _mk((3, 33, 100), 8), _mk((3, 100, 65), 9)
+    want = jnp.einsum("gmk,gkn->gmn", a3, b3)
+    for edge in ("masked", "padded"):
+        out = ops.batched_gemm(a3, b3, edge=edge, interpret=True)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+    # shared-operand (grouped) case
+    a2 = _mk((33, 100), 10)
+    want = jnp.einsum("mk,gkn->gmn", a2, b3)
+    out = ops.batched_gemm(a2, b3, edge="masked", interpret=True)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue: fwd + VJP vs the unfused reference, both engines.
+# ---------------------------------------------------------------------------
+
+EPI_CASES = [
+    Epilogue(bias=True),
+    Epilogue(activation="silu"),
+    Epilogue(activation="gelu"),
+    Epilogue(residual=True),
+    Epilogue(scale=0.25),
+    FULL_EPI,
+]
+
+
+@pytest.mark.parametrize("epi", EPI_CASES, ids=lambda e: repr(e))
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_epilogue_fwd_matches_reference(epi, backend):
+    m, k, n = 33, 70, 65          # unaligned: masked path exercised
+    a, b = _operands("nn", m, k, n, seed=20)
+    bias = _mk((n,), 21) if epi.bias else None
+    res = _mk((m, n), 22) if epi.residual else None
+    out = matmul(a, b, epilogue=epi, bias=bias, residual=res,
+                 backend=backend)
+    want = _apply_ref(epi, ref.matmul_nn(a, b, jnp.float32), bias, res)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("trans", ["nn", "tn", "nt"])
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_epilogue_vjp_matches_autodiff(trans, backend):
+    """Gradients of the fused path (remat + planned backward GEMMs) match
+    plain autodiff of the reference composition — incl. bias/residual
+    cotangents — on an unaligned shape."""
+    m, k, n = 24, 50, 40
+    a, b = _operands(trans, m, k, n, seed=30)
+    bias, res = _mk((n,), 31), _mk((m, n), 32)
+    epi = FULL_EPI
+
+    def fused(a, b, bias, res):
+        y = matmul(a, b, trans=trans, epilogue=epi, bias=bias, residual=res,
+                   backend=backend)
+        return jnp.sum(jnp.tanh(y))
+
+    def reference(a, b, bias, res):
+        y = _apply_ref(epi, _ref(trans)(a, b, jnp.float32), bias, res)
+        return jnp.sum(jnp.tanh(y))
+
+    g1 = jax.grad(fused, argnums=(0, 1, 2, 3))(a, b, bias, res)
+    g2 = jax.grad(reference, argnums=(0, 1, 2, 3))(a, b, bias, res)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(m=st.integers(2, 48), k=st.integers(2, 64), n=st.integers(2, 48))
+def test_epilogue_property_fwd_and_grad(m, k, n):
+    """Random unaligned shapes: fused silu epilogue fwd + dA grad vs
+    reference, pallas_interpret engine (the padded path fully bypassed)."""
+    a, b = _operands("nn", m, k, n, seed=m * 7 + k * 3 + n)
+    epi = Epilogue(activation="silu")
+
+    def fused(a):
+        return jnp.sum(matmul(a, b, epilogue=epi,
+                              backend="pallas_interpret") ** 2)
+
+    def reference(a):
+        return jnp.sum(jax.nn.silu(ref.matmul_nn(a, b, jnp.float32)) ** 2)
+
+    np.testing.assert_allclose(
+        matmul(a, b, epilogue=epi, backend="pallas_interpret"),
+        jax.nn.silu(ref.matmul_nn(a, b, jnp.float32)),
+        rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(jax.grad(fused)(a), jax.grad(reference)(a),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_epilogue_splitk_plan_path():
+    """A split-K plan (nsplit > 1) applies the epilogue after the partials
+    reduction — same math as the fused flush."""
+    a, b = _operands("nn", 16, 1000, 96, seed=40)
+    bias = _mk((96,), 41)
+    epi = Epilogue(bias=True, activation="gelu")
+    out = ops.gemm(a, b, nsplit=4, epilogue=epi, bias=bias, interpret=True)
+    want = _apply_ref(epi, ref.matmul_nn(a, b, jnp.float32), bias)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+def test_epilogue_operand_mismatch_raises():
+    a, b = _operands("nn", 16, 32, 32, seed=42)
+    with pytest.raises(ValueError):
+        matmul(a, b, epilogue=Epilogue(bias=True))           # bias missing
+    with pytest.raises(ValueError):
+        matmul(a, b, residual=_mk((16, 32), 43))             # spec missing
+    with pytest.raises(ValueError):
+        Epilogue(activation="relu")                          # unknown act
+
+
+# ---------------------------------------------------------------------------
+# Fused SwiGLU pairs (dense + grouped).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_matmul_swiglu_fwd_and_vjp(backend):
+    x, wg, wu = _mk((33, 100), 50), _mk((100, 65), 51), _mk((100, 65), 52)
+
+    def sw_ref(x, wg, wu):
+        return jax.nn.silu(x @ wg) * (x @ wu)
+
+    out = matmul_swiglu(x, wg, wu, backend=backend)
+    np.testing.assert_allclose(out, sw_ref(x, wg, wu), rtol=3e-4, atol=3e-4)
+    g1 = jax.grad(lambda *p: jnp.sum(jnp.tanh(matmul_swiglu(
+        *p, backend=backend))), argnums=(0, 1, 2))(x, wg, wu)
+    g2 = jax.grad(lambda *p: jnp.sum(jnp.tanh(sw_ref(*p))),
+                  argnums=(0, 1, 2))(x, wg, wu)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_grouped_swiglu_fwd_and_vjp(backend):
+    x = _mk((3, 33, 100), 60)
+    wg, wu = _mk((3, 100, 65), 61), _mk((3, 100, 65), 62)
+
+    def sw_ref(x, wg, wu):
+        return (jax.nn.silu(jnp.einsum("gmk,gkn->gmn", x, wg))
+                * jnp.einsum("gmk,gkn->gmn", x, wu))
+
+    out = grouped_swiglu(x, wg, wu, backend=backend)
+    np.testing.assert_allclose(out, sw_ref(x, wg, wu), rtol=3e-4, atol=3e-4)
+    g1 = jax.grad(lambda *p: jnp.sum(jnp.tanh(grouped_swiglu(
+        *p, backend=backend))), argnums=(0, 1, 2))(x, wg, wu)
+    g2 = jax.grad(lambda *p: jnp.sum(jnp.tanh(sw_ref(*p))),
+                  argnums=(0, 1, 2))(x, wg, wu)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Planner: candidate space, cached round-trip, telemetry.
+# ---------------------------------------------------------------------------
+
+def test_candidate_space_edges_and_fusion():
+    # Unaligned shape WITH an epilogue: all four (edge, fuse) corners exist.
+    cands = tuner.gemm_candidates(100, 60, 96, epi_ops=2)
+    assert {(c.edge, c.fuse) for c in cands} == {
+        ("masked", True), ("masked", False),
+        ("padded", True), ("padded", False)}
+    # Aligned shape, no epilogue: nothing to fork on.
+    aligned = tuner.gemm_candidates(256, 256, 256)
+    assert {(c.edge, c.fuse) for c in aligned} == {("masked", True)}
+    # The analytic winner never pays for pad copies or separate passes.
+    best = tuner.argmin_plan(cands)
+    assert best.edge == "masked" and best.fuse
+
+
+def test_epilogue_pricing_monotone():
+    from repro.core.gemm import estimate
+    kw = dict(m=1000, k=60, n=96, bm=128, bn=128, bk=128)
+    base = estimate(**kw)
+    padded = estimate(**kw, edge="padded")
+    unfused = estimate(**kw, epi_ops=2, epi_fused=False)
+    fused = estimate(**kw, epi_ops=2, epi_fused=True)
+    assert padded.hbm_bytes > base.hbm_bytes
+    assert unfused.hbm_bytes > fused.hbm_bytes == base.hbm_bytes
+
+
+def test_measured_plan_round_trips_edge_and_fuse():
+    """autotune persists edge/fuse; the cached plan serves them back."""
+    clear_plan_cache()
+    try:
+        res = autotune.autotune_gemm(
+            200, 60, 96, top_k=3, repeats=1, engine="xla",
+            max_elements=1 << 14, epilogue=Epilogue(activation="silu"))
+        served = plan_gemm(200, 60, 96)
+        assert served.mode == "cached"
+        assert served.edge == res.plan.edge
+        assert served.fuse == res.plan.fuse
+    finally:
+        clear_plan_cache()
+
+
+def test_fusion_telemetry():
+    clear_plan_cache()
+    try:
+        a, b = _operands("nn", 32, 64, 32, seed=70)
+        matmul(a, b, backend="xla")                      # identity: no count
+        assert epilogue_stats() == {}
+        matmul(a, b, epilogue=Epilogue(activation="silu"), backend="xla")
+        stats = epilogue_stats()
+        assert stats["dense"]["fused"] == 1
+        assert "epilogue" in plan_mode_stats()
+        x = _mk((2, 16, 32), 71)
+        w = _mk((2, 32, 32), 72)
+        grouped_swiglu(x, w, w, backend="xla")
+        assert epilogue_stats()["batched"]["fused"] == 1
+        clear_plan_cache()
+        assert epilogue_stats() == {}
+    finally:
+        clear_plan_cache()
+
+
+def test_decompose_reproduces_apply():
+    """The unfused path's per-op decomposition composes back to exactly the
+    fused ``apply`` (what both the CPU benchmark and an unfused measured
+    plan execute)."""
+    z = _mk((17, 23), 80, jnp.float32)
+    bias, res = _mk((23,), 81), _mk((17, 23), 82)
+    want = FULL_EPI.apply(z, bias=bias, residual=res)
+    out = z
+    for op in FULL_EPI.decompose():
+        out = op.apply(out, bias=bias, residual=res)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+    assert len(FULL_EPI.decompose()) == FULL_EPI.num_ops == 4
+    assert Epilogue().decompose() == () and Epilogue().num_ops == 0
+
+
+# ---------------------------------------------------------------------------
+# Distributed: epilogue through dist_matmul on both strategies.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["m_parallel", "k_parallel"])
+def test_dist_matmul_epilogue(strategy):
+    from jax.sharding import Mesh
+    from repro.core.gemm import dist_matmul
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    m, k, n = 33, 70, 65
+    a, b = _operands("nn", m, k, n, seed=90)
+    bias, res = _mk((n,), 91), _mk((m, n), 92)
+    epi = FULL_EPI
+    out = dist_matmul(a, b, mesh=mesh, axis="model", strategy=strategy,
+                      epilogue=epi, bias=bias, residual=res, backend="xla")
+    want = _apply_ref(epi, ref.matmul_nn(a, b, jnp.float32), bias, res)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Model layers: the fused tails match the unfused composition.
+# ---------------------------------------------------------------------------
+
+def test_layers_dense_fused_residual():
+    from repro.models.layers import dense
+    x = _mk((2, 9, 48), 100)
+    w = _mk((48, 48), 101)
+    h = _mk((2, 9, 48), 102)
+    out = dense(x, w, jnp.float32, residual=h)
+    want = ref.matmul_nn(x.reshape(18, 48), w,
+                         jnp.float32).reshape(2, 9, 48) + h
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+def test_layers_swiglu_fused_matches_unfused():
+    from repro.models.layers import swiglu
+    x = _mk((2, 9, 48), 110)
+    wg, wu = _mk((48, 64), 111), _mk((48, 64), 112)
+    wd = _mk((64, 48), 113)
+    h = _mk((2, 9, 48), 114)
+    out = swiglu(x, wg, wu, wd, jnp.float32, residual=h)
+    xf = x.reshape(18, 48)
+    want = (jax.nn.silu(xf @ wg) * (xf @ wu)) @ wd
+    want = want.reshape(2, 9, 48) + h
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)

@@ -29,6 +29,24 @@ def test_plan_respects_vmem_budget(m, k, n):
     assert plan.bm % TPU_V5E.sublane_fp32 == 0 or plan.bm >= m
 
 
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 2**18), k=st.integers(1, 2**18),
+       n=st.integers(1, 512))
+def test_analytic_plan_prefers_zero_copy(m, k, n):
+    """The CMR model never picks the padded edge policy or an unfused
+    epilogue over masked/fused — pad copies and separate output passes only
+    ADD traffic (only a measurement can overrule that)."""
+    from repro.core.gemm.tuner import argmin_plan, gemm_candidates
+    plan = argmin_plan(gemm_candidates(m, k, n, epi_ops=2))
+    assert plan.edge == "masked" and plan.fuse
+    # padded candidates exist exactly when some dim is unaligned
+    cands = gemm_candidates(m, k, n)
+    has_padded = any(c.edge == "padded" for c in cands)
+    all_aligned = all(m % c.bm == 0 and n % c.bn == 0 and k % c.bk == 0
+                      for c in cands)
+    assert has_padded == (not all_aligned)
+
+
 @settings(max_examples=30, deadline=None)
 @given(m=st.integers(8, 2**20), k=st.integers(8, 2**20),
        n=st.integers(1, 128))

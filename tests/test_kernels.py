@@ -104,6 +104,22 @@ def test_gemm_property_random_shapes(m, k, n):
     _check("nn", a, b, out, jnp.float32)
 
 
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 160), n=st.integers(1, 96))
+def test_gemm_property_zero_copy_edges(m, k, n):
+    """Non-block-multiple shapes through the in-kernel edge-tile masking
+    (edge="masked": no pad, no slice) across all trans layouts and both dim
+    orders, against the padded path and the oracle."""
+    for trans in ("nn", "tn", "nt"):
+        a, b = _mk(trans, m, k, n, jnp.float32)
+        for dim_order in ("mn", "nm"):
+            out = gemm(a, b, trans=trans, dim_order=dim_order,
+                       edge="masked", interpret=True)
+            _check(trans, a, b, out, jnp.float32)
+    padded = gemm(a, b, trans="nt", edge="padded", interpret=True)
+    np.testing.assert_allclose(out, padded, rtol=1e-6, atol=1e-6)
+
+
 @settings(max_examples=10, deadline=None)
 @given(m=st.integers(2, 48), k=st.integers(2, 64), n=st.integers(2, 48))
 def test_gemm_linearity(m, k, n):
