@@ -38,41 +38,16 @@ sys.path.insert(0, str(_ROOT / "src"))
 import jax  # noqa: E402
 
 from repro.core.gemm import autotune, plan_store, tuner  # noqa: E402
-from repro.core.gemm.shapes import classify  # noqa: E402
+from repro.core.gemm.shapes import PAPER_IRREGULAR_SHAPES, classify  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 
 RESULTS = _ROOT / "results"
 DEFAULT_OUT = RESULTS / "BENCH_irregular.json"
 DEFAULT_CACHE = RESULTS / "plan_cache.json"
 
-# The paper's three irregular families (§III-A), TPU-adapted sizes —
-# 21 shapes, every one classified T1/T2/T3 (asserted below).
-T_SHAPES: list[tuple[str, int, int, int]] = [
-    # T1: M >> K ~ N (tall-and-skinny x small)
-    ("t1_64k_32", 65536, 32, 32),
-    ("t1_64k_64", 65536, 64, 64),
-    ("t1_64k_128", 65536, 128, 128),
-    ("t1_256k_32", 262144, 32, 32),
-    ("t1_256k_64", 262144, 64, 64),
-    ("t1_256k_128", 262144, 128, 128),
-    ("t1_1m_32", 1048576, 32, 32),
-    ("t1_1m_64", 1048576, 64, 64),
-    ("t1_1m_128", 1048576, 128, 128),
-    # T2: K >> M ~ N (skinny-and-tall x tall-and-skinny)
-    ("t2_32_64k", 32, 65536, 32),
-    ("t2_32_256k", 32, 262144, 64),
-    ("t2_64_1m", 64, 1048576, 64),
-    ("t2_128_512k", 128, 524288, 128),
-    ("t2_32_1m", 32, 1048576, 32),
-    ("t2_64_64k", 64, 65536, 128),
-    # T3: M ~ K >> N (large regular x tall-and-skinny)
-    ("t3_4k_32", 4096, 4096, 32),
-    ("t3_8k_64", 8192, 8192, 64),
-    ("t3_8k_96", 8192, 8192, 96),
-    ("t3_16k_32", 16384, 16384, 32),
-    ("t3_20k_32", 20480, 20480, 32),
-    ("t3_20k_96", 20480, 20480, 96),
-]
+# The paper's 21 T1/T2/T3 shapes — canonical list lives in
+# ``repro.core.gemm.shapes`` (shared with the static verification sweep).
+T_SHAPES: list[tuple[str, int, int, int]] = list(PAPER_IRREGULAR_SHAPES)
 
 SMOKE_SHAPES: list[tuple[str, int, int, int]] = [
     ("t1_smoke", 1024, 32, 32),

@@ -11,7 +11,6 @@ This container has no TPU, so each benchmark reports BOTH:
 from __future__ import annotations
 
 import csv
-import io
 import time
 
 import jax

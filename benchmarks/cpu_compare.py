@@ -9,10 +9,8 @@ hardware scale and isolates the blocking/strategy quality — the thing the
 paper is actually demonstrating."""
 from __future__ import annotations
 
-from dataclasses import replace
-
 from repro.core.gemm import plan_gemm, tgemm_plan
-from repro.core.gemm.cmr import TPU_V5E, TpuSpec, estimate
+from repro.core.gemm.cmr import TPU_V5E, TpuSpec
 
 CPU_SPEC = TpuSpec(name="ft2000plus_cpu", peak_flops_bf16=281.6e9,
                    peak_flops_fp32=281.6e9, hbm_bw=42.6e9,

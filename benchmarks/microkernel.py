@@ -15,8 +15,6 @@ from __future__ import annotations
 
 import functools
 
-import jax.numpy as jnp
-
 from repro.core.gemm import plan_gemm, upper_bound_fraction
 from repro.core.gemm.cmr import TPU_V5E
 from repro.kernels.ftimm import gemm

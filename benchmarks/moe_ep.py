@@ -38,7 +38,9 @@ T, D, F, E, TOP_K = 512, 128, 256, 8, 2
 N_SHARDS = 8
 
 _EP_SNIPPET = """
-import time, jax, jax.numpy as jnp
+import time
+import jax
+import jax.numpy as jnp
 from repro.core.compat import make_mesh
 from repro.core.dist import DistContext, use_dist
 from repro.models.moe import init_moe_params, moe_mlp

@@ -14,9 +14,7 @@ back to single-device measure).  ``derived``: modeled speedup + roofline %.
 """
 from __future__ import annotations
 
-import jax
-
-from repro.core.gemm import plan_distributed, plan_gemm, tgemm_plan, matmul
+from repro.core.gemm import plan_distributed, tgemm_plan, matmul
 from repro.core.gemm.cmr import TPU_V5E
 
 from .common import rand, record, time_fn

@@ -104,3 +104,23 @@ np.testing.assert_allclose(hh, jax.nn.silu(x @ wg) * (x @ wu),
                            rtol=1e-3, atol=1e-3)
 plan = plan_gemm(4097, 999, 31, epi_ops=2)   # fusion is a planned decision
 print(f"plan for the fused layer: edge={plan.edge} fuse={plan.fuse}")
+
+# 8. Static verification: every plan can be PROVEN safe before it runs —
+#    VMEM budget, block clamping/alignment, schedule legality, and (for
+#    dense/batched) a symbolic store-coverage/write-race proof over the
+#    kernel's real BlockSpec index maps.  No device time, no execution.
+from repro.analysis import check_plan, errors
+
+assert not errors(check_plan("dense", (4097, 999, 31), plan,
+                             coverage=True))
+print("\nstatic contracts hold for the fused-layer plan")
+
+import dataclasses
+bad = dataclasses.replace(plan, bk=4096)     # unclamped vs K=999
+codes = [v.code for v in errors(check_plan("dense", (4097, 999, 31), bad))]
+print("corrupt plan flagged:", codes)        # ['unclamped_block', ...]
+
+# Belt-and-braces at dispatch: REPRO_VERIFY=1 asserts the contracts on
+# every planned launch (raises ContractError instead of running a bad
+# plan), and plan-cache loading quarantines violating records.  The full
+# ratchet: PYTHONPATH=src python -m repro.analysis.sweep

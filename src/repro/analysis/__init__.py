@@ -1,0 +1,51 @@
+"""Static analysis of generated ftIMM kernel variants and GEMM plans.
+
+``contracts`` proves plans safe without executing any kernel; ``sweep`` is
+the CLI ratchet (``python -m repro.analysis.sweep``) that checks the full
+candidate space for the paper's irregular shapes plus every registry config.
+"""
+from .contracts import (
+    ContractError,
+    KernelContract,
+    RecordKey,
+    Violation,
+    assert_plan,
+    block_aligned,
+    check_blocks,
+    check_contraction_masking,
+    check_placement,
+    check_plan,
+    check_ragged_visit_plan,
+    check_ragged_visits,
+    check_record,
+    check_schedule,
+    errors,
+    masked_operand_count,
+    parse_key,
+    variant_contract,
+    verify_contract,
+    vmem_footprint,
+)
+
+__all__ = [
+    "ContractError",
+    "KernelContract",
+    "RecordKey",
+    "Violation",
+    "assert_plan",
+    "block_aligned",
+    "check_blocks",
+    "check_contraction_masking",
+    "check_placement",
+    "check_plan",
+    "check_ragged_visit_plan",
+    "check_ragged_visits",
+    "check_record",
+    "check_schedule",
+    "errors",
+    "masked_operand_count",
+    "parse_key",
+    "variant_contract",
+    "verify_contract",
+    "vmem_footprint",
+]

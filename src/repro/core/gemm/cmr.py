@@ -18,7 +18,7 @@ benchmarks can reproduce the paper's block-size reasoning next to ours.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 def ceil_to(x: int, b: int) -> int:
@@ -417,25 +417,25 @@ def estimate_ep(
 # block-size reasoning for FT-m7032 next to the TPU-adapted model above.
 # ---------------------------------------------------------------------------
 
-def paper_f1(m_a, k_g, n_g, num_core):
+def paper_f1(m_a: float, k_g: float, n_g: float, num_core: int) -> float:
     """Eq. 1 — M-parallel, B panel in GSM; A via SM, C via AM."""
     return (2.0 * m_a * k_g * n_g * num_core) / (
         num_core * m_a * (k_g + 2.0 * n_g) + k_g * n_g)
 
 
-def paper_f2(m_a, k_a, n_a, num_core):
+def paper_f2(m_a: float, k_a: float, n_a: float, num_core: int) -> float:
     """Eq. 2 — M-parallel, B/C blocks resident in AM; A streamed."""
     return (2.0 * m_a * k_a * n_a * num_core) / (
         num_core * m_a * (k_a + 2.0 * n_a) + k_a * n_a)
 
 
-def paper_f3(m_g, k_a, n_g, num_core):
+def paper_f3(m_g: float, k_a: float, n_g: float, num_core: int) -> float:
     """Eq. 3 — K-parallel, C panel in GSM."""
     return (2.0 * m_g * k_a * n_g * num_core) / (
         num_core * k_a * (m_g + n_g) + 2.0 * m_g * n_g)
 
 
-def paper_f4(m_a, k_a, n_a, num_core):
+def paper_f4(m_a: float, k_a: float, n_a: float, num_core: int) -> float:
     """Eq. 4 — K-parallel, AM level."""
     return (2.0 * m_a * k_a * n_a * num_core) / (
         num_core * k_a * (m_a + n_a) + 2.0 * m_a * n_a)

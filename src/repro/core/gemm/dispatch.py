@@ -23,6 +23,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from ...analysis import contracts as _contracts
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
 from ...kernels.ftimm.epilogue import IDENTITY, Epilogue
@@ -50,6 +51,35 @@ def _backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def _verify_enabled() -> bool:
+    return os.environ.get("REPRO_VERIFY", "") not in ("", "0")
+
+
+@functools.lru_cache(maxsize=4096)
+def _verify_cached(family: str, dims: tuple, plan, in_bytes: int,
+                   out_bytes: int, epi, swiglu: bool, ragged: str,
+                   trans: str) -> bool:
+    _contracts.assert_plan(family, dims, plan, in_bytes=in_bytes,
+                           out_bytes=out_bytes, epilogue=epi, swiglu=swiglu,
+                           ragged=ragged, trans=trans,
+                           coverage=family in ("dense", "batched"))
+    return True
+
+
+def _verify(family: str, dims, plan, in_bytes: int, out_bytes: int, *,
+            epi=None, swiglu: bool = False, ragged: str = "m",
+            trans: str = "nn") -> None:
+    """``REPRO_VERIFY=1`` mode: assert the static kernel contracts
+    (``analysis.contracts.check_plan`` incl. the symbolic store-coverage
+    proof) on every planned call, raising ``analysis.ContractError`` before
+    any kernel is launched.  Trace-time only; results are memoized per
+    (shape, plan) so steady-state dispatch cost is one env read."""
+    if _verify_enabled():
+        _verify_cached(family, tuple(int(d) for d in dims), plan,
+                       int(in_bytes), int(out_bytes), epi, swiglu, ragged,
+                       trans)
+
+
 def _mkn(trans: str, a_shape, b_shape):
     if trans == "nn":
         (m, k), (_, n) = a_shape, b_shape
@@ -67,6 +97,8 @@ def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
     in_bytes = jnp.dtype(a.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_gemm(m, k, n, in_bytes, out_bytes, epi_ops=epi.num_ops)
+    _verify("dense", (m, k, n), plan, in_bytes, out_bytes, epi=epi,
+            trans=trans)
     note_plan_use("dense", plan)
     if epi.is_identity:
         return _ops.gemm(
@@ -161,10 +193,12 @@ def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
         # accurate census of the workload's shapes (as the batched/ragged
         # paths already do) and the mode telemetry complete.
         m, k, n = _mkn(trans, a.shape, b.shape)
-        note_plan_use("dense", plan_gemm(m, k, n,
-                                         jnp.dtype(a.dtype).itemsize,
-                                         out_dtype.itemsize,
-                                         epi_ops=epi.num_ops))
+        in_bytes = jnp.dtype(a.dtype).itemsize
+        plan = plan_gemm(m, k, n, in_bytes, out_dtype.itemsize,
+                         epi_ops=epi.num_ops)
+        _verify("dense", (m, k, n), plan, in_bytes, out_dtype.itemsize,
+                epi=epi, trans=trans)
+        note_plan_use("dense", plan)
         if epi.is_identity:
             return _REF[trans](a, b, out_dtype)
         note_epilogue("dense", True)    # one jit: XLA fuses the tail
@@ -213,6 +247,7 @@ def _run_planned_batched(a: jax.Array, b: jax.Array, trans: str, out_dtype,
     in_bytes = jnp.dtype(a.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_batched_gemm(g, m, k, n, in_bytes, out_bytes, shared)
+    _verify("batched", (g, m, k, n), plan, in_bytes, out_bytes, trans=trans)
     note_plan_use("batched", plan)
     if backend == "xla":
         return _ref_batched(a, b, trans, out_dtype)
@@ -366,6 +401,8 @@ def _swiglu_fn(out_dtype_name: str, backend: str):
         plan = plan_gemm(x.shape[0], x.shape[1], wg.shape[1],
                          jnp.dtype(x.dtype).itemsize, out_dtype.itemsize,
                          epi_ops=2)
+        _verify("dense", (x.shape[0], x.shape[1], wg.shape[1]), plan,
+                jnp.dtype(x.dtype).itemsize, out_dtype.itemsize, swiglu=True)
         note_plan_use("dense", plan)
         return plan
 
@@ -405,6 +442,9 @@ def _grouped_swiglu_fn(out_dtype_name: str, backend: str):
         plan = plan_batched_gemm(wg.shape[0], x.shape[-2], x.shape[-1],
                                  wg.shape[2], jnp.dtype(x.dtype).itemsize,
                                  out_dtype.itemsize, "none", epi_ops=2)
+        _verify("batched",
+                (wg.shape[0], x.shape[-2], x.shape[-1], wg.shape[2]), plan,
+                jnp.dtype(x.dtype).itemsize, out_dtype.itemsize, swiglu=True)
         note_plan_use("batched", plan)
         return plan
 
@@ -470,6 +510,8 @@ def _run_planned_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
     in_bytes = jnp.dtype(x.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_ragged_gemm(g, x.shape[0], k, n, in_bytes, out_bytes)
+    _verify("ragged", (g, x.shape[0], k, n), plan, in_bytes, out_bytes,
+            trans=trans)
     note_plan_use("ragged", plan)
     if backend == "xla":
         return _xla_ragged(x, w, offsets, trans, out_dtype)
@@ -487,6 +529,8 @@ def _run_planned_ragged_dw(x: jax.Array, dy: jax.Array, offsets: jax.Array,
     out_bytes = jnp.dtype(out_dtype).itemsize
     plan = plan_ragged_gemm(g, x.shape[0], x.shape[1], dy.shape[1],
                             in_bytes, out_bytes, ragged="k")
+    _verify("ragged", (g, x.shape[0], x.shape[1], dy.shape[1]), plan,
+            in_bytes, out_bytes, ragged="k")
     note_plan_use("ragged", plan)
     if backend == "xla":
         # Per-group outputs have no ragged_dot analogue on the pinned jax
@@ -555,6 +599,9 @@ def _ragged_swiglu_fn(out_dtype_name: str, backend: str):
         in_bytes = jnp.dtype(x.dtype).itemsize
         plan = plan_ragged_gemm(wg.shape[0], x.shape[0], wg.shape[1],
                                 wg.shape[2], in_bytes, out_dtype.itemsize)
+        _verify("ragged", (wg.shape[0], x.shape[0], wg.shape[1],
+                           wg.shape[2]), plan, in_bytes, out_dtype.itemsize,
+                swiglu=True)
         note_plan_use("ragged", plan)
         return plan
 
@@ -617,6 +664,7 @@ def clear_dispatch_caches() -> None:
     _ragged_swiglu_fn.cache_clear()
     _swiglu_fn.cache_clear()
     _grouped_swiglu_fn.cache_clear()
+    _verify_cached.cache_clear()
 
 
 def project(x: jax.Array, w: jax.Array, *, out_dtype=None,

@@ -98,11 +98,17 @@ class Calibration:
 
 @dataclass
 class PlanStore:
-    """In-memory view of one persistent plan-cache file."""
+    """In-memory view of one persistent plan-cache file.
+
+    ``quarantined`` maps record keys the static verifier rejected at load
+    time to their violation codes — those shapes fall back to analytic
+    planning, and the count is surfaced by ``tuner.plan_mode_stats`` and
+    the serve warmup banner instead of being silently re-planned."""
     kind: str = ""                          # device kind the entries measure
     entries: dict = field(default_factory=dict)
     calibration: Calibration | None = None
     path: str | None = None                 # last load/save path
+    quarantined: dict = field(default_factory=dict)
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -120,6 +126,7 @@ class PlanStore:
 
     def clear(self) -> None:
         self.entries.clear()
+        self.quarantined.clear()
         self.calibration = None
         self.kind = ""
 
@@ -146,6 +153,14 @@ class PlanStore:
         n = 0
         for key, rec in entries.items():
             if isinstance(rec, dict) and "bm" in rec:
+                bad = _record_violations(key, rec)
+                if bad:
+                    # Contract-violating cached plans (the bk-clamp bug
+                    # class, over-budget blocks, malformed keys) are
+                    # quarantined, never served; the planners re-plan the
+                    # shape analytically and telemetry counts the miss.
+                    self.quarantined[key] = bad
+                    continue
                 self.put(key, rec)
                 n += 1
         self.kind = kind
@@ -186,6 +201,18 @@ class PlanStore:
             raise
         self.path = path
         return path
+
+
+def _record_violations(key: str, rec: dict) -> list:
+    """Error-severity static-contract violation codes for one cached record
+    (the load-time quarantine gate).  Lazy import: the verifier package is
+    a leaf, but keeping the store importable without it preserves the
+    graceful-degradation promise of ``load``."""
+    try:
+        from ...analysis.contracts import check_record, errors
+    except Exception:   # pragma: no cover - analysis ships with the repo
+        return []
+    return [v.code for v in errors(check_record(key, rec))]
 
 
 _STORE = PlanStore()

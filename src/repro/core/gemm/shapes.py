@@ -47,3 +47,35 @@ def classify(m: int, k: int, n: int,
 def is_irregular(m: int, k: int, n: int,
                  th: ShapeThresholds = ShapeThresholds()) -> bool:
     return classify(m, k, n, th) is not GemmClass.REGULAR
+
+
+# The paper's three irregular families (§III-A), TPU-adapted sizes — 21
+# shapes, every one classified T1/T2/T3.  Single source of truth, shared by
+# the measured sweep (``benchmarks.autotune``) and the static verification
+# ratchet (``repro.analysis.sweep``).
+PAPER_IRREGULAR_SHAPES: tuple[tuple[str, int, int, int], ...] = (
+    # T1: M >> K ~ N (tall-and-skinny x small)
+    ("t1_64k_32", 65536, 32, 32),
+    ("t1_64k_64", 65536, 64, 64),
+    ("t1_64k_128", 65536, 128, 128),
+    ("t1_256k_32", 262144, 32, 32),
+    ("t1_256k_64", 262144, 64, 64),
+    ("t1_256k_128", 262144, 128, 128),
+    ("t1_1m_32", 1048576, 32, 32),
+    ("t1_1m_64", 1048576, 64, 64),
+    ("t1_1m_128", 1048576, 128, 128),
+    # T2: K >> M ~ N (skinny-and-tall x tall-and-skinny)
+    ("t2_32_64k", 32, 65536, 32),
+    ("t2_32_256k", 32, 262144, 64),
+    ("t2_64_1m", 64, 1048576, 64),
+    ("t2_128_512k", 128, 524288, 128),
+    ("t2_32_1m", 32, 1048576, 32),
+    ("t2_64_64k", 64, 65536, 128),
+    # T3: M ~ K >> N (large regular x tall-and-skinny)
+    ("t3_4k_32", 4096, 4096, 32),
+    ("t3_8k_64", 8192, 8192, 64),
+    ("t3_8k_96", 8192, 8192, 96),
+    ("t3_16k_32", 16384, 16384, 32),
+    ("t3_20k_32", 20480, 20480, 32),
+    ("t3_20k_96", 20480, 20480, 96),
+)

@@ -47,6 +47,7 @@ import functools
 from dataclasses import dataclass, replace
 
 from . import plan_store
+from ...analysis import contracts
 from .cmr import (TPU_V5E, EpEstimate, PlanEstimate, TpuSpec, cdiv, ceil_to,
                   estimate, estimate_batched, estimate_ep, estimate_ragged)
 from .shapes import GemmClass, classify
@@ -196,14 +197,18 @@ def _fuse_variants(epi_ops: int) -> tuple[bool, ...]:
 def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
                     out_bytes: int = 4,
                     spec: TpuSpec = TPU_V5E,
-                    epi_ops: int = 0) -> list[GemmPlan]:
+                    epi_ops: int = 0, *, verify: bool = True
+                    ) -> list[GemmPlan]:
     """Every VMEM-feasible candidate tiling for the dense GEMM, scored by
     the CMR model.  The candidate space is (blocking x dim order x edge
     policy x epilogue fusion): ``edge`` only forks on non-block-multiple
     shapes (where the padded wrapper pays real copies) and ``fuse`` only
-    when the caller carries an epilogue (``epi_ops > 0``).  Never empty:
-    when nothing fits the budget the degenerate minimum tile is returned
-    (and priced) as the only candidate."""
+    when the caller carries an epilogue (``epi_ops > 0``).  ``verify`` runs
+    the static contract pre-check (``analysis.contracts.check_blocks``) so
+    geometrically infeasible tilings are pruned BEFORE CMR pricing or
+    measured timing.  Never empty: when nothing fits the budget the
+    degenerate minimum tile is returned (and priced) as the only
+    candidate."""
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
     cands: list[GemmPlan] = []
@@ -211,6 +216,11 @@ def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
         for bn in _bn_candidates(n, spec.lane):
             for bk in _bk_candidates(k):
                 for order in ("mn", "nm"):
+                    if verify and contracts.errors(contracts.check_blocks(
+                            "dense", (m, k, n), bm=bm, bn=bn, bk=bk,
+                            dim_order=order, in_bytes=in_bytes,
+                            out_bytes=out_bytes, spec=spec)):
+                        continue
                     for edge in _edge_variants(m, k, n, bm, bn, bk):
                         for fuse in _fuse_variants(epi_ops):
                             e = estimate(m, k, n, bm=bm, bn=bn, bk=bk,
@@ -235,11 +245,12 @@ def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
 def batched_candidates(g: int, m: int, k: int, n: int, in_bytes: int = 4,
                        out_bytes: int = 4, shared: str = "none",
                        spec: TpuSpec = TPU_V5E,
-                       epi_ops: int = 0) -> list[GemmPlan]:
+                       epi_ops: int = 0, *, verify: bool = True
+                       ) -> list[GemmPlan]:
     """Candidate tilings for the batched/grouped GEMM (same enumeration as
-    the dense family, including the edge-policy and epilogue-fusion forks;
-    the batch-aware estimator decides whether a shared panel earns
-    cross-batch residency)."""
+    the dense family, including the edge-policy and epilogue-fusion forks
+    and the same static contract pre-check; the batch-aware estimator
+    decides whether a shared panel earns cross-batch residency)."""
     cls = classify(m, k, n)
     sublane = spec.sublane(in_bytes)
     shared_a, shared_b = shared == "a", shared == "b"
@@ -248,6 +259,11 @@ def batched_candidates(g: int, m: int, k: int, n: int, in_bytes: int = 4,
         for bn in _bn_candidates(n, spec.lane):
             for bk in _bk_candidates(k):
                 for order in ("mn", "nm"):
+                    if verify and contracts.errors(contracts.check_blocks(
+                            "batched", (g, m, k, n), bm=bm, bn=bn, bk=bk,
+                            dim_order=order, in_bytes=in_bytes,
+                            out_bytes=out_bytes, spec=spec)):
+                        continue
                     for edge in _edge_variants(m, k, n, bm, bn, bk):
                         for fuse in _fuse_variants(epi_ops):
                             e = estimate_batched(
@@ -290,11 +306,13 @@ def _ragged_tile_candidates(total: int, g: int, sublane: int) -> list[int]:
 
 def ragged_candidates(g: int, total: int, k: int, n: int, in_bytes: int = 4,
                       out_bytes: int = 4, ragged: str = "m",
-                      spec: TpuSpec = TPU_V5E) -> list[GemmPlan]:
+                      spec: TpuSpec = TPU_V5E, *, verify: bool = True
+                      ) -> list[GemmPlan]:
     """Candidate tilings for the ragged grouped GEMM: the ragged dimension's
     tile list comes from the *distribution* (mean group size), the dense
     dimensions from the shared dense lists.  No dim_order choice — the
-    ragged kernels fix their grid walk."""
+    ragged kernels fix their grid walk.  Same static contract pre-check as
+    the dense enumeration."""
     sublane = spec.sublane(in_bytes)
     mean = max(total // max(g, 1), 1)
     if ragged == "m":
@@ -312,6 +330,11 @@ def ragged_candidates(g: int, total: int, k: int, n: int, in_bytes: int = 4,
     for bm in bms:
         for bn in bns:
             for bk in bks:
+                if verify and contracts.errors(contracts.check_blocks(
+                        "ragged", (g, total, k, n), bm=bm, bn=bn, bk=bk,
+                        ragged=ragged, in_bytes=in_bytes,
+                        out_bytes=out_bytes, spec=spec)):
+                    continue
                 e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
                                     ragged=ragged, in_bytes=in_bytes,
                                     out_bytes=out_bytes, spec=spec)
@@ -918,10 +941,17 @@ def plan_mode_stats() -> dict[str, dict[str, int]]:
     """{family: {mode: count}} census of plans that reached executors.  When
     any epilogue-carrying GEMMs were served, an extra ``"epilogue"`` entry
     reports fused-vs-separate coverage (``epilogue_stats`` aggregated) so
-    serve warmup can print fusion coverage alongside the plan modes."""
+    serve warmup can print fusion coverage alongside the plan modes.
+    Cached records the static verifier quarantined at load time show up as
+    a per-family ``"quarantined"`` count — those shapes silently fell back
+    to analytic planning, which this makes visible."""
     out: dict[str, dict[str, int]] = {}
     for (family, mode), count in sorted(PLAN_MODE_COUNTS.items()):
         out.setdefault(family, {})[mode] = count
+    for key in plan_store.get_store().quarantined:
+        family = key.split("|", 1)[0]
+        fam = out.setdefault(family, {})
+        fam["quarantined"] = fam.get("quarantined", 0) + 1
     epi: dict[str, int] = {}
     for (_family, kind), count in EPILOGUE_COUNTS.items():
         epi[kind] = epi.get(kind, 0) + count

@@ -28,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...analysis.contracts import block_aligned
 from . import kernel as _k
 
 
@@ -385,15 +386,21 @@ def ragged_gemm(
     bm_ = min(bm, _ceil_to(t_rows, sublane(x.dtype)))
     bn_ = min(bn, _ceil_to(n, 128))
     bk_ = min(bk, _ceil_to(k, 128))
-    tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
-    x_p = _pad_to(x, (tp, kp))
-    w_p = _pad_to(w, (g, kp, np_) if trans == "nn" else (g, np_, kp))
+    # The verifier's alignment check decides the edge path: block-aligned
+    # shapes skip the pad AND the output slice entirely (zero-copy).
+    if block_aligned((t_rows, k, n), (bm_, bk_, bn_)):
+        tp, x_p, w_p = t_rows, x, w
+    else:
+        tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), \
+            _ceil_to(n, bn_)
+        x_p = _pad_to(x, (tp, kp))
+        w_p = _pad_to(w, (g, kp, np_) if trans == "nn" else (g, np_, kp))
     gids, tids, valid = _ragged_metadata(group_offsets, tp // bm_, bm_)
     out = _k.ftimm_gemm_ragged(
         x_p, w_p, gids, tids, valid, group_offsets.astype(jnp.int32),
         bm=bm_, bn=bn_, bk=bk_, trans=trans, out_dtype=out_dtype,
         interpret=interpret)
-    return out[:t_rows, :n]
+    return out if out.shape == (t_rows, n) else out[:t_rows, :n]
 
 
 @functools.partial(
@@ -428,15 +435,22 @@ def ragged_gemm_swiglu(
     bm_ = min(bm, _ceil_to(t_rows, sublane(x.dtype)))
     bn_ = min(bn, _ceil_to(n, 128))
     bk_ = min(bk, _ceil_to(k, 128))
-    tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
-    x_p = _pad_to(x, (tp, kp))
-    wg_p = _pad_to(w_gate, (g, kp, np_))
-    wu_p = _pad_to(w_up, (g, kp, np_))
+    # Same verifier-driven zero-copy edge path as ragged_gemm.  NOTE: the
+    # swiglu kernel has no in-kernel K mask, so the K-aligned requirement
+    # from block_aligned is what makes skipping the pad sound.
+    if block_aligned((t_rows, k, n), (bm_, bk_, bn_)):
+        tp, x_p, wg_p, wu_p = t_rows, x, w_gate, w_up
+    else:
+        tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), \
+            _ceil_to(n, bn_)
+        x_p = _pad_to(x, (tp, kp))
+        wg_p = _pad_to(w_gate, (g, kp, np_))
+        wu_p = _pad_to(w_up, (g, kp, np_))
     gids, tids, valid = _ragged_metadata(group_offsets, tp // bm_, bm_)
     out = _k.ftimm_gemm_ragged_swiglu(
         x_p, wg_p, wu_p, gids, tids, valid, group_offsets.astype(jnp.int32),
         bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype, interpret=interpret)
-    return out[:t_rows, :n]
+    return out if out.shape == (t_rows, n) else out[:t_rows, :n]
 
 
 @functools.partial(
@@ -472,11 +486,16 @@ def ragged_gemm_dw(
     bk_ = min(bk, _ceil_to(t_rows, sublane(x.dtype)))   # ragged row tiles
     bm_ = min(bm, _ceil_to(d, sublane(x.dtype)))
     bn_ = min(bn, _ceil_to(f, 128))
-    tp, dp, fp = _ceil_to(t_rows, bk_), _ceil_to(d, bm_), _ceil_to(f, bn_)
-    x_p = _pad_to(x, (tp, dp))
-    dy_p = _pad_to(dy, (tp, fp))
+    # Verifier-driven zero-copy edge path (ragged axis = contraction here).
+    if block_aligned((t_rows, d, f), (bk_, bm_, bn_)):
+        tp, x_p, dy_p = t_rows, x, dy
+    else:
+        tp, dp, fp = _ceil_to(t_rows, bk_), _ceil_to(d, bm_), \
+            _ceil_to(f, bn_)
+        x_p = _pad_to(x, (tp, dp))
+        dy_p = _pad_to(dy, (tp, fp))
     gids, tids, valid = _ragged_metadata(group_offsets, tp // bk_, bk_)
     out = _k.ftimm_gemm_ragged_dw(
         x_p, dy_p, gids, tids, valid, group_offsets.astype(jnp.int32),
         bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype, interpret=interpret)
-    return out[:, :d, :f]
+    return out if out.shape == (g, d, f) else out[:, :d, :f]

@@ -35,10 +35,17 @@ def load_plan_cache(path: str | None) -> int:
     if not path:
         return 0
     n = autotune.load_plan_cache(path)
-    cal = autotune.plan_store.get_store().calibration
+    store = autotune.plan_store.get_store()
+    cal = store.calibration
     print(f"plan cache: {n} measured plans from {path}"
           + (f" (calibration flops_frac={cal.flops_frac:.3g} "
                f"bw_frac={cal.bw_frac:.3g})" if cal else ""))
+    if store.quarantined:
+        # Static verifier rejected these cached records at load; the shapes
+        # re-plan analytically instead of silently serving a bad tiling.
+        codes = sorted({c for v in store.quarantined.values() for c in v})
+        print(f"plan cache: {len(store.quarantined)} records quarantined "
+              f"by the static verifier ({', '.join(codes)})")
     return n
 
 

@@ -17,6 +17,8 @@ from __future__ import annotations
 import os
 import sys
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

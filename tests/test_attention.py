@@ -65,7 +65,9 @@ def test_blockwise_kv_valid_len():
 @pytest.mark.slow
 def test_flash_decode_matches_single_device():
     run_with_devices("""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.configs import get_config
 from repro.core.dist import DistContext, use_dist
 from repro.models import model as M

@@ -4,7 +4,6 @@ interpret-mode timing-harness smoke, calibration tightening, and the
 one-entry-point cache reset (planners + dispatch + mesh executors)."""
 import importlib
 import json
-import os
 
 import pytest
 

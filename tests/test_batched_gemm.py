@@ -198,7 +198,7 @@ def test_moe_routes_through_planner():
         return jnp.sum(y ** 2) + 0.01 * aux
 
     g = jax.grad(loss)(params, x)
-    assert all(np.all(np.isfinite(np.asarray(l))) for l in jax.tree.leaves(g))
+    assert all(np.all(np.isfinite(np.asarray(leaf))) for leaf in jax.tree.leaves(g))
 
     info = plan_batched_gemm.cache_info()
     assert info.currsize >= 2, info   # fwd (C,D,F) + (C,F,D) at least

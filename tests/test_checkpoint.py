@@ -53,7 +53,9 @@ def test_elastic_restore_new_mesh(tmp_path):
     """Save under an (8,)-device sharding, restore under (4,) — the node
     failure path (and the mesh growth path by symmetry)."""
     run_with_devices(f"""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.checkpointer import Checkpointer
 

@@ -8,7 +8,9 @@ from helpers import run_with_devices
 @pytest.mark.slow
 def test_dist_matmul_strategies():
     run_with_devices("""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.core.compat import make_mesh
 from repro.core.gemm import dist_matmul, choose_strategy
 mesh = make_mesh((8,), ("model",))
@@ -35,7 +37,8 @@ print("OK")
 @pytest.mark.slow
 def test_dist_matmul_shape_mismatch_raises():
     run_with_devices("""
-import jax, pytest
+import jax
+import pytest
 from repro.core.compat import make_mesh
 from repro.core.gemm import dist_matmul
 mesh = make_mesh((8,), ("model",))
@@ -59,7 +62,9 @@ def test_ep_ragged_matmul_parity_fwd_and_vjp():
     schedules its contraction per group count, so values agree to ~ulp of
     the output scale (asserted at 1e-5 x max|oracle|)."""
     run_with_devices("""
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np
+import jax
+import jax.numpy as jnp
 from repro.core.compat import make_mesh
 from repro.core.gemm import ep_ragged_matmul, ep_ragged_swiglu, \
     ragged_matmul, ragged_swiglu

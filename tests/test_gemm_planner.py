@@ -1,6 +1,5 @@
 """Shape classifier, CMR model and dynamic-adjusting tuner invariants —
 the paper's §III-A taxonomy and §IV-C behaviour."""
-import pytest
 from _prop import given, settings, st
 
 from repro.core.gemm import (GemmClass, TPU_V5E, classify, estimate,

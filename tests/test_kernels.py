@@ -7,7 +7,7 @@ import pytest
 from _prop import given, settings, st
 
 from repro.kernels.ftimm import gemm, ref
-from repro.kernels.ftimm.kernel import ftimm_gemm, ftimm_gemm_splitk
+from repro.kernels.ftimm.kernel import ftimm_gemm
 
 KEY = jax.random.PRNGKey(7)
 

@@ -8,7 +8,9 @@ from helpers import run_with_devices
 def test_compressed_allreduce_accuracy_and_wire_dtype():
     run_with_devices("""
 import functools
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.compat import make_mesh, shard_map
 from repro.optim.compression import compress_allreduce, init_error_state
@@ -43,6 +45,6 @@ assert err_rel < 0.03, err_rel
 
 # the wire carries s8: check the compiled HLO
 hlo = jax.jit(step).lower(g, err).compile().as_text()
-assert any("s8[" in l and "all-reduce" in l for l in hlo.splitlines()), "no s8 all-reduce"
+assert any("s8[" in ln and "all-reduce" in ln for ln in hlo.splitlines()), "no s8 all-reduce"
 print("OK")
 """, n_devices=8)

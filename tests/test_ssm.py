@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.ssm import (HEADDIM, init_ssm_params, init_ssm_state,
+from repro.models.ssm import (HEADDIM, init_ssm_params,
                               ssd_decode_step, ssd_forward, ssm_dims)
 
 KEY = jax.random.PRNGKey(5)

@@ -9,7 +9,9 @@ from helpers import run_with_devices
 @pytest.mark.slow
 def test_train_checkpoint_resume_serve(tmp_path):
     run_with_devices(f"""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.optim.adamw import OptConfig
@@ -46,7 +48,9 @@ print("OK")
 @pytest.mark.slow
 def test_sharded_train_step_runs():
     run_with_devices("""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.dist import DistContext, use_dist
@@ -87,7 +91,9 @@ def test_sharded_train_step_moe_ep_runs():
     GSPMD-jitted train step on a (data, model) mesh, with the expert weights
     EP-sharded by param_specs(moe_ep=True) — forward + backward + optimizer."""
     run_with_devices("""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.dist import DistContext, use_dist
@@ -126,7 +132,8 @@ print("OK")
 def test_mini_multipod_dryrun():
     """The production dry-run path on a scaled-down (2, 2, 4) pod mesh."""
     run_with_devices("""
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.dist import DistContext, use_dist
