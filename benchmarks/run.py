@@ -1,19 +1,28 @@
 """Benchmark harness: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (and writes results/benchmarks.csv).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5] [--gate]
+
+``--gate`` turns the run into a perf regression check: the committed
+``results/BENCH_moe_ep.json`` is read BEFORE the suites execute, and after
+the rerun the fresh ``ep_ragged`` wall time must stay within a noise
+margin (1.30x) of that baseline — exit code 1 otherwise.  This is the CI
+tripwire for the EP slowdown class of bug: the committed file holds the
+last accepted number, so a schedule or exchange regression that re-inflates
+the EP leg fails the build instead of silently landing.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from . import (autotune, common, cpu_compare, epilogue,  # noqa: E402
-               microkernel, moe_ep, multi_core, roofline_table, scalability,
-               single_core)
+from . import (autotune, collective, common, cpu_compare,  # noqa: E402
+               epilogue, microkernel, moe_ep, multi_core, roofline_table,
+               scalability, single_core)
 
 SUITES = {
     "fig3": microkernel.run,
@@ -29,21 +38,62 @@ SUITES = {
     # Fused-vs-unfused epilogue + masked-vs-padded edge sweep
     # (results/BENCH_epilogue.json).
     "epilogue": epilogue.run,
+    # Overlapped ring vs gather collective schedules, end-to-end on 8 fake
+    # devices + ICI calibration + EP crossover agreement
+    # (results/BENCH_collective.json).
+    "collective": collective.run,
 }
+
+GATE_MARGIN = 1.30      # wall-clock noise allowance for the EP gate
+_RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def _ep_ragged_us(path: pathlib.Path) -> float | None:
+    """The ``ep_ragged`` wall time recorded in a BENCH_moe_ep.json file,
+    or None when the file / leg is missing or errored (us == 0)."""
+    try:
+        with open(path) as fp:
+            blob = json.load(fp)
+        for row in blob.get("rows", []):
+            if row.get("name") == "ep_ragged" and row.get("us_per_call"):
+                return float(row["us_per_call"])
+    except (OSError, ValueError, TypeError):
+        pass
+    return None
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names " + str(list(SUITES)))
+    ap.add_argument("--gate", action="store_true",
+                    help="fail (exit 1) if the rerun ep_ragged leg "
+                         f"regresses beyond {GATE_MARGIN}x the committed "
+                         "BENCH_moe_ep.json baseline")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
+    if args.gate and "moe_ep" not in names:
+        names.append("moe_ep")
+    baseline = _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json") \
+        if args.gate else None
     print("name,us_per_call,derived")
     for name in names:
         SUITES[name]()
-    out = pathlib.Path(__file__).resolve().parents[1] / "results"
-    out.mkdir(exist_ok=True)
-    common.dump_csv(str(out / "benchmarks.csv"))
+    _RESULTS.mkdir(exist_ok=True)
+    common.dump_csv(str(_RESULTS / "benchmarks.csv"))
+    if args.gate:
+        fresh = _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json")
+        if fresh is None:
+            print("gate: ep_ragged leg missing or errored", file=sys.stderr)
+            raise SystemExit(1)
+        if baseline is not None and fresh > baseline * GATE_MARGIN:
+            print(f"gate: ep_ragged regressed {fresh:.0f}us > "
+                  f"{GATE_MARGIN}x baseline {baseline:.0f}us",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        ref = f"{baseline:.0f}us" if baseline is not None else "none"
+        print(f"gate: ep_ragged {fresh:.0f}us within {GATE_MARGIN}x of "
+              f"baseline {ref}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,10 @@ from typing import Any, Callable, Iterable, Sequence
 
 FAMILIES = ("dense", "batched", "ragged")
 STRATEGIES = ("m_parallel", "k_parallel", "expert_parallel")
+SCHEDULES = ("gather", "ring")
+# Ring (overlapped) schedules exist only where a chunk rotation is defined:
+# the dense k_parallel collective matmul and the ragged EP token pipeline.
+_RING_LEGAL = {("dense", "k_parallel"), ("ragged", "expert_parallel")}
 _EDGES = ("masked", "padded")
 _ORDERS = ("mn", "nm")
 
@@ -252,7 +256,8 @@ def check_placement(family: str, dims: Sequence[int], placement: Any,
                     spec: Any = None) -> list[Violation]:
     """Placement divisibility: EP needs the expert/group count divisible by
     the shard count (mirrors ``launch.sharding.expert_axis``); k_parallel
-    must leave every shard at least one 128-wide K panel."""
+    must leave every shard at least one 128-wide K panel; the ring
+    (overlapped) schedule only exists where a chunk rotation is defined."""
     sp = _spec(spec)
     v: list[Violation] = []
     strategy = getattr(placement, "strategy", None)
@@ -263,6 +268,16 @@ def check_placement(family: str, dims: Sequence[int], placement: Any,
                           f"{STRATEGIES}")]
     if nshards < 1:
         return [Violation("bad_shards", f"num_shards={nshards} must be >= 1")]
+    schedule = getattr(placement, "schedule", "gather")
+    if schedule not in SCHEDULES:
+        return [Violation("bad_schedule",
+                          f"placement schedule {schedule!r} not in "
+                          f"{SCHEDULES}")]
+    if schedule == "ring" and (family, strategy) not in _RING_LEGAL:
+        v.append(Violation(
+            "ring_undefined",
+            f"ring schedule is undefined for ({family}, {strategy}); legal "
+            f"pairs: {sorted(_RING_LEGAL)}"))
     if strategy == "expert_parallel":
         if family not in ("batched", "ragged"):
             v.append(Violation("strategy_family",
@@ -773,7 +788,16 @@ def check_record(key: str, rec: Any, spec: Any = None) -> list[Violation]:
             return [Violation("bad_strategy",
                               f"sharded record strategy {strategy!r} not in "
                               f"{STRATEGIES}")]
+        schedule = rec.get("schedule", "gather")
+        if schedule not in SCHEDULES:
+            return [Violation("bad_schedule",
+                              f"sharded record schedule {schedule!r} not in "
+                              f"{SCHEDULES}")]
         v: list[Violation] = []
+        if schedule == "ring" and (pk.family, strategy) not in _RING_LEGAL:
+            v.append(Violation(
+                "ring_undefined",
+                f"ring schedule cached for ({pk.family}, {strategy})"))
         if (strategy == "expert_parallel" and pk.family in ("batched",
                                                             "ragged")
                 and pk.dims[0] % pk.num_shards):

@@ -22,6 +22,11 @@ inline.  Wrapped surfaces:
   * ``prefetch_scalar_grid_spec`` — ``pltpu.PrefetchScalarGridSpec`` (scalar-
                            prefetch grids for data-dependent index maps, e.g.
                            the ragged grouped GEMM metadata).
+  * ``ragged_all_to_all``  — ``jax.lax.ragged_all_to_all`` exists only on
+                           newer releases (and not on every backend); exposed
+                           as ``None`` when absent so the collective exchange
+                           layer can probe for it and fall back to the dense
+                           realization.
 """
 from __future__ import annotations
 
@@ -70,6 +75,16 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
     if axis_type is not None:
         kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# --- ragged all-to-all -----------------------------------------------------
+
+# The true ragged collective (newer jax; backend support varies).  ``None``
+# on the pinned 0.4.x line.  Consumers must treat availability of the symbol
+# as necessary but NOT sufficient: ``core.gemm.collective`` runs a concrete
+# round-trip probe on the actual mesh before trusting it, and falls back to
+# the dense all_gather/psum_scatter realization otherwise.
+ragged_all_to_all = getattr(jax.lax, "ragged_all_to_all", None)
 
 
 # --- compiled cost analysis ------------------------------------------------

@@ -29,13 +29,18 @@ Layering, bottom-up:
     shapes plan better too.  Every plan carries ``mode`` ∈ {analytic,
     measured, cached}; ``plan_mode_stats`` reports which loop served the
     executors.
-  * ``distributed`` — the mesh executors consuming placements:
-    ``dist_matmul`` (Alg. 4/5 dense), ``dist_batched_matmul`` (expert-dim
-    sharded grouped GEMM) and ``ep_ragged_matmul`` / ``ep_ragged_swiglu`` /
-    ``ep_ragged_moe`` (expert-parallel capacity-free MoE with the
-    all-to-all token exchange keyed by the ``group_offsets`` prefix sums;
-    the fused ``ep_ragged_moe`` exchanges d_model-wide tokens once each way
-    for the whole gate/up/down pipeline).
+  * ``collective`` / ``distributed`` — the mesh executors consuming
+    placements: ``dist_matmul`` (Alg. 4/5 dense, with the overlapped ring
+    collective matmul as a ``schedule="ring"`` variant of K-parallel),
+    ``dist_batched_matmul`` (expert-dim sharded grouped GEMM) and
+    ``ep_ragged_matmul`` / ``ep_ragged_swiglu`` / ``ep_ragged_moe``
+    (expert-parallel capacity-free MoE: a true ragged all-to-all keyed by
+    the ``group_offsets`` prefix sums — ``jax.lax.ragged_all_to_all`` when
+    the runtime proves it correct, a dense-window exchange otherwise — or
+    the ring schedule that rotates token blocks and overlaps transfer with
+    compute; ``preferred_ep_schedule`` arbitrates via CMR and
+    ``calibrate_ici`` fits the effective-ICI-bandwidth fraction the
+    modeled wires are scaled by).
 """
 from ...kernels.ftimm.epilogue import Epilogue
 from .shapes import GemmClass, ShapeThresholds, classify, is_irregular
@@ -46,15 +51,16 @@ from .tuner import (GemmPlan, DistPlan, MoeDispatchPlan, Placement, Plan,
                     plan_gemm, plan_batched_gemm, plan_distributed,
                     plan_moe_dispatch, plan_ragged_gemm, tgemm_plan,
                     clear_plan_cache, effective_spec, epilogue_stats,
-                    plan_mode_stats)
+                    plan_mode_stats, preferred_ep_schedule)
 from .dispatch import (batched_matmul, grouped_matmul, grouped_swiglu,
                        matmul, matmul_swiglu, project, project_swiglu,
                        ragged_matmul, ragged_swiglu)
 from .distributed import (choose_strategy, dist_batched_matmul, dist_matmul,
                           ep_ragged_matmul, ep_ragged_moe, ep_ragged_swiglu)
 from .autotune import (TuneResult, autotune_batched_gemm, autotune_gemm,
-                       autotune_ragged_gemm, calibrate, clear_plan_store,
-                       load_plan_cache, save_plan_cache)
+                       autotune_ragged_gemm, calibrate, calibrate_ici,
+                       clear_plan_store, load_plan_cache, save_plan_cache,
+                       time_placed_dense_e2e, time_placed_ragged_e2e)
 from .plan_store import Calibration, PlanStore
 
 __all__ = [
@@ -73,7 +79,10 @@ __all__ = [
     "ragged_matmul", "ragged_swiglu",
     "dist_matmul", "dist_batched_matmul", "choose_strategy",
     "ep_ragged_matmul", "ep_ragged_moe", "ep_ragged_swiglu",
+    "preferred_ep_schedule",
     "TuneResult", "autotune_gemm", "autotune_batched_gemm",
-    "autotune_ragged_gemm", "calibrate", "clear_plan_store",
-    "load_plan_cache", "save_plan_cache", "Calibration", "PlanStore",
+    "autotune_ragged_gemm", "calibrate", "calibrate_ici",
+    "clear_plan_store", "load_plan_cache", "save_plan_cache",
+    "time_placed_dense_e2e", "time_placed_ragged_e2e",
+    "Calibration", "PlanStore",
 ]

@@ -23,8 +23,10 @@ against hardware.  This module closes the loop the way Catalán et al.
      ``mode == "cached"``.
   4. **Calibrate** — ``calibrate`` fits the effective ``TpuSpec`` constants
      (achievable-flops fraction, effective HBM bandwidth) from
-     measured-vs-predicted ratios, so *unmeasured* shapes plan against
-     corrected rooflines too (``tuner.effective_spec``).
+     measured-vs-predicted ratios, and ``calibrate_ici`` fits the
+     effective-ICI-bandwidth fraction from timed mesh collectives, so
+     *unmeasured* shapes plan against corrected rooflines AND corrected
+     wires too (``tuner.effective_spec``).
 
 Timing engines (``engine=``):
 
@@ -38,8 +40,14 @@ Timing engines (``engine=``):
 
 Placed searches (``num_shards > 1``) are hybrid: the per-shard local GEMM of
 each ``tuner.PlacementOption`` is measured, the ICI collective term stays
-modeled (there is no mesh inside the harness), and the same clear-win
-margins arbitrate — measured compute, modeled wires.
+modeled (there is no mesh inside the harness, but ``calibrate_ici``
+corrects the modeled wires from timed mesh exchanges), and the same
+clear-win margins arbitrate — measured compute, calibrated-model wires.
+Overlapped (``schedule == "ring"``) options compose local and collective
+time as MAX, unoverlapped as SUM, in both the measured and analytic
+scores.  ``time_placed_ragged_e2e``/``time_placed_dense_e2e`` go one step
+further: they run the placed executors end-to-end on a real mesh —
+collectives executed, not priced — for crossover-agreement checks.
 """
 from __future__ import annotations
 
@@ -55,7 +63,7 @@ from ...kernels.ftimm import ref as _ref
 from ...kernels.ftimm.epilogue import Epilogue
 from . import plan_store, tuner
 from .cmr import (TPU_V5E, PlanEstimate, TpuSpec, ceil_to, estimate,
-                  estimate_batched, estimate_ragged)
+                  estimate_batched, estimate_ep, estimate_ragged)
 from .plan_store import Calibration
 from .tuner import GemmPlan
 
@@ -376,7 +384,8 @@ def _measure_shortlist(sl, make_runner, repeats):
 
 
 def _store_result(res: TuneResult, *, num_shards: int = 1,
-                  strategy: str | None = None) -> None:
+                  strategy: str | None = None,
+                  schedule: str | None = None) -> None:
     rec = {
         "bm": res.plan.bm, "bn": res.plan.bn, "bk": res.plan.bk,
         "nsplit": res.plan.nsplit, "dim_order": res.plan.dim_order,
@@ -388,6 +397,8 @@ def _store_result(res: TuneResult, *, num_shards: int = 1,
     }
     if strategy is not None:
         rec["strategy"] = strategy
+        if schedule is not None:
+            rec["schedule"] = schedule
     plan_store.get_store().put(res.key, rec)
     tuner.clear_planner_caches()    # next plan_* consults the new entry
 
@@ -616,17 +627,25 @@ def autotune_ragged_gemm(
     return res
 
 
+def _placed_total(t_local: float, placement) -> float:
+    """Compose a measured local time with the modeled collective exactly the
+    way ``Plan.t_total`` does: SUM for the gather schedule, MAX for the ring
+    (the overlapped transfer hides behind compute)."""
+    if placement.schedule == "ring":
+        return max(t_local * placement.waste, placement.t_collective)
+    return t_local * placement.waste + placement.t_collective
+
+
 def _tune_placed(family, dims, options, in_bytes, out_bytes, spec,
                  tune_local, *, num_shards, engine, store,
                  extra: str = "") -> TuneResult:
     """Hybrid placed search: measured local GEMM per ``PlacementOption``,
-    modeled collective/waste terms, the same clear-win margins as the
-    analytic placer."""
+    modeled collective/waste terms (schedule-composed), the same clear-win
+    margins as the analytic placer."""
     scored = []
     for opt in options:
         res = tune_local(opt.local_dims)
-        total = res.t_measured * opt.placement.waste \
-            + opt.placement.t_collective
+        total = _placed_total(res.t_measured, opt.placement)
         scored.append((opt, res, total))
     best_i = 0
     for i, (opt, _res, total) in enumerate(scored[1:], start=1):
@@ -637,7 +656,7 @@ def _tune_placed(family, dims, options, in_bytes, out_bytes, spec,
     # The analytic placed choice, scored with ITS analytic blocks' measured
     # time — the apples-to-apples baseline for this harness run.
     analytic_scored = [
-        (o, r.t_analytic * o.placement.waste + o.placement.t_collective)
+        (o, _placed_total(r.t_analytic, o.placement))
         for o, r, _t in scored]
     a_i = 0
     for i, (o, t) in enumerate(analytic_scored[1:], start=1):
@@ -654,7 +673,8 @@ def _tune_placed(family, dims, options, in_bytes, out_bytes, spec,
         est_measured=local.est_measured, engine=engine, timed=local.timed)
     if store:
         _store_result(res, num_shards=num_shards,
-                      strategy=opt.placement.strategy)
+                      strategy=opt.placement.strategy,
+                      schedule=opt.placement.schedule)
     return res
 
 
@@ -728,10 +748,177 @@ def calibrate(results, *, spec: TpuSpec = TPU_V5E,
                           engine=",".join(sorted(engines)), spec=spec)
     if store:
         st = plan_store.get_store()
+        old = st.calibration
+        if old is not None:          # keep a fitted ICI fraction, if any
+            cal = replace(cal, ici_frac=old.ici_frac)
         st.kind = st.kind or plan_store.device_kind()
         st.calibration = cal
         tuner.clear_planner_caches()
     return cal
+
+
+# ---------------------------------------------------------------------------
+# Mesh-measured extensions: end-to-end placed timing + ICI calibration.
+# Until this landed the placed search timed only the LOCAL GEMM and kept the
+# ICI term modeled; these helpers time placed plans on the actual mesh
+# (collectives executed, not priced) and fit the effective-ICI-bandwidth
+# constant the same way ``calibrate`` fits flops/HBM.
+# ---------------------------------------------------------------------------
+
+def calibrate_ici(mesh, axis="data", *,
+                  widths=(128, 256),
+                  rows: int = 4096,
+                  repeats: int = DEFAULT_REPEATS,
+                  spec: TpuSpec = TPU_V5E,
+                  store: bool = True) -> Calibration:
+    """Fit the effective-ICI-bandwidth fraction from timed mesh exchanges.
+
+    Times the EP exchange round-trip (``all_gather`` in, ``psum_scatter``
+    back — the two legs ``cmr.estimate_ep`` prices) on ``mesh[axis]`` and
+    fits ``ici_frac`` so the modeled exchange matches measurement:
+    ``t_effective = t_model / ici_frac``, geomean over samples.  On fake
+    host devices this absorbs the whole software-collective overhead — the
+    point is that the *same* constant then corrects every planned
+    ``t_collective``, exactly like the HBM-bandwidth fraction corrects
+    ``t_memory``.  Installed into the store's ``Calibration`` (preserving
+    fitted flops/HBM fractions) unless ``store=False``."""
+    from ..compat import shard_map_unchecked
+    from jax.sharding import PartitionSpec as P
+
+    nc = int(mesh.shape[axis])
+    cal_base = plan_store.get_store().calibration or Calibration(
+        engine="ici", base_spec=spec.name)
+    if nc <= 1:
+        return cal_base
+    logs = []
+    for width in widths:
+        r = max(nc, rows - rows % nc)
+        x = _rand((r, width), jnp.float32)
+
+        def roundtrip(x_l):
+            full = jax.lax.all_gather(x_l, axis, axis=0, tiled=True)
+            return jax.lax.psum_scatter(full, axis, scatter_dimension=0,
+                                        tiled=True)
+
+        fn = jax.jit(shard_map_unchecked(
+            roundtrip, mesh=mesh, in_specs=(P(axis, None),),
+            out_specs=P(axis, None)))
+        t_meas = _ops.bench(lambda: fn(x), repeats=repeats)
+        ex = estimate_ep(r, width, nc, elt_bytes=4, spec=spec)
+        t_model = 2.0 * ex.t_exchange            # both legs
+        logs.append(math.log(max(t_model, 1e-12) / max(t_meas, 1e-12)))
+    ici = math.exp(sum(logs) / len(logs)) if logs else 1.0
+    cal = replace(cal_base, ici_frac=ici,
+                  n_samples=cal_base.n_samples + len(logs))
+    if store:
+        st = plan_store.get_store()
+        st.kind = st.kind or plan_store.device_kind()
+        st.calibration = cal
+        tuner.clear_planner_caches()
+    return cal
+
+
+def time_placed_ragged_e2e(g: int, total: int, k: int, n: int, *,
+                           mesh, axis="data",
+                           in_bytes: int = 4, out_bytes: int = 4,
+                           repeats: int = DEFAULT_REPEATS,
+                           backend: str = "xla") -> list[dict]:
+    """Time the placed ragged options END-TO-END on the mesh — collectives
+    executed, not modeled — one row per (strategy, schedule) candidate plus
+    the single-device reference:
+
+      * ``single`` — the unplaced ragged GEMM (the m_parallel proxy: on a
+        timeshared host mesh every shard shares one core, so the sharded
+        m_parallel wall time equals the single-device wall time).
+      * ``expert_parallel``/``gather`` and ``expert_parallel``/``ring`` —
+        the real EP executors under each schedule.
+
+    Each row carries ``t_measured`` (seconds) and the planner's modeled
+    ``t_model`` for the matching option (``Plan.t_total`` under the current
+    calibration), so callers can check the measured winner against the
+    modeled winner — the crossover-agreement gate."""
+    from .dispatch import ragged_matmul as _ragged
+    from .distributed import ep_ragged_matmul as _ep
+
+    nc = int(mesh.shape[axis]) if not isinstance(axis, (tuple, list)) \
+        else int(math.prod(mesh.shape[a] for a in axis))
+    in_dt, out_dt = _dtype(in_bytes), _dtype(out_bytes)
+    x = _rand((total, k), in_dt)
+    w = _rand((g, k, n), in_dt, seed=1)
+    offsets = _balanced_offsets(g, total)
+
+    rows: list[dict] = []
+    f1 = jax.jit(lambda x, w, o: _ragged(x, w, o, out_dtype=out_dt,
+                                         backend=backend))
+    rows.append({
+        "strategy": "single", "schedule": "gather",
+        "t_measured": _ops.bench(lambda: f1(x, w, offsets),
+                                 repeats=repeats),
+        "t_model": tuner.plan_ragged_gemm(g, total, k, n, in_bytes,
+                                          out_bytes).t_total,
+    })
+    opts = {(o.placement.strategy, o.placement.schedule): o
+            for o in tuner.ragged_placement_options(
+                g, total, k, n, nc, in_bytes, out_bytes, "m",
+                tuner.effective_spec(TPU_V5E))}
+    for schedule in ("gather", "ring"):
+        fe = jax.jit(functools.partial(
+            _ep, mesh=mesh, axis=axis, out_dtype=out_dt, backend=backend,
+            schedule=schedule))
+        opt = opts.get(("expert_parallel", schedule))
+        t_model = float("nan")
+        if opt is not None:
+            plan = replace(opt.plan_local(in_bytes, out_bytes,
+                                          tuner.effective_spec(TPU_V5E)),
+                           placement=opt.placement)
+            t_model = plan.t_total
+        rows.append({
+            "strategy": "expert_parallel", "schedule": schedule,
+            "t_measured": _ops.bench(lambda: fe(x, w, offsets),
+                                     repeats=repeats),
+            "t_model": t_model,
+        })
+    return rows
+
+
+def time_placed_dense_e2e(m: int, k: int, n: int, *, mesh, axis="model",
+                          in_bytes: int = 4, out_bytes: int = 4,
+                          repeats: int = DEFAULT_REPEATS,
+                          backend: str = "xla") -> list[dict]:
+    """Time the dense placed strategies end-to-end on the mesh through
+    ``dist_matmul``: m_parallel, k_parallel/gather (psum) and
+    k_parallel/ring (overlapped collective matmul), with the planner's
+    modeled ``t_total`` alongside each."""
+    from .distributed import dist_matmul as _dist
+
+    nc = int(mesh.shape[axis])
+    in_dt, out_dt = _dtype(in_bytes), _dtype(out_bytes)
+    a = _rand((m, k), in_dt)
+    b = _rand((k, n), in_dt, seed=1)
+    opts = {(o.placement.strategy, o.placement.schedule): o
+            for o in tuner.dense_placement_options(
+                m, k, n, nc, in_bytes, out_bytes,
+                tuner.effective_spec(TPU_V5E))}
+    rows: list[dict] = []
+    for strategy, schedule in (("m_parallel", "gather"),
+                               ("k_parallel", "gather"),
+                               ("k_parallel", "ring")):
+        fn = jax.jit(functools.partial(
+            _dist, mesh=mesh, axis=axis, strategy=strategy,
+            schedule=schedule, out_dtype=out_dt, backend=backend))
+        opt = opts.get((strategy, schedule))
+        t_model = float("nan")
+        if opt is not None:
+            plan = replace(opt.plan_local(in_bytes, out_bytes,
+                                          tuner.effective_spec(TPU_V5E)),
+                           placement=opt.placement)
+            t_model = plan.t_total
+        rows.append({
+            "strategy": strategy, "schedule": schedule,
+            "t_measured": _ops.bench(lambda: fn(a, b), repeats=repeats),
+            "t_model": t_model,
+        })
+    return rows
 
 
 # ---------------------------------------------------------------------------

@@ -58,12 +58,15 @@ class TpuSpec:
             return self.sublane_int8
         return self.sublane_bf16
 
-    def calibrated(self, flops_frac: float, bw_frac: float) -> "TpuSpec":
+    def calibrated(self, flops_frac: float, bw_frac: float,
+                   ici_frac: float = 1.0) -> "TpuSpec":
         """The measured-effective view of this device: peak FLOP/s scaled by
-        the achievable fraction and HBM bandwidth by the effective fraction,
-        both fitted by ``autotune.calibrate`` from measured-vs-predicted
-        ratios.  Capacities, tile geometry and ICI stay nominal — only the
-        two roofline rates are what measurement corrects."""
+        the achievable fraction, HBM bandwidth by the effective fraction
+        (both fitted by ``autotune.calibrate`` from measured-vs-predicted
+        ratios), and ICI per-link bandwidth by the effective-ICI fraction
+        fitted by ``autotune.calibrate_ici`` from timed mesh exchanges.
+        Capacities and tile geometry stay nominal — only the roofline rates
+        are what measurement corrects."""
         from dataclasses import replace
         return replace(
             self,
@@ -71,6 +74,7 @@ class TpuSpec:
             peak_flops_bf16=self.peak_flops_bf16 * flops_frac,
             peak_flops_fp32=self.peak_flops_fp32 * flops_frac,
             hbm_bw=self.hbm_bw * bw_frac,
+            ici_bw_per_link=self.ici_bw_per_link * ici_frac,
         )
 
 
@@ -375,11 +379,13 @@ def estimate_ragged(
 class EpEstimate:
     """Modeled cost of ONE expert-parallel all-to-all leg over ICI."""
     ici_bytes: float        # global bytes crossing ICI (all shards summed)
-    t_exchange: float       # seconds, balanced shards
+    t_exchange: float       # seconds, set by the BOTTLENECK shard
+    imbalance: float = 1.0  # max-shard rows / mean-shard rows
 
     def __add__(self, other: "EpEstimate") -> "EpEstimate":
         return EpEstimate(self.ici_bytes + other.ici_bytes,
-                          self.t_exchange + other.t_exchange)
+                          self.t_exchange + other.t_exchange,
+                          max(self.imbalance, other.imbalance))
 
 
 EP_ZERO = EpEstimate(0.0, 0.0)
@@ -390,26 +396,34 @@ def estimate_ep(
     *,
     elt_bytes: int = 4,
     spec: TpuSpec = TPU_V5E,
+    max_shard_rows: int | None = None,
 ) -> EpEstimate:
     """Price one all-to-all leg of the EP token exchange.
 
-    Exactly the way ``plan_distributed`` prices the K-parallel psum: a
-    (rows, width) token matrix is row-sharded over ``num_shards`` chips,
+    A (rows, width) token matrix is row-sharded over ``num_shards`` chips,
     and each chip must forward the ``(num_shards - 1) / num_shards``
-    fraction of its rows that route to experts owned by other chips
-    (balanced-routing assumption — the same one the ragged CMR model makes
-    when it prices the mean group size).  Each chip transmits its share
-    across its ICI links; the exchange is bandwidth-bound, so t is the
-    per-chip send time.  One EP GEMM pays TWO legs (dispatch + return);
-    callers add the two ``EpEstimate``s.
+    fraction of its rows that route to experts owned by other chips.  Each
+    chip transmits its share across its ICI links; the exchange is
+    bandwidth-bound, so t is a per-chip send time — and like the
+    asymmetric-multicore result (slowest participant sets the clock), it is
+    the time of the *max* shard, not the mean.  ``max_shard_rows`` is the
+    largest per-shard row count when the caller knows the actual group
+    distribution; left ``None`` the balanced-routing assumption applies
+    (max == mean, imbalance == 1).  One EP GEMM pays TWO legs (dispatch +
+    return); callers add the two ``EpEstimate``s.
     """
     if num_shards <= 1:
         return EP_ZERO
     frac = (num_shards - 1) / num_shards
     ici_bytes = float(rows) * width * elt_bytes * frac
-    per_shard = ici_bytes / num_shards
+    mean_rows = rows / num_shards
+    imbalance = 1.0
+    if max_shard_rows is not None and mean_rows > 0:
+        imbalance = max(1.0, float(max_shard_rows) / mean_rows)
+    bottleneck = (ici_bytes / num_shards) * imbalance
     return EpEstimate(ici_bytes,
-                      per_shard / (spec.ici_bw_per_link * spec.ici_links))
+                      bottleneck / (spec.ici_bw_per_link * spec.ici_links),
+                      imbalance)
 
 
 # ---------------------------------------------------------------------------

@@ -43,8 +43,8 @@ ENV_VAR = "REPRO_PLAN_CACHE"
 # Fields a record may carry.  Only "blocks" is mandatory; everything else is
 # provenance or placement/edge/fusion detail.
 _RECORD_KEYS = frozenset({
-    "bm", "bn", "bk", "nsplit", "dim_order", "strategy", "edge", "fuse",
-    "t_measured_us", "t_analytic_us", "t_model_us", "engine", "mode",
+    "bm", "bn", "bk", "nsplit", "dim_order", "strategy", "schedule", "edge",
+    "fuse", "t_measured_us", "t_analytic_us", "t_model_us", "engine", "mode",
 })
 
 
@@ -78,19 +78,21 @@ class Calibration:
     """Fitted effective-hardware constants (fractions of the spec's peaks)."""
     flops_frac: float = 1.0     # achievable fraction of peak FLOP/s
     bw_frac: float = 1.0        # achievable fraction of peak HBM bandwidth
+    ici_frac: float = 1.0       # achievable fraction of peak ICI bandwidth
     n_samples: int = 0
     engine: str = ""
     base_spec: str = ""
 
     def to_json(self) -> dict:
         return {"flops_frac": self.flops_frac, "bw_frac": self.bw_frac,
-                "n_samples": self.n_samples, "engine": self.engine,
-                "base_spec": self.base_spec}
+                "ici_frac": self.ici_frac, "n_samples": self.n_samples,
+                "engine": self.engine, "base_spec": self.base_spec}
 
     @classmethod
     def from_json(cls, d: dict) -> "Calibration":
         return cls(flops_frac=float(d["flops_frac"]),
                    bw_frac=float(d["bw_frac"]),
+                   ici_frac=float(d.get("ici_frac", 1.0)),
                    n_samples=int(d.get("n_samples", 0)),
                    engine=str(d.get("engine", "")),
                    base_spec=str(d.get("base_spec", "")))

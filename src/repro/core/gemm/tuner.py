@@ -64,6 +64,12 @@ class Placement:
     the tokens to their owning shard and back).  ``t_collective`` is the
     modeled ICI term of that choice, ``ici_bytes`` the global bytes it moves,
     and ``waste`` the load-imbalance multiplier on the local estimate.
+
+    ``schedule`` is the overlap axis the ring collective matmul added:
+    "gather" runs the collective then the local GEMM back-to-back (t_total
+    SUMS the two), "ring" rotates chunks around the mesh so each hop's
+    transfer overlaps the next chunk's compute (t_total takes the MAX — the
+    mesh-level analogue of the paper's DMA/compute pipelining).
     """
     strategy: str                   # m_parallel | k_parallel | expert_parallel
     num_shards: int = 1
@@ -71,12 +77,15 @@ class Placement:
     t_collective: float = 0.0       # modeled ICI cost (s) per call
     ici_bytes: float = 0.0          # global bytes over ICI per call
     waste: float = 1.0              # >= 1: shard-imbalance multiplier
+    schedule: str = "gather"        # gather (unoverlapped) | ring (overlapped)
 
 
 class Plan:
     """Base of the unified plan hierarchy: a local CMR estimate (``est``)
     plus an optional ``Placement``.  ``t_total`` composes them the same way
-    for every family: local time x imbalance waste + ICI collective.
+    for every family: local time x imbalance waste + ICI collective for the
+    gather schedule, max(local, ICI) for the ring schedule (the transfer
+    hides behind compute — whichever dominates sets the clock).
     ``mode`` records which tuning loop produced the plan (analytic CMR
     argmin / measured on device / served from the persistent cache)."""
 
@@ -89,7 +98,10 @@ class Plan:
         t = self.est.t_total if self.est is not None else 0.0
         p = self.placement
         if p is not None:
-            t = t * p.waste + p.t_collective
+            if p.schedule == "ring":
+                t = max(t * p.waste, p.t_collective)
+            else:
+                t = t * p.waste + p.t_collective
         return t
 
     @property
@@ -172,7 +184,8 @@ def effective_spec(spec: TpuSpec) -> TpuSpec:
     cal = plan_store.get_store().calibration
     if cal is None:
         return spec
-    return spec.calibrated(cal.flops_frac, cal.bw_frac)
+    return spec.calibrated(cal.flops_frac, cal.bw_frac,
+                           getattr(cal, "ici_frac", 1.0))
 
 
 # ---------------------------------------------------------------------------
@@ -492,6 +505,8 @@ def _cached_placed(family: str, dims: tuple, in_bytes: int, out_bytes: int,
     for opt in options:
         if opt.placement.strategy != rec.get("strategy"):
             continue
+        if opt.placement.schedule != rec.get("schedule", "gather"):
+            continue
         local = opt.cached_local(rec, in_bytes, out_bytes, spec)
         if local is None:
             return None
@@ -577,7 +592,11 @@ def dense_placement_options(m: int, k: int, n: int, nc: int,
     imbalance term when M doesn't fill the chips.  K-parallel: shard K;
     partial C's reduced — a ring all-reduce of the fp32 partials over ICI —
     so it must win by a clear modeled margin (paper §IV-C: K-parallel
-    "brings additional overhead of reduction")."""
+    "brings additional overhead of reduction").  K-parallel is offered under
+    both schedules: "gather" (compute then psum, times SUM) and "ring" (the
+    overlapped collective matmul: output chunks rotate while the next
+    chunk's partial is computed — same bytes on the wire, but hidden behind
+    compute, so times compose as MAX)."""
     sublane = spec.sublane(in_bytes)
     m_local = ceil_to(max(cdiv(m, nc), 1), sublane)
     waste_m = (cdiv(m, nc) * nc) / max(m, 1)
@@ -588,11 +607,12 @@ def dense_placement_options(m: int, k: int, n: int, nc: int,
     k_local = ceil_to(max(cdiv(k, nc), 1), 128)
     ring = 2.0 * (nc - 1) / nc
     t_red = ring * (m * n * 4) / (spec.ici_bw_per_link * spec.ici_links)
-    opts.append(PlacementOption(
-        "dense", (m, k_local, n),
-        Placement("k_parallel", nc, axis=axis, t_collective=t_red,
-                  ici_bytes=ring * m * n * 4 * nc),
-        margin=1.15))
+    for schedule in ("ring", "gather"):
+        opts.append(PlacementOption(
+            "dense", (m, k_local, n),
+            Placement("k_parallel", nc, axis=axis, t_collective=t_red,
+                      ici_bytes=ring * m * n * 4 * nc, schedule=schedule),
+            margin=1.15))
     return opts
 
 
@@ -630,7 +650,16 @@ def ragged_placement_options(g: int, total: int, k: int, n: int, nc: int,
                              ragged: str = "m", spec: TpuSpec = TPU_V5E,
                              axis: str | None = None) -> list[PlacementOption]:
     """Token-parallel (rows sharded, weights replicated) vs expert-parallel
-    (groups sharded + the two all-to-all token-exchange legs).  The EP
+    (groups sharded + the two token-exchange legs), with EP offered under
+    both schedules.  EP "ring" is the overlapped collective matmul: token
+    blocks rotate around the mesh and each shard computes only the blocks
+    intersecting its owned window, so per-shard compute is ~2 block-spans of
+    owned rows (priced as ``min(total, 2 * t_l)`` local rows) and the
+    rotation bytes hide behind it (MAX composition).  EP "gather" is the
+    unoverlapped exchange + ONE local GEMM over the worst-case window —
+    every row could route to this shard's experts, so its local estimate
+    honestly prices the FULL ``total`` rows (the old mean-rows pricing
+    predicted a 3.65x EP win where measurement showed a 4.8x loss).  The EP
     backward dW (``ragged == "k"``) contracts rows that already live on the
     owning shard after the forward exchange — expert-local, no collective,
     no alternative."""
@@ -645,10 +674,20 @@ def ragged_placement_options(g: int, total: int, k: int, n: int, nc: int,
     opts = [PlacementOption(
         "ragged", (g, t_l, k, n),
         Placement("m_parallel", nc, axis=axis, waste=waste), extra="m")]
+    # Ring: (nc-1) x-block hops + nc output-block hops per shard.
+    per_shard = ((nc - 1) * t_l * k * in_bytes
+                 + nc * t_l * n * out_bytes)
+    t_ring = per_shard / (spec.ici_bw_per_link * spec.ici_links)
+    opts.append(PlacementOption(
+        "ragged", (g_l, min(total, 2 * t_l), k, n),
+        Placement("expert_parallel", nc, axis=axis, t_collective=t_ring,
+                  ici_bytes=float(per_shard) * nc, waste=waste,
+                  schedule="ring"),
+        margin=1.1, extra="m"))
     ex = estimate_ep(total, k, nc, elt_bytes=in_bytes, spec=spec) \
         + estimate_ep(total, n, nc, elt_bytes=out_bytes, spec=spec)
     opts.append(PlacementOption(
-        "ragged", (g_l, t_l, k, n),
+        "ragged", (g_l, total, k, n),
         Placement("expert_parallel", nc, axis=axis,
                   t_collective=ex.t_exchange, ici_bytes=ex.ici_bytes,
                   waste=waste),
@@ -665,6 +704,46 @@ def _select_placed(scored: list[tuple[PlacementOption, GemmPlan]]) -> GemmPlan:
         if cand.t_total * opt.margin < best.t_total:
             best = cand
     return best
+
+
+@functools.lru_cache(maxsize=4096)
+def preferred_ep_schedule(
+    g: int, total: int, k: int, n: int,
+    in_bytes: int = 4, out_bytes: int = 4,
+    num_shards: int = 1,
+    spec: TpuSpec = TPU_V5E,
+    serial: int = 1,
+) -> str:
+    """Which EP exchange schedule the model prefers for this ragged shape:
+    "ring" (overlapped) or "gather" (unoverlapped).  This is the planner
+    knob the EP executors consult when the caller doesn't force a schedule
+    (``REPRO_EP_SCHEDULE`` / explicit kwarg override it).
+
+    ``serial`` multiplies the LOCAL term of every option: on a real mesh
+    it is 1 (each shard has its own chip), but on a timeshared host mesh
+    (fake devices forced onto one CPU) the shards' local GEMMs serialize,
+    so wall-clock prediction needs the per-chip local time scaled by the
+    shard count.  The executors pass ``serial=nc`` on the CPU backend —
+    which is exactly why the gather schedule's worst-case-full-window
+    compute loses there (the measured 4.8x EP slowdown) while the ring's
+    owned-rows-only compute wins."""
+    if num_shards <= 1:
+        return "gather"
+    spec = effective_spec(spec)
+    best_t, best_s = float("inf"), "gather"
+    for o in ragged_placement_options(g, total, k, n, num_shards, in_bytes,
+                                      out_bytes, "m", spec):
+        if o.placement.strategy != "expert_parallel":
+            continue
+        local = o.plan_local(in_bytes, out_bytes, spec).est.t_total \
+            * o.placement.waste * max(1, serial)
+        if o.placement.schedule == "ring":
+            t = max(local, o.placement.t_collective)
+        else:
+            t = local + o.placement.t_collective
+        if t < best_t:
+            best_t, best_s = t, o.placement.schedule
+    return best_s
 
 
 # ---------------------------------------------------------------------------
@@ -972,6 +1051,7 @@ def clear_plan_cache() -> None:
     plan_ragged_gemm.cache_clear()
     plan_distributed.cache_clear()
     plan_moe_dispatch.cache_clear()
+    preferred_ep_schedule.cache_clear()
     PLAN_MODE_COUNTS.clear()
     EPILOGUE_COUNTS.clear()
     plan_store.reset_store()
@@ -991,3 +1071,4 @@ def clear_planner_caches() -> None:
     plan_ragged_gemm.cache_clear()
     plan_distributed.cache_clear()
     plan_moe_dispatch.cache_clear()
+    preferred_ep_schedule.cache_clear()

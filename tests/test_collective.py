@@ -1,0 +1,297 @@
+"""Overlapped collective GEMM (PR 7): schedule axis, ragged exchange, ring.
+
+Two halves:
+
+  * single-device units — always run: the ``schedule`` axis through
+    ``Placement``/``Plan.t_total``/plan-store records/static contracts, the
+    bottleneck-shard ``estimate_ep`` pricing, the ICI calibration constant,
+    and the planner's schedule preference (including the ``serial``
+    timeshared-host evaluation the executors use on CPU meshes).
+  * in-process multi-device — skip below 2 devices (the CI quick leg
+    forces 8 via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+    bitwise exchange round-trips under skewed/empty/single-group
+    distributions for BOTH schedules, ring-vs-gather numerical equality
+    (the overlap property test), fwd+VJP parity vs the single-device
+    oracle under the forced ring schedule, the all-rows-on-one-expert
+    empty-shard regression, and the ring k_parallel ``dist_matmul``.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import contracts
+from repro.core.compat import make_mesh
+from repro.core.gemm import (Calibration, Placement, dist_matmul,
+                             ep_ragged_matmul, ep_ragged_moe, matmul,
+                             plan_ragged_gemm, preferred_ep_schedule,
+                             ragged_matmul)
+from repro.core.gemm import collective, plan_store
+from repro.core.gemm.cmr import TPU_V5E, estimate_ep
+from repro.core.gemm.tuner import clear_planner_caches
+
+NDEV = jax.device_count()
+KEY = jax.random.PRNGKey(11)
+
+multidev = pytest.mark.skipif(
+    NDEV < 2, reason="needs a multi-device runtime (CI quick leg forces 8)")
+
+
+# ---------------------------------------------------------------------------
+# Single-device units
+# ---------------------------------------------------------------------------
+
+def test_estimate_ep_prices_bottleneck_shard():
+    """With all rows on one expert the bandwidth-bound time is set by the
+    max shard's bytes, not the mean: imbalance = max/mean = num_shards."""
+    even = estimate_ep(1024, 64, 8)
+    skew = estimate_ep(1024, 64, 8, max_shard_rows=1024)
+    assert even.imbalance == 1.0
+    assert skew.imbalance == pytest.approx(8.0)
+    assert skew.ici_bytes == even.ici_bytes          # same global bytes
+    assert skew.t_exchange == pytest.approx(8 * even.t_exchange)
+    # __add__ sums bytes/time and keeps the worst imbalance
+    both = even + skew
+    assert both.imbalance == pytest.approx(8.0)
+    assert both.t_exchange == pytest.approx(even.t_exchange
+                                            + skew.t_exchange)
+
+
+def test_plan_t_total_schedule_composition():
+    """gather composes local+collective as SUM, ring as MAX."""
+    plan = plan_ragged_gemm(8, 512, 64, 64)
+    local = plan.est.t_total
+
+    def mk(s):
+        return replace(plan, placement=Placement(
+            "expert_parallel", 8, t_collective=5 * local, schedule=s))
+
+    assert mk("gather").t_total == pytest.approx(local + 5 * local)
+    assert mk("ring").t_total == pytest.approx(5 * local)
+
+
+def test_placement_schedule_contract():
+    pl = Placement("expert_parallel", 4, schedule="ring")
+    assert contracts.check_placement("ragged", (8, 512, 64, 64), pl) == []
+    bad = Placement("m_parallel", 4, schedule="ring")
+    codes = [v.code for v in
+             contracts.check_placement("ragged", (8, 512, 64, 64), bad)]
+    assert "ring_undefined" in codes
+    unknown = Placement("k_parallel", 4, schedule="spiral")
+    codes = [v.code for v in
+             contracts.check_placement("dense", (512, 512, 512), unknown)]
+    assert codes == ["bad_schedule"]
+
+
+def test_record_schedule_contract_and_roundtrip():
+    key = plan_store.shape_key("dense", (512, 1024, 512), 4, 4, num_shards=4)
+    rec = {"bm": 128, "bn": 128, "bk": 128, "strategy": "k_parallel",
+           "schedule": "ring"}
+    assert contracts.errors(contracts.check_record(key, rec)) == []
+    rec_bad = dict(rec, schedule="spiral")
+    assert [v.code for v in contracts.check_record(key, rec_bad)] \
+        == ["bad_schedule"]
+    rec_illegal = dict(rec, strategy="m_parallel")
+    assert "ring_undefined" in [v.code for v in
+                                contracts.check_record(key, rec_illegal)]
+    # the store keeps the schedule field through put()
+    st = plan_store.PlanStore()
+    st.put(key, rec)
+    assert st.entries[key]["schedule"] == "ring"
+
+
+def test_calibration_ici_frac_roundtrip_and_spec_scaling():
+    cal = Calibration(flops_frac=0.5, bw_frac=0.25, ici_frac=0.125)
+    assert Calibration.from_json(cal.to_json()) == cal
+    # files written before the ici_frac field default it to 1.0
+    legacy = {k: v for k, v in cal.to_json().items() if k != "ici_frac"}
+    assert Calibration.from_json(legacy).ici_frac == 1.0
+    spec = TPU_V5E.calibrated(cal.flops_frac, cal.bw_frac, cal.ici_frac)
+    assert spec.ici_bw_per_link == pytest.approx(
+        TPU_V5E.ici_bw_per_link * 0.125)
+
+
+def test_preferred_ep_schedule_serial_evaluation():
+    """num_shards<=1 is always gather; the timeshared-host evaluation
+    (serial=nc) flips the MoE bench shape to ring, because the gather
+    schedule's worst-case full-window compute serializes over the shards
+    while ring computes only owned rows."""
+    clear_planner_caches()
+    assert preferred_ep_schedule(8, 1024, 128, 256, num_shards=1) == "gather"
+    assert preferred_ep_schedule(8, 1024, 128, 256, 4, 4, num_shards=8,
+                                 serial=8) == "ring"
+    assert preferred_ep_schedule(8, 1024, 128, 256, 4, 4, num_shards=8) \
+        in ("gather", "ring")      # per-chip answer is shape-dependent
+
+
+def test_ragged_placement_offers_both_schedules():
+    from repro.core.gemm.tuner import ragged_placement_options
+    opts = ragged_placement_options(8, 1024, 128, 256, 8)
+    scheds = {(o.placement.strategy, o.placement.schedule) for o in opts}
+    assert ("expert_parallel", "ring") in scheds
+    assert ("expert_parallel", "gather") in scheds
+
+
+def test_exchange_method_env_override(monkeypatch):
+    """REPRO_RAGGED_A2A=dense forces the dense fallback without a probe."""
+    monkeypatch.setenv(collective.ENV_A2A, "dense")
+    collective._method_cached.cache_clear()
+    mesh = make_mesh((NDEV,), ("x",))
+    assert collective.exchange_method(mesh, ("x",)) == "dense"
+    collective._method_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: exchange round-trips, schedules, regression
+# ---------------------------------------------------------------------------
+
+def _offsets(sizes):
+    return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+
+
+def _distributions(g):
+    """Skewed / empty-shard / single-group / balanced group-size zoos."""
+    skew = [0] * g
+    skew[0] = 37          # most rows on shard 0's first expert
+    for i in range(1, g):
+        skew[i] = i % 3
+    one = [0] * g
+    one[g // 2] = 29      # every row on ONE middle expert
+    bal = [3] * g
+    return {"skewed": skew, "one_expert": one, "balanced": bal}
+
+
+def _close(got, want, tol=1e-5):
+    got, want = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * scale)
+
+
+@multidev
+@pytest.mark.parametrize("schedule", ["gather", "ring"])
+def test_exchange_roundtrips_bitwise_under_degenerate_distributions(schedule):
+    """Identity panels make the GEMM exact, so the output equals the input
+    iff every row survived dispatch+combine bit-for-bit — under skew,
+    all-rows-on-one-expert (most shards own ZERO rows) and balance."""
+    d, g = 16, 2 * NDEV
+    mesh = make_mesh((NDEV,), ("expert",))
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32), (g, d, d))
+    for name, sizes in _distributions(g).items():
+        t = sum(sizes)
+        x = jax.random.normal(jax.random.fold_in(KEY, t), (t, d))
+        got = ep_ragged_matmul(x, eye, _offsets(sizes), mesh=mesh,
+                               axis="expert", schedule=schedule)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(x),
+                                      err_msg=f"{schedule}/{name}")
+
+
+@multidev
+def test_ring_matches_gather_schedule():
+    """The overlap property test: both schedules are the SAME math over
+    different communication patterns, so outputs and gradients agree to
+    numerical tolerance on every distribution."""
+    d, f, g = 16, 24, 2 * NDEV
+    mesh = make_mesh((NDEV,), ("expert",))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (g, d, f))
+    for name, sizes in _distributions(g).items():
+        t = sum(sizes)
+        x = jax.random.normal(jax.random.fold_in(KEY, 100 + t), (t, d))
+        offs = _offsets(sizes)
+
+        def loss(x, w, schedule):
+            return jnp.sum(ep_ragged_matmul(
+                x, w, offs, mesh=mesh, axis="expert",
+                schedule=schedule) ** 2)
+
+        _close(ep_ragged_matmul(x, w, offs, mesh=mesh, axis="expert",
+                                schedule="ring"),
+               ep_ragged_matmul(x, w, offs, mesh=mesh, axis="expert",
+                                schedule="gather"))
+        gr = jax.grad(loss, argnums=(0, 1))(x, w, "ring")
+        gg = jax.grad(loss, argnums=(0, 1))(x, w, "gather")
+        _close(gr[0], gg[0], 1e-4)
+        _close(gr[1], gg[1], 1e-4)
+
+
+@multidev
+@pytest.mark.parametrize("schedule", ["gather", "ring"])
+def test_ep_forward_and_vjp_match_oracle(schedule):
+    d, f, g = 16, 24, 2 * NDEV
+    mesh = make_mesh((NDEV,), ("expert",))
+    sizes = _distributions(g)["skewed"]
+    t = sum(sizes)
+    offs = _offsets(sizes)
+    x = jax.random.normal(KEY, (t, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (g, d, f))
+    got = ep_ragged_matmul(x, w, offs, mesh=mesh, axis="expert",
+                           schedule=schedule)
+    _close(got, ragged_matmul(x, w, offs))
+    ge = jax.grad(lambda x, w: jnp.sum(ep_ragged_matmul(
+        x, w, offs, mesh=mesh, axis="expert", schedule=schedule) ** 2),
+        argnums=(0, 1))(x, w)
+    g1 = jax.grad(lambda x, w: jnp.sum(ragged_matmul(x, w, offs) ** 2),
+                  argnums=(0, 1))(x, w)
+    _close(ge[0], g1[0], 1e-4)
+    _close(ge[1], g1[1], 1e-4)
+
+
+@multidev
+@pytest.mark.parametrize("schedule", ["gather", "ring"])
+def test_empty_shard_regression_all_rows_one_expert(schedule):
+    """Adversarial distribution from the issue: EVERY row routed to one
+    expert, so all but one shard own zero rows.  Forward + backward of the
+    fused MoE pipeline must match the oracle (the empty shards short-circuit
+    their window GEMMs instead of launching degenerate ones)."""
+    d, f, g = 16, 24, 2 * NDEV
+    mesh = make_mesh((NDEV,), ("expert",))
+    sizes = _distributions(g)["one_expert"]
+    offs = _offsets(sizes)
+    t = sum(sizes)
+    x = jax.random.normal(KEY, (t, d)) * 0.5
+    wg = jax.random.normal(jax.random.fold_in(KEY, 3), (g, d, f))
+    wu = jax.random.normal(jax.random.fold_in(KEY, 4), (g, d, f))
+    wd = jax.random.normal(jax.random.fold_in(KEY, 5), (g, f, d))
+
+    def ep(x, wg, wu, wd):
+        return ep_ragged_moe(x, wg, wu, wd, offs, mesh=mesh, axis="expert",
+                             schedule=schedule)
+
+    def oracle(x, wg, wu, wd):
+        from repro.core.gemm import ragged_swiglu
+        return ragged_matmul(ragged_swiglu(x, wg, wu, offs), wd, offs)
+
+    _close(ep(x, wg, wu, wd), oracle(x, wg, wu, wd))
+    ge = jax.grad(lambda *a: jnp.sum(ep(*a) ** 2),
+                  argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    g1 = jax.grad(lambda *a: jnp.sum(oracle(*a) ** 2),
+                  argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(ge, g1):
+        _close(a, b, 1e-4)
+
+
+@multidev
+@pytest.mark.parametrize("schedule", ["gather", "ring"])
+def test_dist_matmul_k_parallel_schedules(schedule):
+    """k_parallel under both schedules vs the local GEMM — N deliberately
+    NOT divisible by the device count so the ring pads its output chunks."""
+    m, k, n = 32, 16 * NDEV, 8 * NDEV + 4
+    mesh = make_mesh((NDEV,), ("model",))
+    a = jax.random.normal(KEY, (m, k))
+    b = jax.random.normal(jax.random.fold_in(KEY, 6), (k, n))
+    got = dist_matmul(a, b, mesh=mesh, axis="model", strategy="k_parallel",
+                      schedule=schedule)
+    assert got.shape == (m, n)
+    _close(got, matmul(a, b))
+
+
+@multidev
+def test_dist_matmul_rejects_ring_m_parallel():
+    mesh = make_mesh((NDEV,), ("model",))
+    a = jax.random.normal(KEY, (16, 16))
+    b = jax.random.normal(KEY, (16, 16))
+    with pytest.raises(ValueError):
+        dist_matmul(a, b, mesh=mesh, axis="model", strategy="m_parallel",
+                    schedule="ring")

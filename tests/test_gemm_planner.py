@@ -73,10 +73,16 @@ def test_upper_bound_fraction_monotone_in_n():
 
 
 def test_distributed_strategy_crossover():
-    """Paper §IV-C: K-parallel iff M, N small and K large."""
+    """Paper §IV-C: K-parallel iff M, N small and K large.  Since the ring
+    collective matmul landed, the overlapped schedule may extend K-parallel
+    onto boundary shapes (the psum hides behind compute) — the paper's rule
+    binds the UNOVERLAPPED schedule, so a boundary win must carry
+    schedule == "ring"."""
     assert plan_distributed(2**20, 64, 32, 8).strategy == "m_parallel"
     assert plan_distributed(32, 2**20, 32, 8).strategy == "k_parallel"
-    assert plan_distributed(20480, 20480, 32, 8).strategy == "m_parallel"
+    d = plan_distributed(20480, 20480, 32, 8)
+    assert d.strategy == "m_parallel" or \
+        d.local.placement.schedule == "ring"
     # more cores -> K-parallel stays necessary for T2
     assert plan_distributed(32, 2**20, 32, 256).strategy == "k_parallel"
 
