@@ -3,13 +3,26 @@ Prints ``name,us_per_call,derived`` CSV (and writes results/benchmarks.csv).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5] [--gate]
 
-``--gate`` turns the run into a perf regression check: the committed
-``results/BENCH_moe_ep.json`` is read BEFORE the suites execute, and after
-the rerun the fresh ``ep_ragged`` wall time must stay within a noise
-margin (1.30x) of that baseline — exit code 1 otherwise.  This is the CI
-tripwire for the EP slowdown class of bug: the committed file holds the
-last accepted number, so a schedule or exchange regression that re-inflates
-the EP leg fails the build instead of silently landing.
+``--gate`` turns the run into a perf regression check.  The committed
+result files are read BEFORE the suites execute, then the rerun must hold
+every ratchet — exit code 1 otherwise:
+
+  * ``moe_ep``: the fresh ``ep_ragged`` wall time stays within a noise
+    margin (1.30x) of the committed ``BENCH_moe_ep.json`` baseline — the
+    tripwire for the EP slowdown class of bug.
+  * ``irregular``: the fresh ``geomean_analytic_over_cached`` stays within
+    1.05x of the committed ratio — cached (measured) plans must keep at
+    least matching the analytic argmin, so a planner/store regression that
+    silently degrades replayed winners fails the build.
+  * ``epilogue``: the fresh run keeps ``fused_never_slower`` and
+    ``masked_never_slower`` true and its ``geomean_masked_speedup`` within
+    1.05x of the committed one — the zero-copy edge and fusion wins are
+    load-bearing paper claims, not one-off measurements.
+  * ``quant``: the fresh run keeps ``w8_beats_bf16_decode`` and
+    ``fused_never_slower`` true — the weight-only int8 decode win.
+
+Geomeans over whole shape sweeps are far less noisy than single wall
+times, hence the tighter 1.05x margin on the ratio ratchets.
 """
 from __future__ import annotations
 
@@ -21,8 +34,8 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from . import (autotune, collective, common, cpu_compare,  # noqa: E402
-               epilogue, microkernel, moe_ep, multi_core, roofline_table,
-               scalability, single_core)
+               epilogue, microkernel, moe_ep, multi_core, quant,
+               roofline_table, scalability, single_core)
 
 SUITES = {
     "fig3": microkernel.run,
@@ -42,9 +55,14 @@ SUITES = {
     # devices + ICI calibration + EP crossover agreement
     # (results/BENCH_collective.json).
     "collective": collective.run,
+    # Weight-only int8 decode GEMMs vs the bf16 baseline, fused vs unfused
+    # dequant, on the T2/T3 paper shapes (results/BENCH_quant.json).
+    "quant": quant.run,
 }
 
 GATE_MARGIN = 1.30      # wall-clock noise allowance for the EP gate
+RATCHET_MARGIN = 1.05   # sweep-geomean allowance (averages: low noise)
+GATED = ["moe_ep", "irregular", "epilogue", "quant"]
 _RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
 
 
@@ -62,38 +80,89 @@ def _ep_ragged_us(path: pathlib.Path) -> float | None:
     return None
 
 
+def _last_run(path: pathlib.Path) -> dict:
+    """The newest run record of a sweep-style result file (irregular /
+    epilogue / quant all append one per replay), or {} when missing."""
+    try:
+        with open(path) as fp:
+            blob = json.load(fp)
+        runs = blob.get("runs") or []
+        return runs[-1] if isinstance(runs[-1], dict) else {}
+    except (OSError, ValueError, TypeError, IndexError):
+        return {}
+
+
+def _gate_failures(baselines: dict) -> list[str]:
+    """Evaluate every ratchet against the freshly rewritten result files;
+    returns the failure messages (empty == gate holds)."""
+    fails: list[str] = []
+
+    fresh_ep = _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json")
+    if fresh_ep is None:
+        fails.append("moe_ep: ep_ragged leg missing or errored")
+    elif baselines["ep"] is not None and \
+            fresh_ep > baselines["ep"] * GATE_MARGIN:
+        fails.append(f"moe_ep: ep_ragged regressed {fresh_ep:.0f}us > "
+                     f"{GATE_MARGIN}x baseline {baselines['ep']:.0f}us")
+
+    irr = _last_run(_RESULTS / "BENCH_irregular.json")
+    ratio = irr.get("geomean_analytic_over_cached")
+    base = baselines["irregular"]
+    if ratio is None:
+        fails.append("irregular: no run record")
+    elif base is not None and ratio < base / RATCHET_MARGIN:
+        fails.append(f"irregular: geomean_analytic_over_cached {ratio:.4f}"
+                     f" < baseline {base:.4f} / {RATCHET_MARGIN}")
+
+    epi = _last_run(_RESULTS / "BENCH_epilogue.json")
+    for flag in ("fused_never_slower", "masked_never_slower"):
+        if not epi.get(flag):
+            fails.append(f"epilogue: {flag} is false")
+    masked = epi.get("geomean_masked_speedup")
+    base = baselines["epilogue"]
+    if masked is not None and base is not None and \
+            masked < base / RATCHET_MARGIN:
+        fails.append(f"epilogue: geomean_masked_speedup {masked:.4f} < "
+                     f"baseline {base:.4f} / {RATCHET_MARGIN}")
+
+    qrun = _last_run(_RESULTS / "BENCH_quant.json")
+    for flag in ("w8_beats_bf16_decode", "fused_never_slower"):
+        if not qrun.get(flag):
+            fails.append(f"quant: {flag} is false")
+    return fails
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names " + str(list(SUITES)))
     ap.add_argument("--gate", action="store_true",
-                    help="fail (exit 1) if the rerun ep_ragged leg "
-                         f"regresses beyond {GATE_MARGIN}x the committed "
-                         "BENCH_moe_ep.json baseline")
+                    help="rerun the gated legs " + str(GATED) + " and fail "
+                         "(exit 1) on any ratchet regression vs the "
+                         "committed result files")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
-    if args.gate and "moe_ep" not in names:
-        names.append("moe_ep")
-    baseline = _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json") \
-        if args.gate else None
+    if args.gate:
+        names += [g for g in GATED if g not in names]
+        baselines = {
+            "ep": _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json"),
+            "irregular": _last_run(_RESULTS / "BENCH_irregular.json")
+            .get("geomean_analytic_over_cached"),
+            "epilogue": _last_run(_RESULTS / "BENCH_epilogue.json")
+            .get("geomean_masked_speedup"),
+        }
     print("name,us_per_call,derived")
     for name in names:
         SUITES[name]()
     _RESULTS.mkdir(exist_ok=True)
     common.dump_csv(str(_RESULTS / "benchmarks.csv"))
     if args.gate:
-        fresh = _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json")
-        if fresh is None:
-            print("gate: ep_ragged leg missing or errored", file=sys.stderr)
+        fails = _gate_failures(baselines)
+        for msg in fails:
+            print(f"gate: {msg}", file=sys.stderr)
+        if fails:
             raise SystemExit(1)
-        if baseline is not None and fresh > baseline * GATE_MARGIN:
-            print(f"gate: ep_ragged regressed {fresh:.0f}us > "
-                  f"{GATE_MARGIN}x baseline {baseline:.0f}us",
-                  file=sys.stderr)
-            raise SystemExit(1)
-        ref = f"{baseline:.0f}us" if baseline is not None else "none"
-        print(f"gate: ep_ragged {fresh:.0f}us within {GATE_MARGIN}x of "
-              f"baseline {ref}")
+        print(f"gate: all ratchets hold ({', '.join(GATED)})")
 
 
 if __name__ == "__main__":

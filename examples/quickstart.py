@@ -124,3 +124,30 @@ print("corrupt plan flagged:", codes)        # ['unclamped_block', ...]
 # every planned launch (raises ContractError instead of running a bad
 # plan), and plan-cache loading quarantines violating records.  The full
 # ratchet: PYTHONPATH=src python -m repro.analysis.sweep
+
+# 9. Quantized irregular GEMMs (the dtype axis): quant= quantizes the
+#    weight panel in-trace — per-channel int8 (w8), nibble-packed int4
+#    (w4), dynamic full int8, or fp8 — with the dequant scale vector fused
+#    at the accumulator flush, and a straight-through backward against the
+#    dequantized panel.  The error is bounded analytically, not vibes.
+from repro.core import quant
+
+yq = matmul(x, w, quant="w8", out_dtype=jnp.float32)
+bound = quant.dot_error_bound(
+    x.shape[1], float(jnp.abs(x).max()), float(jnp.abs(w).max()),
+    0.0, float(quant.quantize_weights(w, quant.QuantConfig("w8"))[1].max()))
+err = float(jnp.abs(yq - x @ w).max())
+print(f"\nw8 matmul: max|err|={err:.3e} <= bound {bound:.3e}:",
+      err <= bound)
+
+# Pre-quantized weights (decode serving holds them int8 at rest) use the
+# manual spelling: the scale-vector epilogue on a mixed-dtype GEMM.  The
+# planner keys these separately (the |bb1 dtype axis of the plan cache).
+wq, s = quant.quantize_weights(w, quant.QuantConfig("w8"))
+y2 = matmul(x, wq, epilogue=Epilogue(scale_vec=True), scale=s,
+            out_dtype=jnp.float32)
+np.testing.assert_allclose(y2, yq, rtol=1e-5, atol=1e-5)
+print("pre-quantized spelling agrees; decode bench: "
+      "PYTHONPATH=src python -m benchmarks.quant")
+# Zero-drop quantized MoE experts: moe_mlp(..., dispatch="ragged",
+# quant="w8") — or any registry arch as "<arch>-w8" / "-int8".

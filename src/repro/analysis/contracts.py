@@ -206,26 +206,33 @@ def check_blocks(family: str, dims: Sequence[int], *, bm: int, bn: int,
 def vmem_footprint(family: str, *, bm: int, bn: int, bk: int,
                    in_bytes: int = 4, out_bytes: int = 4, nsplit: int = 1,
                    ragged: str = "m", epilogue: Any = None,
-                   swiglu: bool = False) -> int:
+                   swiglu: bool = False, b_bytes: int | None = None) -> int:
     """Per-grid-step VMEM working set in bytes: double-buffered A/B input
     blocks, the fp32 accumulator scratch, and the double-buffered output
     block (fp32 when split-K writes partials).  ``epilogue``/``swiglu`` add
     the extra kernel inputs the base CMR formula does not price: a bias row,
-    a residual block, the second weight panel + second accumulator."""
+    a residual block, the scale vector, the second weight panel + second
+    accumulator.  ``b_bytes`` is the B-operand element width when it differs
+    from A's (the mixed-dtype weight-only paths: int8/int4 weights against
+    bf16/fp32 activations)."""
+    bb = in_bytes if b_bytes is None else b_bytes
     if family == "ragged" and ragged == "k":
         a_blk, b_blk = bk * bm, bk * bn   # x^T panel and dy panel
     else:
         a_blk, b_blk = bm * bk, bk * bn
     out_elt = 4 if nsplit > 1 else out_bytes
-    total = 2 * (a_blk + b_blk) * in_bytes + bm * bn * 4 + 2 * bm * bn * out_elt
+    total = (2 * a_blk * in_bytes + 2 * b_blk * bb
+             + bm * bn * 4 + 2 * bm * bn * out_elt)
     if swiglu:
         # Second weight panel (double-buffered) + second fp32 accumulator.
-        total += 2 * b_blk * in_bytes + bm * bn * 4
+        total += 2 * b_blk * bb + bm * bn * 4
     if epilogue is not None:
         if getattr(epilogue, "bias", False):
             total += 2 * bn * out_bytes
         if getattr(epilogue, "residual", False):
             total += 2 * bm * bn * out_bytes
+        if getattr(epilogue, "scale_vec", False):
+            total += 2 * bn * 4         # fp32 dequant vector row
     return total
 
 
@@ -246,9 +253,45 @@ def check_schedule(*, nsplit: int = 1, fuse: bool = True, epilogue: Any = None,
             "splitk_nonlinear_epilogue",
             f"nsplit={nsplit} with a fused nonlinear epilogue would apply "
             "the activation to partial sums"))
+    # NOTE: a scale_vec epilogue (the quantized paths' dequant) is LINEAR —
+    # it commutes with the cross-split sum, so split-K legally applies it
+    # post-reduction and no violation is raised for it here.
     if swiglu:
         v.append(Violation("splitk_unsupported",
                            "no split-K swiglu kernel exists"))
+    return v
+
+
+def check_epilogue_vectors(family: str, dims: Sequence[int], epilogue: Any,
+                           *, bias_shape: Sequence[int] | None = None,
+                           scale_shape: Sequence[int] | None = None
+                           ) -> list[Violation]:
+    """Scale-vector / per-expert-bias operand legality for one planned call.
+
+    The flush-time vector operands must be (N,)-wide — broadcast over rows —
+    or, for the grouped/ragged families, (G, N) per-expert panels indexed by
+    the visit list's group id.  A wrong N silently broadcasts or raises deep
+    inside pallas; checking it here turns it into a named contract."""
+    v: list[Violation] = []
+    if epilogue is None:
+        return v
+    n = int(dims[-1])
+    g = int(dims[0]) if family in ("batched", "ragged") else None
+
+    def _check(name: str, flag: bool, shape) -> None:
+        if not flag or shape is None:
+            return
+        shp = tuple(int(s) for s in shape)
+        ok = shp == (n,) or (g is not None and shp == (g, n))
+        if not ok:
+            want = f"({n},)" if g is None else f"({n},) or ({g}, {n})"
+            v.append(Violation(
+                f"bad_{name}_shape",
+                f"{family} epilogue {name} operand has shape {shp}; "
+                f"expected {want}"))
+
+    _check("scale", getattr(epilogue, "scale_vec", False), scale_shape)
+    _check("bias", getattr(epilogue, "bias", False), bias_shape)
     return v
 
 
@@ -508,7 +551,8 @@ def check_contraction_masking(accum_body: Callable[..., Any] | None = None,
 
 
 def _pad_priced(family: str, dims: Sequence[int], plan: Any, *,
-                in_bytes: int, out_bytes: int, spec: Any) -> list[Violation]:
+                in_bytes: int, out_bytes: int, spec: Any,
+                b_bytes: int | None = None) -> list[Violation]:
     """Padded-edge plans must carry a CMR estimate whose HBM traffic includes
     the pad round-trip copies (``cmr._pad_copy_bytes``)."""
     est = getattr(plan, "est", None)
@@ -524,7 +568,8 @@ def _pad_priced(family: str, dims: Sequence[int], plan: Any, *,
                              nsplit=int(getattr(plan, "nsplit", 1)),
                              dim_order=getattr(plan, "dim_order", "mn"),
                              in_bytes=in_bytes, out_bytes=out_bytes,
-                             spec=_spec(spec), edge="padded").hbm_bytes
+                             spec=_spec(spec), edge="padded",
+                             b_bytes=b_bytes).hbm_bytes
     elif family == "batched":
         g, m, k, n = dims
         if block_aligned((m, k, n), (bm, bk, bn)):
@@ -553,11 +598,14 @@ def _pad_priced(family: str, dims: Sequence[int], plan: Any, *,
 def check_plan(family: str, dims: Sequence[int], plan: Any, *,
                in_bytes: int = 4, out_bytes: int = 4, spec: Any = None,
                epilogue: Any = None, swiglu: bool = False, ragged: str = "m",
-               trans: str = "nn", coverage: bool = False) -> list[Violation]:
+               trans: str = "nn", coverage: bool = False,
+               b_bytes: int | None = None) -> list[Violation]:
     """Check one plan (a ``tuner.GemmPlan``/``BatchedPlan``/``RaggedPlan`` or
     anything duck-typed like one) against every static contract.  With
     ``coverage=True`` the dense/batched store contract is also symbolically
-    verified from the kernel's real index maps."""
+    verified from the kernel's real index maps.  ``b_bytes`` declares a
+    mixed-dtype B operand (the weight-only quantized paths) so the VMEM
+    working set prices the narrow weight panel honestly."""
     sp = _spec(spec)
     bm = getattr(plan, "bm", None)
     v: list[Violation] = []
@@ -572,7 +620,7 @@ def check_plan(family: str, dims: Sequence[int], plan: Any, *,
         base = vmem_footprint(family, bm=int(plan.bm), bn=int(plan.bn),
                               bk=int(plan.bk), in_bytes=in_bytes,
                               out_bytes=out_bytes, nsplit=nsplit,
-                              ragged=ragged)
+                              ragged=ragged, b_bytes=b_bytes)
         if base > sp.vmem_budget:
             v.append(Violation(
                 "vmem_budget",
@@ -583,7 +631,7 @@ def check_plan(family: str, dims: Sequence[int], plan: Any, *,
                                   bk=int(plan.bk), in_bytes=in_bytes,
                                   out_bytes=out_bytes, nsplit=nsplit,
                                   ragged=ragged, epilogue=epilogue,
-                                  swiglu=swiglu)
+                                  swiglu=swiglu, b_bytes=b_bytes)
             if full > sp.vmem_budget:
                 # The tuner admits candidates on the base formula (matching
                 # cmr.estimate); extra epilogue/swiglu inputs pushing past
@@ -598,7 +646,7 @@ def check_plan(family: str, dims: Sequence[int], plan: Any, *,
                             epilogue=epilogue, swiglu=swiglu)
         if getattr(plan, "edge", "masked") == "padded":
             v += _pad_priced(family, dims, plan, in_bytes=in_bytes,
-                             out_bytes=out_bytes, spec=sp)
+                             out_bytes=out_bytes, spec=sp, b_bytes=b_bytes)
     placement = getattr(plan, "placement", None)
     if placement is not None and int(getattr(placement, "num_shards", 1)) > 1:
         v += check_placement(family, dims, placement, spec=sp)
@@ -781,7 +829,28 @@ def check_record(key: str, rec: Any, spec: Any = None) -> list[Violation]:
         return [Violation("bad_record",
                           f"record for {key!r} is missing/mistyping block "
                           "fields")]
-    ragged_axis = "k" if pk.extra == "ragged:k" else "m"
+    # Parse the extra: "+"-joined variant markers — the ragged axis and the
+    # mixed-dtype B width ("bb1" = int8/fp8 weights against wider
+    # activations, the dtype axis of the plan key).
+    ragged_axis, b_bytes = "m", None
+    for part in pk.extra.split("+"):
+        if part.startswith("ragged:"):
+            ragged_axis = part[len("ragged:"):]
+        elif part.startswith("bb"):
+            try:
+                b_bytes = int(part[2:])
+            except ValueError:
+                return [Violation("bad_key",
+                                  f"unparseable mixed-dtype marker "
+                                  f"{part!r} in {key!r}")]
+    if b_bytes is not None and nsplit > 1:
+        # Conservative quarantine: the measured store never times split-K
+        # mixed-dtype variants (the tuner does not generate them), so a
+        # cached record claiming one is corrupt or foreign.
+        return [Violation(
+            "splitk_mixed_dtype",
+            f"cached mixed-dtype record (bb{b_bytes}) claims nsplit={nsplit};"
+            " no measured split-K mixed-width variant exists")]
     if pk.num_shards > 1:
         strategy = rec.get("strategy")
         if strategy not in STRATEGIES:
@@ -815,7 +884,7 @@ def check_record(key: str, rec: Any, spec: Any = None) -> list[Violation]:
         footprint = vmem_footprint(pk.family, bm=bm, bn=bn, bk=bk,
                                    in_bytes=pk.in_bytes,
                                    out_bytes=pk.out_bytes, nsplit=nsplit,
-                                   ragged=ragged_axis)
+                                   ragged=ragged_axis, b_bytes=b_bytes)
         if footprint > sp.vmem_budget:
             v.append(Violation(
                 "vmem_budget",

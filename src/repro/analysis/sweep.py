@@ -40,7 +40,11 @@ from ..core.gemm.shapes import PAPER_IRREGULAR_SHAPES
 from . import contracts
 
 DECODE_TOKENS = 128     # decode-step rows for registry-derived shapes
-_WIDTHS = ((4, 4), (2, 2))      # fp32 and bf16 operand/output widths
+# Dtype-axis rows: (in_bytes, out_bytes, b_bytes).  b_bytes=None is the
+# homogeneous legacy pair (fp32, bf16); (1, 4, None) is the full-int8
+# compute path; b_bytes=1 are the weight-only mixed rows (bf16/fp32
+# activations streaming an int8 panel) the quantized dispatch plans with.
+_WIDTHS = ((4, 4, None), (2, 2, None), (1, 4, None), (2, 2, 1), (4, 4, 1))
 _EPI_OPS = (0, 2)               # identity and bias+activation epilogues
 
 
@@ -82,18 +86,19 @@ def registry_jobs(archs: Iterable[str] | None = None
 
 
 def _candidates(family: str, dims: tuple[int, ...], ib: int, ob: int,
-                epi_ops: int, ragged: str, verify: bool) -> list[Any]:
+                epi_ops: int, ragged: str, verify: bool,
+                bb: int | None = None) -> list[Any]:
     if family == "dense":
         m, k, n = dims
         return tuner.gemm_candidates(m, k, n, ib, ob, TPU_V5E, epi_ops,
-                                     verify=verify)
+                                     verify=verify, b_bytes=bb)
     if family == "batched":
         g, m, k, n = dims
         return tuner.batched_candidates(g, m, k, n, ib, ob, "none", TPU_V5E,
                                         epi_ops, verify=verify)
     g, total, k, n = dims
     return tuner.ragged_candidates(g, total, k, n, ib, ob, ragged, TPU_V5E,
-                                   verify=verify)
+                                   verify=verify, b_bytes=bb)
 
 
 def _argmin(cands: Sequence[Any]) -> Any:
@@ -136,24 +141,27 @@ def run_sweep(shapes: Sequence[tuple[str, int, int, int]] | None = None,
 
     for name, family, dims, ragged in jobs:
         n_jobs += 1
-        for ib, ob in _WIDTHS:
+        for ib, ob, bb in _WIDTHS:
+            if family == "batched" and bb is not None:
+                continue    # mixed-width panels: dense/ragged families only
             for epi_ops in (_EPI_OPS if family != "ragged" else (0,)):
                 cands = _candidates(family, dims, ib, ob, epi_ops, ragged,
-                                    verify=True)
+                                    verify=True, bb=bb)
+                bbs = "" if bb is None else f" bb{bb}"
                 if not cands:
-                    record(name, f"ib{ib} epi{epi_ops}",
+                    record(name, f"ib{ib}{bbs} epi{epi_ops}",
                            [contracts.Violation(
                                "empty_candidates",
                                "generator returned no candidates")])
                     continue
                 for plan in cands:
                     n_checked += 1
-                    record(name, f"ib{ib} epi{epi_ops} bm{plan.bm} "
+                    record(name, f"ib{ib}{bbs} epi{epi_ops} bm{plan.bm} "
                                  f"bn{plan.bn} bk{plan.bk} {plan.dim_order} "
                                  f"{plan.edge}",
                            contracts.check_plan(family, dims, plan,
                                                 in_bytes=ib, out_bytes=ob,
-                                                ragged=ragged))
+                                                ragged=ragged, b_bytes=bb))
                 # Symbolic store-coverage proof on the winner, all trans
                 # variants, deduped by grid geometry across jobs.
                 win = _argmin(cands)
@@ -170,10 +178,10 @@ def run_sweep(shapes: Sequence[tuple[str, int, int, int]] | None = None,
                 # Pruning round-trip: the contract pre-check must not change
                 # the chosen plan (it only removes plans that cannot run).
                 unverified = _candidates(family, dims, ib, ob, epi_ops,
-                                         ragged, verify=False)
+                                         ragged, verify=False, bb=bb)
                 if unverified and _argmin(unverified) != win:
                     roundtrip_mismatch.append(
-                        f"{name} ib{ib} epi{epi_ops}")
+                        f"{name} ib{ib}{bbs} epi{epi_ops}")
         if family == "ragged":
             g, total = dims[0], dims[1]
             win = _argmin(_candidates(family, dims, 4, 4, 0, ragged, True))

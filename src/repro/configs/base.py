@@ -45,6 +45,9 @@ class ModelConfig:
     # --- numerics / memory ---
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
+    quant: str = "none"              # core.quant mode for MLP/expert panels
+                                     # ("w8"/"w4"/"int8"/...); ragged MoE +
+                                     # dense MLP down projections
     vocab_pad_multiple: int = 16
     remat: str = "full"              # none | full | dots
     scan_unroll: bool = False        # unroll all scans (FLOPs probes only)

@@ -21,10 +21,35 @@ ARCHS: dict[str, ModelConfig] = {
 }
 
 
+_QUANT_SUFFIXES = ("w8", "w4", "int8")
+
+
 def get_config(name: str) -> ModelConfig:
-    if name.endswith("-smoke"):
-        return smoke_config(ARCHS[name[:-len("-smoke")]])
-    return ARCHS[name]
+    """Resolve an arch name, with composable variant suffixes:
+
+    ``<arch>-smoke`` shrinks the config for CI; ``<arch>-w8`` / ``-w4`` /
+    ``-int8`` turn on weight(-and-activation) quantization of the MLP /
+    expert panels (``ModelConfig.quant`` -> the GEMM layer's ``quant=``),
+    e.g. ``llama4_scout_17b_a16e-w8-smoke`` for the zero-drop int8-expert
+    smoke run."""
+    from dataclasses import replace
+    quant = "none"
+    smoke = False
+    while True:
+        if name.endswith("-smoke") and not smoke:
+            name, smoke = name[:-len("-smoke")], True
+            continue
+        tail = name.rsplit("-", 1)[-1]
+        if tail in _QUANT_SUFFIXES and quant == "none":
+            name, quant = name[:-len(tail) - 1], tail
+            continue
+        break
+    cfg = ARCHS[name]
+    if smoke:
+        cfg = smoke_config(cfg)
+    if quant != "none":
+        cfg = replace(cfg, quant=quant)
+    return cfg
 
 
 def list_archs() -> list[str]:

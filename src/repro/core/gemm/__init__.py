@@ -43,6 +43,7 @@ Layering, bottom-up:
     modeled wires are scaled by).
 """
 from ...kernels.ftimm.epilogue import Epilogue
+from ..quant import QuantConfig
 from .shapes import GemmClass, ShapeThresholds, classify, is_irregular
 from .cmr import (TPU_V5E, TpuSpec, EpEstimate, PlanEstimate, estimate,
                   estimate_batched, estimate_ep, estimate_ragged,
@@ -73,7 +74,7 @@ __all__ = [
     "plan_moe_dispatch", "plan_ragged_gemm", "tgemm_plan",
     "clear_plan_cache",
     "effective_spec", "epilogue_stats", "plan_mode_stats",
-    "Epilogue",
+    "Epilogue", "QuantConfig",
     "matmul", "batched_matmul", "grouped_matmul", "grouped_swiglu",
     "matmul_swiglu", "project", "project_swiglu",
     "ragged_matmul", "ragged_swiglu",

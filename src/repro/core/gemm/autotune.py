@@ -88,16 +88,28 @@ def _check_engine(engine: str) -> str:
 
 def _dtype(nbytes: int):
     try:
-        return {4: jnp.float32, 2: jnp.bfloat16}[int(nbytes)]
+        return {4: jnp.float32, 2: jnp.bfloat16, 1: jnp.int8}[int(nbytes)]
     except KeyError:
         raise ValueError(
             f"unsupported operand width for measured tuning: {nbytes} bytes "
-            "(4 = float32, 2 = bfloat16)") from None
+            "(4 = float32, 2 = bfloat16, 1 = int8)") from None
 
 
 def _rand(shape, dtype, seed: int = 0):
+    if jnp.dtype(dtype) == jnp.int8:
+        # Full-range int8 operands: timing is value-independent, but keep
+        # the panels representative of real quantized weights anyway.
+        return jax.random.randint(jax.random.PRNGKey(seed), shape,
+                                  -127, 128, jnp.int32).astype(jnp.int8)
     return jax.random.normal(jax.random.PRNGKey(seed), shape,
                              jnp.float32).astype(dtype)
+
+
+def _widen(x: jax.Array) -> jax.Array:
+    """XLA-engine operand fixup: the reference dots have no narrow-int path
+    on the pinned jax, so itemsize-1 operands run upcast (outside the timed
+    thunk; the engine differentiates candidates through padding only)."""
+    return x.astype(jnp.float32) if jnp.dtype(x.dtype).itemsize == 1 else x
 
 
 @dataclass(frozen=True)
@@ -123,6 +135,8 @@ class TuneResult:
     est_measured: PlanEstimate
     engine: str
     timed: tuple                    # ((bm, bn, bk, dim_order, seconds), ...)
+    in_bytes: int = 4               # operand width (1 routes the int8 peak)
+    b_bytes: int | None = None      # mixed-width B operand, None = same as A
 
     @property
     def ratio_pred_over_meas(self) -> float:
@@ -258,8 +272,10 @@ def _tail_passes(epi: Epilogue, out_dtype, fused: bool):
 def _epi_operands(epi: Epilogue | None, m: int, n: int, dtype):
     if epi is None:
         return None, None
-    bias = _rand((n,), dtype, seed=2) if epi.bias else None
-    res = _rand((m, n), dtype, seed=3) if epi.residual else None
+    # Flush vectors stay float even when the GEMM operands are quantized.
+    vdt = dtype if jnp.dtype(dtype).itemsize > 1 else jnp.float32
+    bias = _rand((n,), vdt, seed=2) if epi.bias else None
+    res = _rand((m, n), vdt, seed=3) if epi.residual else None
     return bias, res
 
 
@@ -294,6 +310,7 @@ def _dense_runner(engine, a, b, plan, out_dtype, epi: Epilogue | None = None):
         else:
             mp, kp, np_ = m, k, n
             a_p, b_p = a, b
+        a_p, b_p = _widen(a_p), _widen(b_p)
         fn = _jit_dense_ref(jnp.dtype(out_dtype).name)
         passes = [] if epi is None else _tail_passes(epi, out_dtype, fused)
         return (("xla", mp, kp, np_, epi, fused),
@@ -330,6 +347,7 @@ def _batched_runner(engine, a, b, plan, out_dtype):
         else:
             mp, kp, np_ = m, k, n
             a_p, b_p = a, b
+        a_p, b_p = _widen(a_p), _widen(b_p)
         fn = _jit_batched_ref(jnp.dtype(out_dtype).name, a.ndim, b.ndim)
         return ("xla", mp, kp, np_), (lambda: fn(a_p, b_p))
     interp = engine == "pallas_interpret"
@@ -345,7 +363,8 @@ def _ragged_runner(engine, x, w, offsets, plan, out_dtype, ragged):
         # dW: x (T, D), w is dy (T, F); the ragged dim is the contraction.
         if engine == "xla":
             fn = _jit_ragged_dw_ref(jnp.dtype(out_dtype).name)
-            return ("xla", "dw"), (lambda: fn(x, w, offsets))
+            xw, ww = _widen(x), _widen(w)
+            return ("xla", "dw"), (lambda: fn(xw, ww, offsets))
         interp = engine == "pallas_interpret"
         sig = ("pl", plan.bm, plan.bn, plan.bk, interp)
         return sig, (lambda: _ops.ragged_gemm_dw(
@@ -359,8 +378,9 @@ def _ragged_runner(engine, x, w, offsets, plan, out_dtype, ragged):
         tp = ceil_to(total, bm)
         x_p = jnp.pad(x, ((0, tp - total), (0, 0)))
         offs = offsets.at[-1].set(tp)       # pad rows ride the last group
+        x_p, w_p = _widen(x_p), _widen(w)
         fn = _jit_ragged_ref(jnp.dtype(out_dtype).name)
-        return ("xla", tp), (lambda: fn(x_p, w, offs))
+        return ("xla", tp), (lambda: fn(x_p, w_p, offs))
     interp = engine == "pallas_interpret"
     sig = ("pl", bm, bn, bk, interp)
     return sig, (lambda: _ops.ragged_gemm(
@@ -442,6 +462,7 @@ def autotune_gemm(
     max_elements: int = DEFAULT_MAX_ELEMENTS,
     store: bool = True,
     epilogue: Epilogue | None = None,
+    b_bytes: int | None = None,
 ) -> TuneResult:
     """Measured search for the dense GEMM: CMR shortlist -> time -> winner
     (``mode == "measured"``), persisted to the plan store unless
@@ -452,7 +473,12 @@ def autotune_gemm(
     on running the elementwise tail in the accumulator flush (``fuse=True``)
     vs as separate compiled passes over the stored output, and every
     candidate is timed WITH its tail — so the persisted winner records
-    whether fusion actually paid on this engine, not just in the model."""
+    whether fusion actually paid on this engine, not just in the model.
+
+    ``b_bytes`` searches the MIXED-width dtype axis (weight-only quant:
+    ``in_bytes``-wide A against a ``b_bytes``-wide B panel); the winner is
+    stored under the ``+bb{n}`` key fragment so only mixed-width calls are
+    served by it."""
     engine = _check_engine(engine or default_engine())
     epi_ops = epilogue.num_ops if epilogue is not None else 0
     # Shortlist under the calibrated view (better pruning), but express
@@ -473,11 +499,12 @@ def autotune_gemm(
             num_shards=num_shards, engine=engine, store=store)
 
     cands = tuner.gemm_candidates(m, k, n, in_bytes, out_bytes, spec,
-                                  epi_ops)
+                                  epi_ops, b_bytes=b_bytes)
     sl = tuner.shortlist(cands, top_k)
     mm, kk, nn = _scale_dense(m, k, n, max_elements)
     in_dt, out_dt = _dtype(in_bytes), _dtype(out_bytes)
-    a, b = _rand((mm, kk), in_dt), _rand((kk, nn), in_dt, seed=1)
+    b_dt = in_dt if b_bytes is None else _dtype(b_bytes)
+    a, b = _rand((mm, kk), in_dt), _rand((kk, nn), b_dt, seed=1)
     times, widx = _measure_shortlist(
         sl, lambda c: _dense_runner(engine, a, b, c, out_dt, epilogue),
         repeats)
@@ -486,14 +513,16 @@ def autotune_gemm(
                         dim_order=winner.dim_order, in_bytes=in_bytes,
                         out_bytes=out_bytes, edge=winner.edge,
                         epi_ops=epi_ops, epi_fused=winner.fuse,
-                        spec=base_spec)
+                        spec=base_spec, b_bytes=b_bytes)
     res = TuneResult(
         family="dense", dims=(m, k, n), measured_dims=(mm, kk, nn),
-        key=plan_store.shape_key("dense", (m, k, n), in_bytes, out_bytes),
+        key=plan_store.shape_key("dense", (m, k, n), in_bytes, out_bytes,
+                                 extra=tuner._dtype_extra(b_bytes)),
         plan=winner, t_measured=times[widx], t_analytic=times[0],
         analytic_plan=sl[0], est_measured=est_meas, engine=engine,
         timed=tuple((c.bm, c.bn, c.bk, c.dim_order, t)
-                    for c, t in zip(sl, times)))
+                    for c, t in zip(sl, times)),
+        in_bytes=in_bytes, b_bytes=b_bytes)
     if store:
         _store_result(res)
     return res
@@ -573,10 +602,13 @@ def autotune_ragged_gemm(
     engine: str | None = None,
     max_elements: int = DEFAULT_MAX_ELEMENTS,
     store: bool = True,
+    b_bytes: int | None = None,
 ) -> TuneResult:
     """Measured search for the ragged grouped GEMM family.  The harness
     times a *balanced* distribution of the same signature (per-group counts
-    are dynamic at run time; the plan is keyed by the aggregate anyway)."""
+    are dynamic at run time; the plan is keyed by the aggregate anyway).
+    ``b_bytes`` searches the mixed-width axis (quantized expert panels
+    against wide activations), keyed ``ragged:m+bb{n}``."""
     engine = _check_engine(engine or default_engine())
     base_spec = spec                # see autotune_gemm: calibration basis
     spec = tuner.effective_spec(spec)
@@ -594,17 +626,18 @@ def autotune_ragged_gemm(
             extra=f"ragged:{ragged}")
 
     cands = tuner.ragged_candidates(g, total, k, n, in_bytes, out_bytes,
-                                    ragged, spec)
+                                    ragged, spec, b_bytes=b_bytes)
     sl = tuner.shortlist(cands, top_k)
     gg, tt, kk, nn = _scale_ragged(g, total, k, n, max_elements)
     in_dt, out_dt = _dtype(in_bytes), _dtype(out_bytes)
+    b_dt = in_dt if b_bytes is None else _dtype(b_bytes)
     offsets = _balanced_offsets(gg, tt)
     if ragged == "k":
         x = _rand((tt, kk), in_dt)           # (T, D)
         w = _rand((tt, nn), in_dt, seed=1)   # dy: (T, F)
     else:
         x = _rand((tt, kk), in_dt)
-        w = _rand((gg, kk, nn), in_dt, seed=1)
+        w = _rand((gg, kk, nn), b_dt, seed=1)
     times, widx = _measure_shortlist(
         sl, lambda c: _ragged_runner(engine, x, w, offsets, c, out_dt,
                                      ragged), repeats)
@@ -612,16 +645,18 @@ def autotune_ragged_gemm(
     est_meas = estimate_ragged(gg, tt, kk, nn, bm=winner.bm, bn=winner.bn,
                                bk=winner.bk, ragged=ragged,
                                in_bytes=in_bytes, out_bytes=out_bytes,
-                               spec=base_spec)
+                               spec=base_spec, b_bytes=b_bytes)
     res = TuneResult(
         family="ragged", dims=(g, total, k, n),
         measured_dims=(gg, tt, kk, nn),
-        key=plan_store.shape_key("ragged", (g, total, k, n), in_bytes,
-                                 out_bytes, extra=f"ragged:{ragged}"),
+        key=plan_store.shape_key(
+            "ragged", (g, total, k, n), in_bytes, out_bytes,
+            extra=tuner._dtype_extra(b_bytes, f"ragged:{ragged}")),
         plan=winner, t_measured=times[widx], t_analytic=times[0],
         analytic_plan=sl[0], est_measured=est_meas, engine=engine,
         timed=tuple((c.bm, c.bn, c.bk, "mn", t)
-                    for c, t in zip(sl, times)))
+                    for c, t in zip(sl, times)),
+        in_bytes=in_bytes, b_bytes=b_bytes)
     if store:
         _store_result(res)
     return res
@@ -742,10 +777,39 @@ def calibrate(results, *, spec: TpuSpec = TPU_V5E,
     for every subsequent default-spec planning decision.  (``est_measured``
     is always expressed in the raw base spec, so refitting with a
     calibration already installed composes correctly instead of collapsing
-    to ~1.0.)"""
+    to ~1.0.)
+
+    Narrow-dtype results (``in_bytes == 1`` — the full-int8 compute path,
+    whose predictions price against ``TpuSpec.peak_flops_int8``) are fitted
+    SEPARATELY into ``flops_frac_int8``: the int8 MXU path saturates
+    differently from the float path, so one shared fraction would misprice
+    whichever family wasn't measured.  Mixed weight-only results
+    (``b_bytes`` set, wide activations) compute on the float path and stay
+    in the main fit."""
     engines = {r.engine for r in results}
-    cal = fit_calibration([(r.est_measured, r.t_measured) for r in results],
+    wide = [r for r in results if getattr(r, "in_bytes", 4) != 1]
+    narrow = [r for r in results if getattr(r, "in_bytes", 4) == 1]
+    cal = fit_calibration([(r.est_measured, r.t_measured) for r in wide],
                           engine=",".join(sorted(engines)), spec=spec)
+    if narrow:
+        # Fit the int8 flops fraction against the MAIN fit's bandwidth
+        # fraction (the wires don't change with the MXU path); fall back to
+        # a narrow-only joint fit when no wide samples anchored bw_frac.
+        nsam = [(r.est_measured, r.t_measured) for r in narrow]
+        if wide:
+            best = None
+            for e in range(-64, 65):
+                ff = 10.0 ** (e * 4.0 / 64)
+                err = prediction_error(nsam, ff, cal.bw_frac)
+                if best is None or err < best[0]:
+                    best = (err, ff)
+            int8_frac = best[1]
+        else:
+            ncal = fit_calibration(nsam, engine=cal.engine, spec=spec)
+            cal = replace(cal, bw_frac=ncal.bw_frac)
+            int8_frac = ncal.flops_frac
+        cal = replace(cal, flops_frac_int8=int8_frac,
+                      n_samples=len(results))
     if store:
         st = plan_store.get_store()
         old = st.calibration

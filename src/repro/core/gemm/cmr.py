@@ -35,6 +35,7 @@ class TpuSpec:
     name: str = "tpu_v5e"
     peak_flops_bf16: float = 197e12
     peak_flops_fp32: float = 98.5e12        # MXU fp32 ~ half bf16 rate
+    peak_flops_int8: float = 394e12         # int8 OPS ~ 2x bf16 rate
     hbm_bw: float = 819e9                   # bytes/s
     vmem_budget: int = 16 * 1024 * 1024     # usable VMEM per core (conservative)
     lane: int = 128                          # vreg lanes / MXU width
@@ -47,7 +48,14 @@ class TpuSpec:
     num_chips: int = 1
 
     def peak_flops(self, dtype_bytes: int) -> float:
-        return self.peak_flops_fp32 if dtype_bytes >= 4 else self.peak_flops_bf16
+        """Peak MXU rate for the *compute* element width.  1-byte operands
+        (int8 / fp8) run at the narrow-dtype peak — NOT the bf16 peak the
+        pre-quant model fell through to, which overpriced int8 compute 2x."""
+        if dtype_bytes >= 4:
+            return self.peak_flops_fp32
+        if dtype_bytes == 1:
+            return self.peak_flops_int8
+        return self.peak_flops_bf16
 
     def sublane(self, dtype_bytes: int) -> int:
         """Register-tile second-to-minor extent: (8,128) fp32, (16,128)
@@ -59,20 +67,25 @@ class TpuSpec:
         return self.sublane_bf16
 
     def calibrated(self, flops_frac: float, bw_frac: float,
-                   ici_frac: float = 1.0) -> "TpuSpec":
+                   ici_frac: float = 1.0,
+                   int8_frac: float | None = None) -> "TpuSpec":
         """The measured-effective view of this device: peak FLOP/s scaled by
         the achievable fraction, HBM bandwidth by the effective fraction
         (both fitted by ``autotune.calibrate`` from measured-vs-predicted
-        ratios), and ICI per-link bandwidth by the effective-ICI fraction
-        fitted by ``autotune.calibrate_ici`` from timed mesh exchanges.
-        Capacities and tile geometry stay nominal — only the roofline rates
-        are what measurement corrects."""
+        ratios), ICI per-link bandwidth by the effective-ICI fraction
+        fitted by ``autotune.calibrate_ici`` from timed mesh exchanges, and
+        the int8 peak by its own fitted fraction when the calibration run
+        carried narrow-dtype samples (``None`` falls back to the shared
+        flops fraction).  Capacities and tile geometry stay nominal — only
+        the roofline rates are what measurement corrects."""
         from dataclasses import replace
         return replace(
             self,
             name=f"{self.name}+cal",
             peak_flops_bf16=self.peak_flops_bf16 * flops_frac,
             peak_flops_fp32=self.peak_flops_fp32 * flops_frac,
+            peak_flops_int8=self.peak_flops_int8
+            * (flops_frac if int8_frac is None else int8_frac),
             hbm_bw=self.hbm_bw * bw_frac,
             ici_bw_per_link=self.ici_bw_per_link * ici_frac,
         )
@@ -144,6 +157,7 @@ def estimate(
     dim_order: str = "mn",
     in_bytes: int = 4,
     out_bytes: int = 4,
+    b_bytes: int | None = None,
     edge: str = "masked",
     epi_ops: int = 0,
     epi_fused: bool = True,
@@ -167,7 +181,13 @@ def estimate(
     copy; ``"masked"`` (in-kernel edge tiles) pays nothing extra.  ``epi_ops``
     is the post-GEMM elementwise tail length: fused (``epi_fused``) it rides
     the accumulator flush for free, unfused each op re-reads + re-writes C.
+
+    ``b_bytes`` prices a mixed-width B operand (weight-only quant: bf16
+    activations x int8 weights) — B-side traffic, pad copies, and VMEM run
+    at the narrow width while the MXU rate is set by the *wider* operand
+    (the narrow one upcasts at load).  ``None`` means B matches A.
     """
+    bb = in_bytes if b_bytes is None else b_bytes
     mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk * nsplit)
     gm, gn, gk = mp // bm, np_ // bn, kp // (bk * nsplit)
 
@@ -178,13 +198,13 @@ def estimate(
     if gk == 1 and nsplit == 1:
         if dim_order == "mn":   # i outer: A resident across the j sweep
             traffic_a = mp * kp * in_bytes
-            traffic_b = kp * np_ * gm * in_bytes
+            traffic_b = kp * np_ * gm * bb
         else:                   # j outer: B resident across the i sweep
             traffic_a = mp * kp * gn * in_bytes
-            traffic_b = kp * np_ * in_bytes
+            traffic_b = kp * np_ * bb
     else:
         traffic_a = mp * kp * gn * in_bytes
-        traffic_b = kp * np_ * gm * in_bytes
+        traffic_b = kp * np_ * gm * bb
     traffic_c = mp * np_ * out_bytes
     if nsplit > 1:
         # Partials written + re-read for the reduction (paper: through GSM;
@@ -195,17 +215,17 @@ def estimate(
         # Pad copies in (A, B) and the slice copy out, each a full HBM
         # round-trip the masked path never makes.
         hbm_bytes += _pad_copy_bytes(m * k, mp * kp, in_bytes)
-        hbm_bytes += _pad_copy_bytes(k * n, kp * np_, in_bytes)
+        hbm_bytes += _pad_copy_bytes(k * n, kp * np_, bb)
         hbm_bytes += _pad_copy_bytes(m * n, mp * np_, out_bytes)
     hbm_bytes += _epilogue_bytes(m, n, out_bytes, epi_ops, epi_fused)
 
     frac = upper_bound_fraction(mp, np_, kp, spec)
-    peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)
+    peak = spec.peak_flops(max(in_bytes, bb)) * max(frac, 1e-3)
     t_compute = flops_padded / peak
     t_memory = hbm_bytes / spec.hbm_bw
 
     # VMEM: double-buffered input blocks + resident fp32 accumulator + out.
-    vmem = (2 * (bm * bk + bk * bn) * in_bytes
+    vmem = (2 * (bm * bk * in_bytes + bk * bn * bb)
             + bm * bn * 4
             + 2 * bm * bn * out_bytes)
     return PlanEstimate(
@@ -228,6 +248,7 @@ def estimate_batched(
     shared_b: bool = False,
     in_bytes: int = 4,
     out_bytes: int = 4,
+    b_bytes: int | None = None,
     edge: str = "masked",
     epi_ops: int = 0,
     epi_fused: bool = True,
@@ -243,8 +264,10 @@ def estimate_batched(
     its index map must be globally constant, i.e. a single block in every
     grid dim it reads (gk == 1 and its own outer extent == 1).  Otherwise the
     shared panel re-streams per batch entry exactly like the paper's
-    re-fetched operand in the non-cached loop order.
+    re-fetched operand in the non-cached loop order.  ``b_bytes`` prices a
+    mixed-width B operand (see ``estimate``).
     """
+    bb = in_bytes if b_bytes is None else b_bytes
     mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
     gm, gn, gk = mp // bm, np_ // bn, kp // bk
 
@@ -255,18 +278,18 @@ def estimate_batched(
     if gk == 1:
         if dim_order == "mn":   # i outer: A resident across the j sweep
             ta_entry = mp * kp * in_bytes
-            tb_entry = kp * np_ * gm * in_bytes
+            tb_entry = kp * np_ * gm * bb
         else:                   # j outer: B resident across the i sweep
             ta_entry = mp * kp * gn * in_bytes
-            tb_entry = kp * np_ * in_bytes
+            tb_entry = kp * np_ * bb
     else:
         ta_entry = mp * kp * gn * in_bytes
-        tb_entry = kp * np_ * gm * in_bytes
+        tb_entry = kp * np_ * gm * bb
 
     a_resident = shared_a and gm == 1 and gk == 1
     b_resident = shared_b and gn == 1 and gk == 1
     traffic_a = (mp * kp * in_bytes) if a_resident else ta_entry * g
-    traffic_b = (kp * np_ * in_bytes) if b_resident else tb_entry * g
+    traffic_b = (kp * np_ * bb) if b_resident else tb_entry * g
     traffic_c = g * mp * np_ * out_bytes
     hbm_bytes = traffic_a + traffic_b + traffic_c
     if edge == "padded":
@@ -274,19 +297,19 @@ def estimate_batched(
         # per-group output slice copy.
         hbm_bytes += _pad_copy_bytes(m * k, mp * kp, in_bytes) \
             * (1 if shared_a else g)
-        hbm_bytes += _pad_copy_bytes(k * n, kp * np_, in_bytes) \
+        hbm_bytes += _pad_copy_bytes(k * n, kp * np_, bb) \
             * (1 if shared_b else g)
         hbm_bytes += _pad_copy_bytes(m * n, mp * np_, out_bytes) * g
     hbm_bytes += _epilogue_bytes(g * m, n, out_bytes, epi_ops, epi_fused)
 
     frac = upper_bound_fraction(mp, np_, kp, spec)
-    peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)
+    peak = spec.peak_flops(max(in_bytes, bb)) * max(frac, 1e-3)
     t_compute = flops_padded / peak
     t_memory = hbm_bytes / spec.hbm_bw
 
     # VMEM footprint is per grid step — independent of G (batch blocks are 1
     # entry deep), identical to the 2-D kernel's.
-    vmem = (2 * (bm * bk + bk * bn) * in_bytes
+    vmem = (2 * (bm * bk * in_bytes + bk * bn * bb)
             + bm * bn * 4
             + 2 * bm * bn * out_bytes)
     return PlanEstimate(
@@ -307,6 +330,7 @@ def estimate_ragged(
     ragged: str = "m",
     in_bytes: int = 4,
     out_bytes: int = 4,
+    b_bytes: int | None = None,
     spec: TpuSpec = TPU_V5E,
 ) -> PlanEstimate:
     """Model one tiling of the ragged grouped GEMM over G groups.
@@ -325,8 +349,10 @@ def estimate_ragged(
     paper's "B panel cached in GSM"; shared boundary tiles re-store their
     output block (the masked read-modify-write).  dW (D/bm, F/bn, NT): both
     row operands stream once per output-panel block, each group's panel is
-    stored once.
+    stored once.  ``b_bytes`` prices mixed-width per-group panels (int8
+    experts under bf16 tokens — see ``estimate``).
     """
+    bb = in_bytes if b_bytes is None else b_bytes
     if ragged == "m":
         tp = ceil_to(max(total, 1), bm)
         visits = tp // bm + max(g - 1, 0)      # boundary tiles, ≤ 1 per group
@@ -336,14 +362,14 @@ def estimate_ragged(
         flops_padded = 2.0 * visits * bm * np_ * kp
         traffic_x = gn * visits * bm * kp * in_bytes
         if gk == 1:   # panel resident across one group's row tiles
-            traffic_w = g * kp * np_ * in_bytes
+            traffic_w = g * kp * np_ * bb
         else:
-            traffic_w = visits * kp * np_ * in_bytes
+            traffic_w = visits * kp * np_ * bb
         # One store per visit per N block; shared-tile visits re-read the
         # block they merge into (read-modify-write).
         traffic_c = visits * bm * np_ * out_bytes \
             + (visits - tp // bm) * bm * np_ * out_bytes
-        vmem = (2 * (bm * bk + bk * bn) * in_bytes
+        vmem = (2 * (bm * bk * in_bytes + bk * bn * bb)
                 + bm * bn * 4 + 2 * bm * bn * out_bytes)
         frac = upper_bound_fraction(bm, np_, kp, spec)
     elif ragged == "k":
@@ -354,16 +380,16 @@ def estimate_ragged(
         flops_useful = 2.0 * total * k * n
         flops_padded = 2.0 * visits * bk * mp * np_
         traffic_x = gn * visits * bk * mp * in_bytes
-        traffic_w = gm * visits * bk * np_ * in_bytes
+        traffic_w = gm * visits * bk * np_ * bb
         traffic_c = g * mp * np_ * out_bytes
-        vmem = (2 * (bk * bm + bk * bn) * in_bytes
+        vmem = (2 * (bk * bm * in_bytes + bk * bn * bb)
                 + bm * bn * 4 + 2 * bm * bn * out_bytes)
         frac = upper_bound_fraction(bk, np_, mp, spec)
     else:
         raise ValueError(ragged)
 
     hbm_bytes = traffic_x + traffic_w + traffic_c
-    peak = spec.peak_flops(in_bytes) * max(frac, 1e-3)
+    peak = spec.peak_flops(max(in_bytes, bb)) * max(frac, 1e-3)
     return PlanEstimate(
         flops_useful=flops_useful,
         flops_padded=flops_padded,

@@ -17,6 +17,7 @@ Backend selection: ``REPRO_GEMM_BACKEND`` env var ("pallas" | "xla" |
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 
@@ -27,13 +28,14 @@ from ...analysis import contracts as _contracts
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
 from ...kernels.ftimm.epilogue import IDENTITY, Epilogue
+from .. import quant as _quant
 from .tuner import (note_epilogue, note_plan_use, plan_batched_gemm,
                     plan_gemm, plan_ragged_gemm)
 
 _REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
 
 
-def _check_epi(epi: Epilogue, bias, residual) -> None:
+def _check_epi(epi: Epilogue, bias, residual, scale=None) -> None:
     if epi.bias != (bias is not None):
         raise ValueError(
             f"epilogue.bias={epi.bias} but bias operand "
@@ -42,6 +44,10 @@ def _check_epi(epi: Epilogue, bias, residual) -> None:
         raise ValueError(
             f"epilogue.residual={epi.residual} but residual operand "
             f"{'missing' if residual is None else 'given'}")
+    if epi.scale_vec != (scale is not None):
+        raise ValueError(
+            f"epilogue.scale_vec={epi.scale_vec} but scale operand "
+            f"{'missing' if scale is None else 'given'}")
 
 
 def _backend() -> str:
@@ -58,17 +64,17 @@ def _verify_enabled() -> bool:
 @functools.lru_cache(maxsize=4096)
 def _verify_cached(family: str, dims: tuple, plan, in_bytes: int,
                    out_bytes: int, epi, swiglu: bool, ragged: str,
-                   trans: str) -> bool:
+                   trans: str, b_bytes: int | None = None) -> bool:
     _contracts.assert_plan(family, dims, plan, in_bytes=in_bytes,
                            out_bytes=out_bytes, epilogue=epi, swiglu=swiglu,
-                           ragged=ragged, trans=trans,
+                           ragged=ragged, trans=trans, b_bytes=b_bytes,
                            coverage=family in ("dense", "batched"))
     return True
 
 
 def _verify(family: str, dims, plan, in_bytes: int, out_bytes: int, *,
             epi=None, swiglu: bool = False, ragged: str = "m",
-            trans: str = "nn") -> None:
+            trans: str = "nn", b_bytes: int | None = None) -> None:
     """``REPRO_VERIFY=1`` mode: assert the static kernel contracts
     (``analysis.contracts.check_plan`` incl. the symbolic store-coverage
     proof) on every planned call, raising ``analysis.ContractError`` before
@@ -77,7 +83,29 @@ def _verify(family: str, dims, plan, in_bytes: int, out_bytes: int, *,
     if _verify_enabled():
         _verify_cached(family, tuple(int(d) for d in dims), plan,
                        int(in_bytes), int(out_bytes), epi, swiglu, ragged,
-                       trans)
+                       trans, None if b_bytes is None else int(b_bytes))
+
+
+def _check_vectors(family: str, dims, epi: Epilogue, bias, scale) -> None:
+    """Raise ``ContractError`` on a malformed flush-vector operand (wrong N,
+    neither shared (N,) nor per-expert (G, N)) — always on, trace-time."""
+    if bias is None and scale is None:
+        return
+    bad = _contracts.errors(_contracts.check_epilogue_vectors(
+        family, dims, epi,
+        bias_shape=None if bias is None else bias.shape,
+        scale_shape=None if scale is None else scale.shape))
+    if bad:
+        raise _contracts.ContractError(bad,
+                                       context=f"{family}{tuple(dims)}")
+
+
+def _b_bytes(a: jax.Array, b: jax.Array) -> int | None:
+    """The planners' dtype-axis key: B's element width when it differs from
+    A's (the weight-only mixed paths), else None (homogeneous — legacy
+    keys)."""
+    bb = jnp.dtype(b.dtype).itemsize
+    return None if bb == jnp.dtype(a.dtype).itemsize else bb
 
 
 def _mkn(trans: str, a_shape, b_shape):
@@ -92,13 +120,15 @@ def _mkn(trans: str, a_shape, b_shape):
 
 def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
                  interpret: bool, epi: Epilogue = IDENTITY,
-                 bias=None, residual=None) -> jax.Array:
+                 bias=None, residual=None, scale=None) -> jax.Array:
     m, k, n = _mkn(trans, a.shape, b.shape)
     in_bytes = jnp.dtype(a.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
-    plan = plan_gemm(m, k, n, in_bytes, out_bytes, epi_ops=epi.num_ops)
+    bb = _b_bytes(a, b)
+    plan = plan_gemm(m, k, n, in_bytes, out_bytes, epi_ops=epi.num_ops,
+                     b_bytes=bb)
     _verify("dense", (m, k, n), plan, in_bytes, out_bytes, epi=epi,
-            trans=trans)
+            trans=trans, b_bytes=bb)
     note_plan_use("dense", plan)
     if epi.is_identity:
         return _ops.gemm(
@@ -109,33 +139,35 @@ def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
     if plan.fuse:
         return _ops.gemm(
             a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
-            epilogue=epi, bias=bias, residual=residual,
+            epilogue=epi, bias=bias, residual=residual, scale=scale,
             **plan.kernel_kwargs(),
         )
     # The plan declined fusion (a measured winner can): identity kernel +
     # the tail as its own pass, exactly what the tuner priced.
     z = _ops.gemm(a, b, trans=trans, out_dtype=jnp.float32,
                   interpret=interpret, **plan.kernel_kwargs())
-    return epi.apply(z, bias=bias, residual=residual).astype(out_dtype)
+    return epi.apply(z, bias=bias, residual=residual,
+                     scale=scale).astype(out_dtype)
 
 
 @functools.lru_cache(maxsize=None)
 def _pallas_fn(trans: str, out_dtype_name: str, interpret: bool,
                epi: Epilogue = IDENTITY):
     """Build the custom-VJP'd Pallas matmul for one (trans, dtype, epilogue)
-    combo.  ``extras`` is the tuple of present epilogue operands (bias
-    and/or residual, in that order) so the custom_vjp signature stays fixed
-    per spec.  The backward rematerializes the pre-epilogue fp32 GEMM (the
-    same remat the ragged SwiGLU backward does), pulls the elementwise
-    tail's cotangents out with ``jax.vjp`` (exact for every activation), and
-    runs the two planned backward GEMMs on the pre-activation cotangent."""
+    combo.  ``extras`` is the tuple of present epilogue operands (bias,
+    residual and/or scale vector, in that order) so the custom_vjp signature
+    stays fixed per spec.  The backward rematerializes the pre-epilogue fp32
+    GEMM (the same remat the ragged SwiGLU backward does), pulls the
+    elementwise tail's cotangents out with ``jax.vjp`` (exact for every
+    activation), and runs the two planned backward GEMMs on the
+    pre-activation cotangent."""
     out_dtype = jnp.dtype(out_dtype_name)
 
     @jax.custom_vjp
     def f(a, b, extras):
-        bias, residual = epi.unpack(extras)
+        bias, residual, scale = epi.unpack(extras)
         return _run_planned(a, b, trans, out_dtype, interpret, epi,
-                            bias, residual)
+                            bias, residual, scale)
 
     def fwd(a, b, extras):
         return f(a, b, extras), (a, b, extras)
@@ -149,8 +181,9 @@ def _pallas_fn(trans: str, out_dtype_name: str, interpret: bool,
             z = run(a, b, trans, jnp.float32)       # remat pre-activation
 
             def epi_fn(z_, *extras_):
-                bias_, residual_ = epi.unpack(extras_)
-                return epi.apply(z_, bias=bias_, residual=residual_)
+                bias_, residual_, scale_ = epi.unpack(extras_)
+                return epi.apply(z_, bias=bias_, residual=residual_,
+                                 scale=scale_)
 
             _, epi_vjp = jax.vjp(epi_fn, z, *extras)
             grads = epi_vjp(g.astype(jnp.float32))
@@ -172,43 +205,171 @@ def _pallas_fn(trans: str, out_dtype_name: str, interpret: bool,
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _quant_fn(qcfg: "_quant.QuantConfig", trans: str, out_dtype_name: str,
+              backend: str, epi: Epilogue = IDENTITY):
+    """Custom-VJP'd quantized dense matmul for one (quant config, dtype,
+    backend, epilogue) combo — the managed ``matmul(..., quant=)`` engine.
+
+    Forward quantizes IN-TRACE (weights per channel, activations per tensor
+    for the dynamic modes — under jit with frozen weights the weight
+    quantization constant-folds) and runs the narrow-/mixed-dtype planned
+    GEMM with the combined dequant vector fused at the accumulator flush
+    (``scale_vec``), then the caller's epilogue tail.  Serving paths that
+    want zero per-call quantization cost pre-quantize with
+    ``core.quant.quantize_weights`` and call ``matmul`` with int8 weights +
+    an ``epilogue.scale_vec`` spec directly.
+
+    Backward is straight-through against the DEQUANTIZED weights: d_a is the
+    planned "nt" product of the (per-channel-rescaled) cotangent against the
+    int8 panel — algebraically dz @ dequant(W).T — and d_b is the
+    full-precision T2 product, so quantization noise perturbs the forward
+    values, never the gradient estimator."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    interpret = backend == "pallas_interpret"
+    qepi = dataclasses.replace(epi, scale_vec=True)
+
+    def quantize_operands(a, b):
+        """(a_run, w_q, w_scale, combined_flush_scale)."""
+        w_q, w_scale = _quant.quantize_weights(b, qcfg)
+        if qcfg.mode == "w4":
+            # Round-trip the nibble packing: the kernel consumes int8, but
+            # values must be exactly what the packed storage format holds.
+            w_q = _quant.unpack_int4(_quant.pack_int4(w_q))
+        if qcfg.weight_only:
+            return a, w_q, w_scale, w_scale
+        a_q, a_scale = _quant.quantize_activations(a, qcfg)
+        return a_q, w_q, w_scale, w_scale * a_scale
+
+    def gemm32(x, y, t):
+        """Planned fp32-out product that tolerates narrow/mixed operands on
+        every backend (the XLA engine upcasts explicitly)."""
+        if backend == "xla":
+            return _REF[t](x.astype(jnp.float32), y.astype(jnp.float32),
+                           jnp.float32)
+        return _run_planned(x, y, t, jnp.float32, interpret)
+
+    @jax.custom_vjp
+    def f(a, b, extras):
+        bias, residual, _ = epi.unpack(extras)
+        a_q, w_q, _w_scale, sv = quantize_operands(a, b)
+        if backend == "xla":
+            m, k, n = _mkn(trans, a.shape, b.shape)
+            in_bytes = jnp.dtype(a_q.dtype).itemsize
+            plan = plan_gemm(m, k, n, in_bytes, out_dtype.itemsize,
+                             epi_ops=qepi.num_ops,
+                             b_bytes=_b_bytes(a_q, w_q))
+            note_plan_use("dense", plan)
+            note_epilogue("dense", True)
+            z = _REF[trans](a_q.astype(jnp.float32),
+                            w_q.astype(jnp.float32), jnp.float32)
+            return qepi.apply(z, bias=bias, residual=residual,
+                              scale=sv).astype(out_dtype)
+        return _run_planned(a_q, w_q, trans, out_dtype, interpret, qepi,
+                            bias, residual, sv)
+
+    def fwd(a, b, extras):
+        return f(a, b, extras), (a, b, extras)
+
+    def bwd(res, g):
+        a, b, extras = res
+        a_q, w_q, w_scale, sv = quantize_operands(a, b)
+        if epi.is_identity:
+            dz, d_extras = g.astype(jnp.float32), ()
+        else:
+            # Remat the pre-tail value the forward produced (dequantized
+            # GEMM output) and pull the tail's cotangents out exactly.
+            z = gemm32(a_q, w_q, trans) * sv.astype(jnp.float32)
+
+            def epi_fn(z_, *extras_):
+                bias_, residual_, _ = epi.unpack(extras_)
+                return epi.apply(z_, bias=bias_, residual=residual_)
+
+            _, epi_vjp = jax.vjp(epi_fn, z, *extras)
+            grads = epi_vjp(g.astype(jnp.float32))
+            dz = grads[0]
+            d_extras = tuple(d.astype(x.dtype)
+                             for d, x in zip(grads[1:], extras))
+        # dz @ dequant(W).T == (dz * w_scale) @ W_q.T — the per-channel
+        # scale folds into the cotangent's columns, so the backward GEMM
+        # streams the narrow panel too.
+        da = gemm32((dz * w_scale.astype(jnp.float32)).astype(a.dtype),
+                    w_q, "nt").astype(a.dtype)
+        db = gemm32(a, dz.astype(a.dtype), "tn").astype(b.dtype)
+        return da, db, d_extras
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 def matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
            out_dtype=None, backend: str | None = None,
            epilogue: Epilogue | None = None,
            bias: jax.Array | None = None,
-           residual: jax.Array | None = None) -> jax.Array:
+           residual: jax.Array | None = None,
+           scale: jax.Array | None = None,
+           quant: "_quant.QuantConfig | str | None" = None) -> jax.Array:
     """2-D GEMM through the ftIMM planner. fp32 accumulation always.
 
     ``epilogue`` fuses the elementwise tail (bias add / activation /
     residual add / scale, ``kernels.ftimm.Epilogue``) into the accumulator
     flush on the Pallas path — and into the same jit on the XLA fallback, so
     CPU/TPU stay comparable — instead of separate XLA passes over the stored
-    output.  ``bias`` is (N,), ``residual`` (M, N); both differentiable."""
+    output.  ``bias`` is (N,), ``residual`` (M, N); both differentiable.
+
+    ``scale`` is the (N,)-wide fp32 dequant vector of a
+    ``epilogue.scale_vec`` spec — the manual spelling for callers holding
+    PRE-quantized operands (int8/fp8 ``a``/``b`` from
+    ``core.quant.quantize_weights``): the raw (integer) accumulator is
+    multiplied by it at the flush.  ``quant`` is the managed spelling: a
+    ``core.quant.QuantConfig`` (or mode string — "w8" / "w4" / "int8" /
+    "fp8_e4m3" / "fp8_e5m2") quantizing full-precision operands in-trace and
+    wrapping the whole thing in a straight-through custom VJP (backward runs
+    bf16/fp32 against the dequantized weights)."""
     epi = IDENTITY if epilogue is None else epilogue
-    _check_epi(epi, bias, residual)
     out_dtype = jnp.dtype(out_dtype or a.dtype)
     backend = backend or _backend()
+    if backend not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown gemm backend: {backend}")
+    qcfg = _quant.resolve(quant)
+    if not qcfg.is_noop:
+        if trans != "nn":
+            raise ValueError("quantized matmul is defined for trans='nn' "
+                             f"only (got trans={trans!r})")
+        if epi.scale_vec or scale is not None:
+            raise ValueError(
+                "quant= derives its own dequant scale; for manual control "
+                "pass pre-quantized operands with epilogue.scale_vec "
+                "instead")
+        _check_epi(epi, bias, residual)
+        _check_vectors("dense", _mkn(trans, a.shape, b.shape), epi, bias,
+                       None)
+        extras = tuple(x for x in (bias, residual) if x is not None)
+        return _quant_fn(qcfg, trans, out_dtype.name, backend,
+                         epi)(a, b, extras)
+    _check_epi(epi, bias, residual, scale)
+    _check_vectors("dense", _mkn(trans, a.shape, b.shape), epi, bias, scale)
     if backend == "xla":
         # Plan even though XLA ignores the blocks: keeps the plan cache an
         # accurate census of the workload's shapes (as the batched/ragged
         # paths already do) and the mode telemetry complete.
         m, k, n = _mkn(trans, a.shape, b.shape)
         in_bytes = jnp.dtype(a.dtype).itemsize
+        bb = _b_bytes(a, b)
         plan = plan_gemm(m, k, n, in_bytes, out_dtype.itemsize,
-                         epi_ops=epi.num_ops)
+                         epi_ops=epi.num_ops, b_bytes=bb)
         _verify("dense", (m, k, n), plan, in_bytes, out_dtype.itemsize,
-                epi=epi, trans=trans)
+                epi=epi, trans=trans, b_bytes=bb)
         note_plan_use("dense", plan)
         if epi.is_identity:
             return _REF[trans](a, b, out_dtype)
         note_epilogue("dense", True)    # one jit: XLA fuses the tail
         z = _REF[trans](a, b, jnp.float32)
-        return epi.apply(z, bias=bias, residual=residual).astype(out_dtype)
-    if backend in ("pallas", "pallas_interpret"):
-        extras = tuple(x for x in (bias, residual) if x is not None)
-        return _pallas_fn(trans, out_dtype.name,
-                          backend == "pallas_interpret", epi)(a, b, extras)
-    raise ValueError(f"unknown gemm backend: {backend}")
+        return epi.apply(z, bias=bias, residual=residual,
+                         scale=scale).astype(out_dtype)
+    extras = tuple(x for x in (bias, residual, scale) if x is not None)
+    return _pallas_fn(trans, out_dtype.name,
+                      backend == "pallas_interpret", epi)(a, b, extras)
 
 
 def _ref_batched(a: jax.Array, b: jax.Array, trans: str,
@@ -305,17 +466,88 @@ def _batched_fn(trans: str, out_dtype_name: str, backend: str):
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _batched_bias_fn(out_dtype_name: str, backend: str):
+    """Custom-VJP'd batched matmul ("nn" only) with the bias epilogue: bias
+    is shared (N,) or per-group (G, N), added at each group's accumulator
+    flush.  d_bias sums the cotangent over the fused dims (batch + rows for
+    shared, rows for per-group)."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    epi = Epilogue(bias=True)
+
+    @jax.custom_vjp
+    def f(a, b, bias):
+        g, m, k, n, shared = _batched_mkns("nn", a, b)
+        in_bytes = jnp.dtype(a.dtype).itemsize
+        plan = plan_batched_gemm(g, m, k, n, in_bytes, out_dtype.itemsize,
+                                 shared, epi_ops=epi.num_ops)
+        _verify("batched", (g, m, k, n), plan, in_bytes, out_dtype.itemsize,
+                epi=epi)
+        note_plan_use("batched", plan)
+        if backend == "xla":
+            note_epilogue("batched", True)  # one jit: XLA fuses the tail
+            z = _ref_batched(a, b, "nn", jnp.float32)
+            bb = bias if bias.ndim == 1 else bias[:, None, :]
+            return epi.apply(z, bias=bb).astype(out_dtype)
+        note_epilogue("batched", plan.fuse)
+        if plan.fuse:
+            return _ops.batched_gemm(
+                a, b, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                dim_order=plan.dim_order, trans="nn", out_dtype=out_dtype,
+                edge=plan.edge, interpret=(backend == "pallas_interpret"),
+                epilogue=epi, bias=bias)
+        z = _run_planned_batched(a, b, "nn", jnp.float32, backend)
+        bb = bias if bias.ndim == 1 else bias[:, None, :]
+        return epi.apply(z, bias=bb).astype(out_dtype)
+
+    def fwd(a, b, bias):
+        return f(a, b, bias), (a, b, bias)
+
+    def bwd(res, g):
+        a, b, bias = res
+        run = lambda x, y, t, dt: _run_planned_batched(  # noqa: E731
+            x, y, t, dt, backend)
+        da = run(g, b, "nt", a.dtype)
+        if a.ndim == 2:
+            da = jnp.sum(da, axis=0).astype(a.dtype)
+        if b.ndim == 2:
+            # Shared weight: ONE flat T2 GEMM over all G*M rows.
+            db = matmul(a.reshape(-1, a.shape[-1]), g.reshape(-1, g.shape[-1]),
+                        trans="tn", out_dtype=b.dtype, backend=backend)
+        else:
+            db = run(a, g, "tn", b.dtype)
+        g32 = g.astype(jnp.float32)
+        dbias = (g32.sum(axis=(0, 1)) if bias.ndim == 1
+                 else g32.sum(axis=1)).astype(bias.dtype)
+        return da, db, dbias
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 def batched_matmul(a: jax.Array, b: jax.Array, *, trans: str = "nn",
-                   out_dtype=None, backend: str | None = None) -> jax.Array:
+                   out_dtype=None, backend: str | None = None,
+                   bias: jax.Array | None = None) -> jax.Array:
     """Batched GEMM (G, M, K) @ (G, K, N) -> (G, M, N) through the ftIMM
     planner; fp32 accumulation always.  Either operand may be 2-D (shared
     across the batch).  The attention BMMs flatten their (batch, kv-head)
-    dims into G and route here instead of raw einsum."""
+    dims into G and route here instead of raw einsum.
+
+    ``bias`` — (N,) shared or (G, N) per-group, added at the accumulator
+    flush (trans="nn" only); fully differentiable."""
     assert a.ndim == 3 or b.ndim == 3, (a.shape, b.shape)
     out_dtype = jnp.dtype(out_dtype or a.dtype)
     backend = backend or _backend()
     if backend not in ("xla", "pallas", "pallas_interpret"):
         raise ValueError(f"unknown gemm backend: {backend}")
+    if bias is not None:
+        if trans != "nn":
+            raise ValueError("batched bias epilogue is defined for "
+                             f"trans='nn' only (got trans={trans!r})")
+        g, m, k, n, _ = _batched_mkns(trans, a, b)
+        _check_vectors("batched", (g, m, k, n), Epilogue(bias=True), bias,
+                       None)
+        return _batched_bias_fn(out_dtype.name, backend)(a, b, bias)
     return _batched_fn(trans, out_dtype.name, backend)(a, b)
 
 
@@ -497,27 +729,62 @@ def _xla_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
               preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def _row_groups(offsets: jax.Array, t: int) -> jax.Array:
+    """Owning group id per flat row: rows are sorted by group, so row r
+    belongs to the group whose offset window contains it."""
+    return jnp.searchsorted(offsets[1:], jnp.arange(t, dtype=offsets.dtype),
+                            side="right")
+
+
+def _expand_rows(v: jax.Array, offsets: jax.Array, t: int) -> jax.Array:
+    """Broadcast a per-expert (G, N) flush vector to (T, N) rows — the XLA
+    engine's spelling of the kernels' visit-list-indexed vector blocks."""
+    return jnp.take(v, _row_groups(offsets, t), axis=0)
+
+
 def _run_planned_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
-                        trans: str, out_dtype, backend: str) -> jax.Array:
+                        trans: str, out_dtype, backend: str,
+                        epi: Epilogue = IDENTITY, bias=None,
+                        scale=None) -> jax.Array:
     """Plan one ragged grouped GEMM off its distribution signature and run it.
 
     As with the batched path, the planner runs on EVERY backend (trace-time
     work; keeps the plan cache an accurate census of the irregular shapes);
-    only the execution engine differs."""
+    only the execution engine differs.  ``bias``/``scale`` are per-expert
+    (G, N) flush vectors (the per-expert bias epilogue and the quantized
+    paths' dequant), selected per tile by the visit list's group id on the
+    Pallas engine and row-expanded on the XLA engine."""
     g = w.shape[0]
     k, n = (w.shape[1], w.shape[2]) if trans == "nn" else \
         (w.shape[2], w.shape[1])
     in_bytes = jnp.dtype(x.dtype).itemsize
     out_bytes = jnp.dtype(out_dtype).itemsize
-    plan = plan_ragged_gemm(g, x.shape[0], k, n, in_bytes, out_bytes)
+    bb = _b_bytes(x, w)
+    plan = plan_ragged_gemm(g, x.shape[0], k, n, in_bytes, out_bytes,
+                            b_bytes=bb)
     _verify("ragged", (g, x.shape[0], k, n), plan, in_bytes, out_bytes,
-            trans=trans)
+            trans=trans, epi=None if epi.is_identity else epi, b_bytes=bb)
     note_plan_use("ragged", plan)
+    if not epi.is_identity:
+        note_epilogue("ragged", True)
     if backend == "xla":
-        return _xla_ragged(x, w, offsets, trans, out_dtype)
+        if epi.is_identity:
+            return _xla_ragged(x, w, offsets, trans, out_dtype)
+        # ragged_dot has no narrow-int path on the pinned jax: upcast the
+        # quantized operand(s); the values are identical by construction.
+        xx = x.astype(jnp.float32) if jnp.dtype(x.dtype).itemsize == 1 else x
+        wx = w.astype(jnp.float32) if jnp.dtype(w.dtype).itemsize == 1 else w
+        z = _xla_ragged(xx, wx, offsets, trans, jnp.float32)
+        t = x.shape[0]
+        return epi.apply(
+            z,
+            bias=None if bias is None else _expand_rows(bias, offsets, t),
+            scale=None if scale is None else _expand_rows(scale, offsets, t),
+        ).astype(out_dtype)
     return _ops.ragged_gemm(
         x, w, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk, trans=trans,
-        out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+        out_dtype=out_dtype, interpret=(backend == "pallas_interpret"),
+        epilogue=None if epi.is_identity else epi, bias=bias, scale=scale)
 
 
 def _run_planned_ragged_dw(x: jax.Array, dy: jax.Array, offsets: jax.Array,
@@ -569,20 +836,120 @@ def _ragged_fn(out_dtype_name: str, backend: str):
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _ragged_bias_fn(out_dtype_name: str, backend: str):
+    """Custom-VJP'd ragged matmul with the per-expert bias epilogue: bias is
+    (G, N), its row selected per tile by the visit list's group id and added
+    at the accumulator flush (RMW-safe: the masked boundary store only lands
+    the visiting group's rows).  d_bias is the per-group row-sum of the
+    cotangent — a segment sum over each row's owning group."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    epi = Epilogue(bias=True)
+
+    @jax.custom_vjp
+    def f(x, w, offsets, bias):
+        return _run_planned_ragged(x, w, offsets, "nn", out_dtype, backend,
+                                   epi=epi, bias=bias)
+
+    def fwd(x, w, offsets, bias):
+        return f(x, w, offsets, bias), (x, w, offsets, bias)
+
+    def bwd(res, g):
+        x, w, offsets, bias = res
+        dx = _run_planned_ragged(g, w, offsets, "nt", x.dtype, backend)
+        dw = _run_planned_ragged_dw(x, g, offsets, w.dtype, backend)
+        gid = _row_groups(offsets, g.shape[0])
+        dbias = jnp.zeros((bias.shape[0], g.shape[1]), jnp.float32) \
+            .at[gid].add(g.astype(jnp.float32)).astype(bias.dtype)
+        return dx, dw, _float0_zeros(offsets), dbias
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _quant_ragged_fn(qcfg: "_quant.QuantConfig", out_dtype_name: str,
+                     backend: str):
+    """Custom-VJP'd QUANTIZED ragged matmul — int8/int4/fp8 expert panels
+    with per-expert (G, N) dequant scales fused at the accumulator flush,
+    so the zero-drop MoE dispatch can run int8 experts end to end.
+
+    Forward quantizes the per-group panels per channel in-trace (frozen
+    expert weights constant-fold under jit); backward is straight-through
+    against the DEQUANTIZED panels: dx is the planned "nt" ragged product
+    over ``dequantize(w_q)`` (bf16/fp32 backward), dw the full-precision
+    ragged-K T2."""
+    out_dtype = jnp.dtype(out_dtype_name)
+    qepi = Epilogue(scale_vec=True)
+
+    def quantize_w(w):
+        w_q, w_scale = _quant.quantize_weights(w, qcfg)     # scale (G, N)
+        if qcfg.mode == "w4":
+            w_q = _quant.unpack_int4(_quant.pack_int4(w_q))
+        return w_q, w_scale
+
+    @jax.custom_vjp
+    def f(x, w, offsets):
+        w_q, w_scale = quantize_w(w)
+        if qcfg.weight_only:
+            x_run, sv = x, w_scale
+        else:
+            x_q, a_scale = _quant.quantize_activations(x, qcfg)
+            x_run, sv = x_q, w_scale * a_scale
+        return _run_planned_ragged(x_run, w_q, offsets, "nn", out_dtype,
+                                   backend, epi=qepi, scale=sv)
+
+    def fwd(x, w, offsets):
+        return f(x, w, offsets), (x, w, offsets)
+
+    def bwd(res, g):
+        x, w, offsets = res
+        w_q, w_scale = quantize_w(w)
+        w_dq = _quant.dequantize(w_q, w_scale[:, None, :], dtype=x.dtype)
+        dx = _run_planned_ragged(g, w_dq, offsets, "nt", x.dtype, backend)
+        dw = _run_planned_ragged_dw(x, g, offsets, w.dtype, backend)
+        return dx, dw, _float0_zeros(offsets)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 def ragged_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array, *,
-                  out_dtype=None, backend: str | None = None) -> jax.Array:
+                  out_dtype=None, backend: str | None = None,
+                  bias: jax.Array | None = None,
+                  quant: "_quant.QuantConfig | str | None" = None
+                  ) -> jax.Array:
     """Ragged grouped GEMM through the ftIMM planner; fp32 accumulation.
 
     ``x`` is (T, D) flat rows sorted so each group's rows are contiguous;
     ``group_offsets`` (G+1,) prefix sums with offsets[0] == 0 and
     offsets[G] == T (every row owned — capacity-free, nothing dropped);
     ``w`` is (G, D, F) per-group panels.  Returns (T, F).  The capacity-free
-    MoE expert projections route here instead of the padded grouped path."""
+    MoE expert projections route here instead of the padded grouped path.
+
+    ``bias`` (G, F) adds a per-expert bias at the accumulator flush (fully
+    differentiable — d_bias segment-sums the cotangent per expert).
+    ``quant`` quantizes the expert panels in-trace (per-expert per-channel
+    scales) and runs the narrow-dtype kernel with the dequant fused at the
+    flush; straight-through backward against the dequantized panels."""
     assert x.ndim == 2 and w.ndim == 3, (x.shape, w.shape)
     out_dtype = jnp.dtype(out_dtype or x.dtype)
     backend = backend or _backend()
     if backend not in ("xla", "pallas", "pallas_interpret"):
         raise ValueError(f"unknown gemm backend: {backend}")
+    qcfg = _quant.resolve(quant)
+    if not qcfg.is_noop:
+        if bias is not None:
+            raise ValueError("quantized ragged matmul does not take a bias "
+                             "operand; apply it as a separate epilogue")
+        return _quant_ragged_fn(qcfg, out_dtype.name,
+                                backend)(x, w, group_offsets)
+    if bias is not None:
+        _check_vectors("ragged", (w.shape[0], x.shape[0], w.shape[1],
+                                  w.shape[2]), Epilogue(bias=True), bias,
+                       None)
+        return _ragged_bias_fn(out_dtype.name,
+                               backend)(x, w, group_offsets, bias)
     return _ragged_fn(out_dtype.name, backend)(x, w, group_offsets)
 
 
@@ -659,8 +1026,12 @@ def clear_dispatch_caches() -> None:
     planners at trace time, and stale jit entries keyed on old blocks are
     unreachable once the planners re-decide)."""
     _pallas_fn.cache_clear()
+    _quant_fn.cache_clear()
     _batched_fn.cache_clear()
+    _batched_bias_fn.cache_clear()
     _ragged_fn.cache_clear()
+    _ragged_bias_fn.cache_clear()
+    _quant_ragged_fn.cache_clear()
     _ragged_swiglu_fn.cache_clear()
     _swiglu_fn.cache_clear()
     _grouped_swiglu_fn.cache_clear()
@@ -671,18 +1042,21 @@ def project(x: jax.Array, w: jax.Array, *, out_dtype=None,
             backend: str | None = None,
             epilogue: Epilogue | None = None,
             bias: jax.Array | None = None,
-            residual: jax.Array | None = None) -> jax.Array:
+            residual: jax.Array | None = None,
+            quant: "_quant.QuantConfig | str | None" = None) -> jax.Array:
     """(..., D) @ (D, N) -> (..., N): flattens leading dims into the paper's
     M dimension (tokens — typically the tall axis of T1/T3).  ``epilogue``
     fuses the layer's elementwise tail into the projection; ``residual``
-    (..., N) is flattened alongside x, ``bias`` is (N,)."""
+    (..., N) is flattened alongside x, ``bias`` is (N,).  ``quant`` routes
+    through the managed quantized engine (see ``matmul``)."""
     lead = x.shape[:-1]
     m = 1
     for s in lead:
         m *= s
     res = None if residual is None else residual.reshape(m, w.shape[-1])
     y = matmul(x.reshape(m, x.shape[-1]), w, out_dtype=out_dtype,
-               backend=backend, epilogue=epilogue, bias=bias, residual=res)
+               backend=backend, epilogue=epilogue, bias=bias, residual=res,
+               quant=quant)
     return y.reshape(*lead, w.shape[-1])
 
 

@@ -173,10 +173,12 @@ def dist_matmul(
             out_specs=P(axis, None),
         )
         def f(a_l, b_l, *extras_l):
-            bias_l, res_l = epi.unpack(extras_l)
+            bias_l, res_l, scale_l = epi.unpack(extras_l)
             bias_l = None if bias_l is None else bias_l.reshape(-1)
+            scale_l = None if scale_l is None else scale_l.reshape(-1)
             return matmul(a_l, b_l, out_dtype=out_dtype, backend=backend,
-                          epilogue=epilogue, bias=bias_l, residual=res_l)
+                          epilogue=epilogue, bias=bias_l, residual=res_l,
+                          scale=scale_l)
 
         out = f(*operands)
         return out[:m] if pad_m else out
@@ -221,9 +223,11 @@ def dist_matmul(
                 full = jax.lax.psum(partial_c, axis)
             if epi.is_identity:
                 return full
-            bias_l, res_l = epi.unpack(extras_l)
+            bias_l, res_l, scale_l = epi.unpack(extras_l)
             bias_l = None if bias_l is None else bias_l.reshape(-1)
-            return epi.apply(full, bias=bias_l, residual=res_l)
+            scale_l = None if scale_l is None else scale_l.reshape(-1)
+            return epi.apply(full, bias=bias_l, residual=res_l,
+                             scale=scale_l)
 
         out = f(*operands).astype(out_dtype)
         return out[:, :n] if pad_n else out

@@ -75,24 +75,36 @@ def shape_key(family: str, dims: tuple, in_bytes: int, out_bytes: int,
 
 @dataclass
 class Calibration:
-    """Fitted effective-hardware constants (fractions of the spec's peaks)."""
+    """Fitted effective-hardware constants (fractions of the spec's peaks).
+
+    ``flops_frac_int8`` is the separately-fitted achievable fraction of the
+    narrow-dtype (int8) peak — the MXU's int8 path saturates differently
+    from its float path, so one shared fraction would misprice whichever
+    family was not measured.  ``None`` means "not fitted": the planners
+    fall back to ``flops_frac`` for int8 shapes too."""
     flops_frac: float = 1.0     # achievable fraction of peak FLOP/s
     bw_frac: float = 1.0        # achievable fraction of peak HBM bandwidth
     ici_frac: float = 1.0       # achievable fraction of peak ICI bandwidth
+    flops_frac_int8: float | None = None    # int8-peak fraction (optional)
     n_samples: int = 0
     engine: str = ""
     base_spec: str = ""
 
     def to_json(self) -> dict:
-        return {"flops_frac": self.flops_frac, "bw_frac": self.bw_frac,
-                "ici_frac": self.ici_frac, "n_samples": self.n_samples,
-                "engine": self.engine, "base_spec": self.base_spec}
+        d = {"flops_frac": self.flops_frac, "bw_frac": self.bw_frac,
+             "ici_frac": self.ici_frac, "n_samples": self.n_samples,
+             "engine": self.engine, "base_spec": self.base_spec}
+        if self.flops_frac_int8 is not None:
+            d["flops_frac_int8"] = self.flops_frac_int8
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "Calibration":
+        int8 = d.get("flops_frac_int8")
         return cls(flops_frac=float(d["flops_frac"]),
                    bw_frac=float(d["bw_frac"]),
                    ici_frac=float(d.get("ici_frac", 1.0)),
+                   flops_frac_int8=None if int8 is None else float(int8),
                    n_samples=int(d.get("n_samples", 0)),
                    engine=str(d.get("engine", "")),
                    base_spec=str(d.get("base_spec", "")))

@@ -185,7 +185,8 @@ def effective_spec(spec: TpuSpec) -> TpuSpec:
     if cal is None:
         return spec
     return spec.calibrated(cal.flops_frac, cal.bw_frac,
-                           getattr(cal, "ici_frac", 1.0))
+                           getattr(cal, "ici_frac", 1.0),
+                           int8_frac=getattr(cal, "flops_frac_int8", None))
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +211,8 @@ def _fuse_variants(epi_ops: int) -> tuple[bool, ...]:
 def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
                     out_bytes: int = 4,
                     spec: TpuSpec = TPU_V5E,
-                    epi_ops: int = 0, *, verify: bool = True
+                    epi_ops: int = 0, *, verify: bool = True,
+                    b_bytes: int | None = None
                     ) -> list[GemmPlan]:
     """Every VMEM-feasible candidate tiling for the dense GEMM, scored by
     the CMR model.  The candidate space is (blocking x dim order x edge
@@ -240,7 +242,7 @@ def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
                                          dim_order=order, in_bytes=in_bytes,
                                          out_bytes=out_bytes, edge=edge,
                                          epi_ops=epi_ops, epi_fused=fuse,
-                                         spec=spec)
+                                         b_bytes=b_bytes, spec=spec)
                             if e.vmem_bytes > spec.vmem_budget:
                                 continue
                             cands.append(GemmPlan(
@@ -250,7 +252,8 @@ def gemm_candidates(m: int, k: int, n: int, in_bytes: int = 4,
     if not cands:   # degenerate: nothing fit; shrink to minimum tiles
         bm, bn, bk = min(128, ceil_to(m, sublane)), 128, 128
         e = estimate(m, k, n, bm=bm, bn=bn, bk=bk, epi_ops=epi_ops,
-                     in_bytes=in_bytes, out_bytes=out_bytes, spec=spec)
+                     in_bytes=in_bytes, out_bytes=out_bytes, b_bytes=b_bytes,
+                     spec=spec)
         cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
     return cands
 
@@ -319,7 +322,8 @@ def _ragged_tile_candidates(total: int, g: int, sublane: int) -> list[int]:
 
 def ragged_candidates(g: int, total: int, k: int, n: int, in_bytes: int = 4,
                       out_bytes: int = 4, ragged: str = "m",
-                      spec: TpuSpec = TPU_V5E, *, verify: bool = True
+                      spec: TpuSpec = TPU_V5E, *, verify: bool = True,
+                      b_bytes: int | None = None
                       ) -> list[GemmPlan]:
     """Candidate tilings for the ragged grouped GEMM: the ragged dimension's
     tile list comes from the *distribution* (mean group size), the dense
@@ -350,7 +354,8 @@ def ragged_candidates(g: int, total: int, k: int, n: int, in_bytes: int = 4,
                     continue
                 e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
                                     ragged=ragged, in_bytes=in_bytes,
-                                    out_bytes=out_bytes, spec=spec)
+                                    out_bytes=out_bytes, b_bytes=b_bytes,
+                                    spec=spec)
                 if e.vmem_bytes > spec.vmem_budget:
                     continue
                 cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls,
@@ -359,7 +364,7 @@ def ragged_candidates(g: int, total: int, k: int, n: int, in_bytes: int = 4,
         bm, bn, bk = min(128, ceil_to(max(total, 1), sublane)), 128, 128
         e = estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
                             ragged=ragged, in_bytes=in_bytes,
-                            out_bytes=out_bytes, spec=spec)
+                            out_bytes=out_bytes, b_bytes=b_bytes, spec=spec)
         cands.append(GemmPlan(bm=bm, bn=bn, bk=bk, gemm_class=cls, est=e))
     return cands
 
@@ -439,16 +444,29 @@ def _plan_from_record(rec: dict, estimator, cls: GemmClass,
                     fuse=fuse)
 
 
-def _cached_dense(m, k, n, in_bytes, out_bytes, spec) -> GemmPlan | None:
+def _dtype_extra(b_bytes: int | None, base: str = "") -> str:
+    """The plan-store key fragment for a mixed-dtype B operand: ``"bb1"``
+    joined onto any family variant with "+".  Homogeneous calls keep their
+    legacy key (no fragment) so existing stores stay addressable."""
+    if b_bytes is None:
+        return base
+    frag = f"bb{int(b_bytes)}"
+    return f"{base}+{frag}" if base else frag
+
+
+def _cached_dense(m, k, n, in_bytes, out_bytes, spec,
+                  b_bytes=None) -> GemmPlan | None:
     rec = plan_store.get_store().lookup(
-        plan_store.shape_key("dense", (m, k, n), in_bytes, out_bytes))
+        plan_store.shape_key("dense", (m, k, n), in_bytes, out_bytes,
+                             extra=_dtype_extra(b_bytes)))
     if rec is None:
         return None
 
     def est(bm, bn, bk, order, edge="masked"):
         return estimate(m, k, n, bm=bm, bn=bn, bk=bk, nsplit=1,
                         dim_order=order, in_bytes=in_bytes,
-                        out_bytes=out_bytes, edge=edge, spec=spec)
+                        out_bytes=out_bytes, edge=edge, b_bytes=b_bytes,
+                        spec=spec)
 
     return _plan_from_record(rec, est, classify(m, k, n), spec)
 
@@ -471,10 +489,11 @@ def _cached_batched(g, m, k, n, in_bytes, out_bytes, shared,
 
 
 def _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged,
-                   spec) -> GemmPlan | None:
+                   spec, b_bytes=None) -> GemmPlan | None:
     rec = plan_store.get_store().lookup(
         plan_store.shape_key("ragged", (g, total, k, n), in_bytes, out_bytes,
-                             extra=f"ragged:{ragged}"))
+                             extra=_dtype_extra(b_bytes,
+                                                f"ragged:{ragged}")))
     if rec is None:
         return None
     mean = max(total // max(g, 1), 1)
@@ -485,7 +504,8 @@ def _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged,
             return None
         return estimate_ragged(g, total, k, n, bm=bm, bn=bn, bk=bk,
                                ragged=ragged, in_bytes=in_bytes,
-                               out_bytes=out_bytes, spec=spec)
+                               out_bytes=out_bytes, b_bytes=b_bytes,
+                               spec=spec)
 
     return _plan_from_record(rec, est, cls, spec)
 
@@ -760,6 +780,7 @@ def plan_gemm(
     num_shards: int = 1,
     axis: str | None = None,
     epi_ops: int = 0,
+    b_bytes: int | None = None,
 ) -> GemmPlan:
     """Pick the best tiling for C(M,N) += A(M,K) B(K,N) — and, when
     ``num_shards > 1``, the cross-chip strategy too: the returned plan is the
@@ -772,7 +793,13 @@ def plan_gemm(
     (``Epilogue.num_ops``): the candidate space then forks on fusing it into
     the accumulator flush vs running it as separate passes, and the winner's
     ``fuse`` records the decision (alongside ``edge``, the masked-vs-padded
-    remainder-tile policy)."""
+    remainder-tile policy).
+
+    ``b_bytes`` is the dtype axis of the plan key: the B (weight) operand's
+    element width when it differs from A's — the weight-only quantized GEMMs
+    (int8/int4-unpacked weights against bf16/fp32 activations) — so traffic,
+    VMEM and the achievable peak are priced per dtype combination and cached
+    winners never leak across widths (the key carries a ``bb{n}`` extra)."""
     spec = effective_spec(spec)
     if num_shards > 1:
         opts = dense_placement_options(m, k, n, num_shards, in_bytes,
@@ -784,11 +811,11 @@ def plan_gemm(
         scored = [(o, replace(o.plan_local(in_bytes, out_bytes, spec),
                               placement=o.placement)) for o in opts]
         return _select_placed(scored)
-    cached = _cached_dense(m, k, n, in_bytes, out_bytes, spec)
+    cached = _cached_dense(m, k, n, in_bytes, out_bytes, spec, b_bytes)
     if cached is not None:
         return cached
     return argmin_plan(gemm_candidates(m, k, n, in_bytes, out_bytes, spec,
-                                       epi_ops))
+                                       epi_ops, b_bytes=b_bytes))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -874,6 +901,7 @@ def plan_ragged_gemm(
     *,
     num_shards: int = 1,
     axis: str | None = None,
+    b_bytes: int | None = None,
 ) -> GemmPlan:
     """Pick the best tiling for a ragged grouped GEMM over G groups.
 
@@ -910,11 +938,12 @@ def plan_ragged_gemm(
         scored = [(o, replace(o.plan_local(in_bytes, out_bytes, spec),
                               placement=o.placement)) for o in opts]
         return _select_placed(scored)
-    cached = _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged, spec)
+    cached = _cached_ragged(g, total, k, n, in_bytes, out_bytes, ragged, spec,
+                            b_bytes)
     if cached is not None:
         return cached
     return argmin_plan(ragged_candidates(g, total, k, n, in_bytes, out_bytes,
-                                         ragged, spec))
+                                         ragged, spec, b_bytes=b_bytes))
 
 
 @dataclass(frozen=True)

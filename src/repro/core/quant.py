@@ -1,0 +1,237 @@
+"""Shared quantization helpers: ONE rounding rule for every consumer.
+
+The symmetric scale fit, clip-round quantizer and error-feedback residual
+were born in ``optim/compression.py`` (error-feedback int8 over ICI); the
+low-precision GEMM family reuses exactly the same arithmetic for kernel
+quantization — per-tensor activation scales, per-channel (and per-expert)
+weight scales, int4 nibble packing for weight storage, and fp8 casts — so
+the ICI compressor and the kernels can never disagree on a rounding rule.
+
+Conventions:
+
+  * Scales are always fp32 and always *symmetric* (no zero point): the
+    quantized value decodes as ``q * scale``.
+  * Per-channel weight scales are fit over the contraction axis and kept as
+    an (N,)-wide vector (or (G, N) per expert) — the shape the kernels'
+    scale-vector epilogue operand expects.  Per-tensor scales are broadcast
+    to the same vector shape so every consumer handles ONE operand layout.
+  * The analytic error bound (``dot_error_bound``) is what the conformance
+    tests assert: round-to-nearest puts per-element error at ``scale / 2``
+    (int) or ``eps * |x|`` (fp8), and a K-long dot accumulates at most K of
+    the cross terms.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_LEVELS = 127
+INT4_LEVELS = 7
+
+# Finite-max and round-off epsilon per fp8 format: e4m3 has a 3-bit
+# mantissa (max 448), e5m2 a 2-bit mantissa (max 57344).
+FP8_FORMATS: dict[str, tuple[Any, float, float]] = {
+    "e4m3": (jnp.float8_e4m3fn, 448.0, 2.0 ** -3),
+    "e5m2": (jnp.float8_e5m2, 57344.0, 2.0 ** -2),
+}
+
+MODES = ("none", "w8", "w4", "int8", "fp8_e4m3", "fp8_e5m2")
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Per-layer quantization policy (hashable: keys jit static args and the
+    dispatch function caches, like ``Epilogue``).
+
+    ``mode``:
+      * ``"none"``     — full-precision GEMM (the config is a no-op).
+      * ``"w8"``       — weight-only int8: weights quantized per channel,
+        activations stay bf16/fp32, dequant (the scale vector) fuses into
+        the accumulator flush.  The memory-bound decode case — weight bytes
+        halve vs bf16.
+      * ``"w4"``       — weight-only int4: same math at 7 levels, weights
+        *stored* nibble-packed (two per int8 byte — a quarter of the bf16
+        bytes at rest / on the wire), unpacked to int8 ahead of the kernel.
+      * ``"int8"``     — dynamic full int8: per-tensor activation scale x
+        per-channel weight scale, int8 x int8 -> int32 accumulate, one
+        combined (N,) scale at the flush.
+      * ``"fp8_e4m3"`` / ``"fp8_e5m2"`` — both operands cast to fp8 with
+        per-tensor scales, accumulated in fp32.
+    """
+    mode: str = "none"
+    per_channel: bool = True
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"unknown quant mode: {self.mode!r} "
+                             f"(expected one of {MODES})")
+
+    @property
+    def is_noop(self) -> bool:
+        return self.mode == "none"
+
+    @property
+    def weight_only(self) -> bool:
+        return self.mode in ("w8", "w4")
+
+    @property
+    def weight_bytes(self) -> int:
+        """Kernel-visible weight element width (int4 unpacks to int8 before
+        the kernel, so the *compute* width is 1; storage is 0.5)."""
+        return 2 if self.mode == "none" else 1
+
+    @property
+    def levels(self) -> int:
+        return INT4_LEVELS if self.mode == "w4" else INT8_LEVELS
+
+
+def resolve(quant: "QuantConfig | str | None") -> QuantConfig:
+    """Accept a ``QuantConfig``, a mode string, or None (-> no-op)."""
+    if quant is None:
+        return QuantConfig()
+    if isinstance(quant, str):
+        return QuantConfig(mode=quant)
+    return quant
+
+
+# ---------------------------------------------------------------------------
+# The one rounding rule (shared with optim/compression.py)
+# ---------------------------------------------------------------------------
+
+def scale_from_absmax(absmax: jax.Array, levels: int = INT8_LEVELS,
+                      eps: float = 1e-30) -> jax.Array:
+    """Symmetric scale covering ``[-absmax, absmax]`` in ``levels`` steps."""
+    return jnp.maximum(absmax.astype(jnp.float32), eps) / levels
+
+
+def symmetric_scale(x: jax.Array, levels: int = INT8_LEVELS,
+                    axis: Any = None) -> jax.Array:
+    """Fit the symmetric scale from ``max |x|`` — per tensor (``axis=None``,
+    scalar) or reduced over ``axis`` (per channel / per expert)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    return scale_from_absmax(amax, levels)
+
+
+def quantize(x: jax.Array, scale: jax.Array, levels: int = INT8_LEVELS,
+             dtype: Any = jnp.int8) -> jax.Array:
+    """Clip-round symmetric quantization: ``clip(round(x / scale))``."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -levels, levels)
+    return q.astype(dtype)
+
+
+def dequantize(q: jax.Array, scale: jax.Array,
+               dtype: Any = jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def error_residual(x: jax.Array, q: jax.Array,
+                   scale: jax.Array) -> jax.Array:
+    """The error-feedback residual: what quantization dropped this step,
+    carried into the next step's input (EF-SGD/EF21)."""
+    return x.astype(jnp.float32) - dequantize(q, scale)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (weight storage / wire format)
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int8 values in [-7, 7] two-per-byte along the last axis (which
+    must be even): element 2i in the low nibble, 2i+1 in the high."""
+    if q.shape[-1] % 2:
+        raise ValueError(f"last axis must be even to pack, got {q.shape}")
+    lo = q[..., 0::2].astype(jnp.int8) & 0x0F
+    hi = (q[..., 1::2].astype(jnp.int8) & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of ``pack_int4``: sign-extend both nibbles back to int8."""
+    p = packed.astype(jnp.int8)
+    lo = (p << 4) >> 4              # arithmetic shifts sign-extend
+    hi = p >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# fp8 casts
+# ---------------------------------------------------------------------------
+
+def quantize_fp8(x: jax.Array, fmt: str = "e4m3") -> tuple[jax.Array,
+                                                           jax.Array]:
+    """Cast to fp8 with a per-tensor scale filling the format's range.
+    Returns (q, scale) with ``q * scale`` the decoded value."""
+    dt, fmax, _ = FP8_FORMATS[fmt]
+    scale = scale_from_absmax(jnp.max(jnp.abs(x.astype(jnp.float32))),
+                              levels=1) / fmax
+    return (x.astype(jnp.float32) / scale).astype(dt), scale
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization for the GEMM family
+# ---------------------------------------------------------------------------
+
+def quantize_weights(w: jax.Array, cfg: QuantConfig) -> tuple[jax.Array,
+                                                              jax.Array]:
+    """Quantize a (K, N) weight panel — or (G, K, N) per-expert panels — for
+    the ``cfg.mode`` kernel path.  Returns ``(q, scale)`` where ``scale`` is
+    ALWAYS an (N,)-wide fp32 vector (or (G, N)): per-channel scales are fit
+    over the contraction axis, per-tensor scales are broadcast, so the
+    kernels see one operand layout either way."""
+    n = w.shape[-1]
+    if cfg.mode in ("fp8_e4m3", "fp8_e5m2"):
+        q, s = quantize_fp8(w, cfg.mode[4:])
+        return q, jnp.broadcast_to(s, (*w.shape[:-2], n))
+    if cfg.mode not in ("w8", "w4", "int8"):
+        raise ValueError(f"no weight quantization for mode {cfg.mode!r}")
+    if cfg.per_channel:
+        # Scale per output column, fit over the contraction axis; the panel
+        # divides by it with the contraction axis re-inserted for broadcast.
+        scale = symmetric_scale(w, cfg.levels, axis=w.ndim - 2)
+        step = scale if w.ndim == 2 else scale[..., None, :]
+    else:
+        step = symmetric_scale(w, cfg.levels)       # one scalar step
+        scale = jnp.broadcast_to(step, (*w.shape[:-2], n))
+    q = quantize(w, step, cfg.levels)
+    return q, scale
+
+
+def quantize_activations(x: jax.Array,
+                         cfg: QuantConfig) -> tuple[jax.Array, jax.Array]:
+    """Dynamic per-tensor activation quantization for ``mode="int8"`` /
+    fp8 modes.  Returns (q, scalar scale)."""
+    if cfg.mode in ("fp8_e4m3", "fp8_e5m2"):
+        return quantize_fp8(x, cfg.mode[4:])
+    scale = symmetric_scale(x, INT8_LEVELS)
+    return quantize(x, scale, INT8_LEVELS), scale
+
+
+# ---------------------------------------------------------------------------
+# Analytic conformance bound
+# ---------------------------------------------------------------------------
+
+def dot_error_bound(k: int, amax_a: float, amax_b: float,
+                    step_a: float = 0.0, step_b: float = 0.0) -> float:
+    """Worst-case |quantized - exact| for one element of a K-long dot.
+
+    Round-to-nearest symmetric quantization moves each element by at most
+    half a step; each product then errs by at most
+    ``|a| db + (|b| + db) da`` with ``da = step_a / 2``, ``db = step_b / 2``,
+    and K products accumulate.  Weight-only passes ``step_a = 0`` (exact
+    activations); fp8 callers pass ``step = 2 * eps * amax`` (relative
+    round-off as an absolute step at the format's top magnitude).
+    """
+    da, db = step_a / 2.0, step_b / 2.0
+    return k * (amax_a * db + (amax_b + db) * da)
+
+
+def fp8_step(amax: float, fmt: str) -> float:
+    """The absolute quantization step fp8 round-off implies at magnitude
+    ``amax``: ``2 * eps * amax`` (so ``dot_error_bound`` can treat fp8 like
+    an integer grid with this step)."""
+    _, _, eps = FP8_FORMATS[fmt]
+    return 2.0 * eps * amax

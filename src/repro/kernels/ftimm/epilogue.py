@@ -20,16 +20,22 @@ class Epilogue:
 
     Applied in fp32 VMEM before the output cast, in this order:
 
-        y = act(acc * scale + bias) + residual
+        y = act(acc * scale_vec * scale + bias) + residual
 
-    ``bias`` / ``residual`` are flags — the operands themselves ride along as
-    extra kernel inputs (bias an (N,)-wide vector broadcast over rows,
-    residual shaped like the output).  Hashable, so it can key jit static
-    arguments and the dispatch-level function caches."""
+    ``bias`` / ``residual`` / ``scale_vec`` are flags — the operands
+    themselves ride along as extra kernel inputs (bias and scale_vec are
+    (N,)-wide vectors broadcast over rows, residual shaped like the output).
+    ``scale_vec`` is the quantized paths' dequant: the per-channel (or
+    broadcast per-tensor) scale multiplying the raw accumulator.  It is
+    LINEAR, so unlike activations it is split-K legal — the split-K engine
+    applies it post-reduction.  ``scale`` stays the static scalar knob.
+    Hashable, so it can key jit static arguments and the dispatch-level
+    function caches."""
     bias: bool = False
     activation: str = "none"        # none | silu | gelu
     residual: bool = False
     scale: float | None = None
+    scale_vec: bool = False
 
     def __post_init__(self):
         if self.activation not in _ACTIVATIONS:
@@ -39,37 +45,45 @@ class Epilogue:
 
     @property
     def is_identity(self) -> bool:
-        return (not self.bias and not self.residual
+        return (not self.bias and not self.residual and not self.scale_vec
                 and self.activation == "none" and self.scale is None)
 
     @property
     def num_ops(self) -> int:
         """How many separate elementwise output passes the unfused path runs
         — what fusing saves (each pass re-reads and re-writes C in HBM)."""
-        return (int(self.scale is not None) + int(self.bias)
-                + int(self.activation != "none") + int(self.residual))
+        return (int(self.scale_vec) + int(self.scale is not None)
+                + int(self.bias) + int(self.activation != "none")
+                + int(self.residual))
 
     def unpack(self, extras):
-        """Split a positional ``extras`` tuple back into (bias, residual).
+        """Split a positional ``extras`` tuple back into
+        (bias, residual, scale).
 
-        The packing convention — bias first, then residual, each present
-        only when its flag is set — is used by every fixed-arity carrier of
-        epilogue operands (the dispatch custom-VJP args, the shard_map
-        bodies in ``dist_matmul``); this is its ONE inverse."""
+        The packing convention — bias, then residual, then the scale vector,
+        each present only when its flag is set — is used by every
+        fixed-arity carrier of epilogue operands (the dispatch custom-VJP
+        args, the shard_map bodies in ``dist_matmul``); this is its ONE
+        inverse."""
         i = 0
-        bias = residual = None
+        bias = residual = scale = None
         if self.bias:
             bias = extras[i]
             i += 1
         if self.residual:
             residual = extras[i]
-        return bias, residual
+            i += 1
+        if self.scale_vec:
+            scale = extras[i]
+        return bias, residual, scale
 
     def decompose(self) -> tuple["Epilogue", ...]:
         """The tail as single-op specs, in application order — what the
         UNFUSED path executes: one separate pass over the output per op.
         Applying them sequentially reproduces ``apply`` exactly."""
         ops = []
+        if self.scale_vec:
+            ops.append(Epilogue(scale_vec=True))
         if self.scale is not None:
             ops.append(Epilogue(scale=self.scale))
         if self.bias:
@@ -80,10 +94,16 @@ class Epilogue:
             ops.append(Epilogue(residual=True))
         return tuple(ops)
 
-    def apply(self, acc: jax.Array, bias=None, residual=None) -> jax.Array:
+    def apply(self, acc: jax.Array, bias=None, residual=None,
+              scale=None) -> jax.Array:
         """fp32 in / fp32 out.  Shared by the in-kernel flush, the split-K
         post-reduction, and the XLA fallback — ONE definition of the math so
-        every engine stays bit-comparable."""
+        every engine stays bit-comparable.  ``scale`` is the runtime
+        (N,)-wide dequant vector (``scale_vec``); it multiplies the raw
+        accumulator FIRST so integer accumulators decode before any affine
+        tail."""
+        if self.scale_vec:
+            acc = acc * scale.astype(jnp.float32)
         if self.scale is not None:
             acc = acc * jnp.float32(self.scale)
         if self.bias:

@@ -72,17 +72,53 @@ def _mask_contract(blk, k_lim, dim: int):
 
 
 def _unpack_epi(rest, epi: Epilogue):
-    """Split a kernel's trailing refs into (bias, residual, c, *scratch)."""
+    """Split a kernel's trailing refs into (bias, residual, scale, c,
+    *scratch) — same bias -> residual -> scale order as ``Epilogue.unpack``.
+    """
     i = 0
     bias_ref = rest[i] if epi.bias else None
     i += int(epi.bias)
     res_ref = rest[i] if epi.residual else None
     i += int(epi.residual)
-    return bias_ref, res_ref, rest[i], rest[i + 1:]
+    scale_ref = rest[i] if epi.scale_vec else None
+    i += int(epi.scale_vec)
+    return bias_ref, res_ref, scale_ref, rest[i], rest[i + 1:]
+
+
+def _acc_dtype(a_dtype, b_dtype):
+    """Accumulator dtype under the dtype axis: int x int accumulates in
+    int32 (the int8 MXU contract); every float combination (incl. fp8 and
+    the mixed weight-only case) accumulates in fp32."""
+    if (jnp.issubdtype(jnp.dtype(a_dtype), jnp.integer)
+            and jnp.issubdtype(jnp.dtype(b_dtype), jnp.integer)):
+        return jnp.int32
+    return jnp.float32
+
+
+def _dot_operands(a_blk, b_blk):
+    """Prepare the operand pair for the MXU dot under the dtype axis.
+
+    int x int passes through (int32 accumulate).  Mixed float x int — the
+    weight-only-quant path — upcasts the integer operand to the float
+    operand's dtype AT LOAD (the in-kernel dequant step; the scale applies
+    at the flush).  fp8 operands upcast to fp32 before the dot so the same
+    kernel body runs under interpret mode / CPU lowering."""
+    a_int = jnp.issubdtype(a_blk.dtype, jnp.integer)
+    b_int = jnp.issubdtype(b_blk.dtype, jnp.integer)
+    if a_int and b_int:
+        return a_blk, b_blk
+    if a_int:
+        return a_blk.astype(b_blk.dtype), b_blk
+    if b_int:
+        return a_blk, b_blk.astype(a_blk.dtype)
+    if a_blk.dtype.itemsize == 1 or b_blk.dtype.itemsize == 1:
+        return a_blk.astype(jnp.float32), b_blk.astype(jnp.float32)
+    return a_blk, b_blk
 
 
 def _accum_body(a_blk, b_blk, c_ref, acc_ref, *, k, nk, dims, k_lim=None,
-                epi: Epilogue = IDENTITY, bias_ref=None, res_ref=None):
+                epi: Epilogue = IDENTITY, bias_ref=None, res_ref=None,
+                scale_ref=None):
     """Shared accumulate-and-flush body across all kernel variants."""
 
     @pl.when(k == 0)
@@ -92,29 +128,31 @@ def _accum_body(a_blk, b_blk, c_ref, acc_ref, *, k, nk, dims, k_lim=None,
     if k_lim is not None:
         a_blk = _mask_contract(a_blk, k_lim, dims[0][0])
         b_blk = _mask_contract(b_blk, k_lim, dims[1][0])
+    a_blk, b_blk = _dot_operands(a_blk, b_blk)
     acc_ref[...] += jax.lax.dot_general(
-        a_blk, b_blk, (dims, ((), ())), preferred_element_type=jnp.float32
-    )
+        a_blk, b_blk, (dims, ((), ())),
+        preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == nk - 1)
     def _flush():
         acc = acc_ref[...]
         if not epi.is_identity:
             acc = epi.apply(
-                acc,
+                acc.astype(jnp.float32),
                 bias=None if bias_ref is None else bias_ref[...],
-                residual=None if res_ref is None else res_ref[...])
+                residual=None if res_ref is None else res_ref[...],
+                scale=None if scale_ref is None else scale_ref[...])
         c_ref[...] = acc.astype(c_ref.dtype)
 
 
 def _dense_kernel(a_ref, b_ref, *rest, nk, dims, bk, k_total, mask_k,
                   epi: Epilogue):
-    bias_ref, res_ref, c_ref, (acc_ref,) = _unpack_epi(rest, epi)
+    bias_ref, res_ref, scale_ref, c_ref, (acc_ref,) = _unpack_epi(rest, epi)
     k = pl.program_id(2)
     k_lim = _k_limit(k_total, bk, k) if mask_k else None
     _accum_body(a_ref[...], b_ref[...], c_ref, acc_ref, k=k, nk=nk,
                 dims=dims, k_lim=k_lim, epi=epi, bias_ref=bias_ref,
-                res_ref=res_ref)
+                res_ref=res_ref, scale_ref=scale_ref)
 
 
 def _specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder):
@@ -175,6 +213,7 @@ def ftimm_gemm(
     epilogue: Epilogue = IDENTITY,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """M-parallel ftIMM GEMM.  Shapes need not be block multiples: the grid
     is cdiv-sized and remainder K tiles are masked in-kernel (zero-copy edge
@@ -182,8 +221,10 @@ def ftimm_gemm(
 
     trans: "nn" A(M,K)@B(K,N); "tn" A(K,M).T@B(K,N); "nt" A(M,K)@B(N,K).T.
     ``epilogue`` is applied to the fp32 accumulator at the flush; ``bias``
-    (N,) and ``residual`` (M, N) ride along as extra inputs when the spec
-    asks for them.
+    (N,), ``residual`` (M, N) and the dequant ``scale`` vector (N,) ride
+    along as extra inputs when the spec asks for them.  Integer x integer
+    operands accumulate in int32 (the int8 path); mixed float x int
+    operands dequantize at load (weight-only quant).
     """
     m, k, n = _mkn(trans, a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
@@ -197,6 +238,9 @@ def ftimm_gemm(
     if epilogue.residual:
         in_specs.append(c_spec)
         inputs.append(residual)
+    if epilogue.scale_vec:
+        in_specs.append(bias_spec)
+        inputs.append(scale.reshape(1, n).astype(jnp.float32))
     return pl.pallas_call(
         functools.partial(_dense_kernel, nk=gk, dims=_DIMS[trans], bk=bk,
                           k_total=k, mask_k=bool(k % bk), epi=epilogue),
@@ -204,7 +248,7 @@ def ftimm_gemm(
         in_specs=in_specs,
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype, b.dtype))],
         compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
@@ -214,14 +258,15 @@ def ftimm_gemm(
 
 def _batched_kernel(a_ref, b_ref, *rest, nk, dims, a_batched, b_batched,
                     bk, k_total, mask_k, epi: Epilogue):
-    bias_ref, res_ref, c_ref, (acc_ref,) = _unpack_epi(rest, epi)
+    bias_ref, res_ref, scale_ref, c_ref, (acc_ref,) = _unpack_epi(rest, epi)
     a_blk = a_ref[0] if a_batched else a_ref[...]
     b_blk = b_ref[0] if b_batched else b_ref[...]
     k = pl.program_id(3)
     k_lim = _k_limit(k_total, bk, k) if mask_k else None
     _accum_body(a_blk, b_blk, c_ref.at[0], acc_ref, k=k, nk=nk, dims=dims,
                 k_lim=k_lim, epi=epi, bias_ref=bias_ref,
-                res_ref=None if res_ref is None else res_ref.at[0])
+                res_ref=None if res_ref is None else res_ref.at[0],
+                scale_ref=scale_ref)
 
 
 def _batched_specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder,
@@ -267,7 +312,11 @@ def _batched_specs(trans: str, bm: int, bn: int, bk: int, order: DimOrder,
         (1, bm, bn),
         lambda g, i, j, k: (g, i_of(g, i, j, k), j_of(g, i, j, k)))
     bias_spec = pl.BlockSpec((1, bn), lambda g, i, j, k: (0, j_of(g, i, j, k)))
-    return a_spec, b_spec, c_spec, bias_spec
+    # Per-group variant: the (N,)-wide vector is indexed by the batch grid
+    # dim — one bias/scale row per group (the per-expert epilogue).
+    gbias_spec = pl.BlockSpec(
+        (1, bn), lambda g, i, j, k: (g, j_of(g, i, j, k)))
+    return a_spec, b_spec, c_spec, bias_spec, gbias_spec
 
 
 def ftimm_gemm_grouped(
@@ -284,6 +333,7 @@ def ftimm_gemm_grouped(
     epilogue: Epilogue = IDENTITY,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """Grouped ftIMM GEMM: per-group operands with optional sharing.
 
@@ -292,8 +342,9 @@ def ftimm_gemm_grouped(
     every group, e.g. a common activation against per-group weights or vice
     versa).  At least one operand must be 3-D.  Per-group shapes need not be
     block multiples (remainder K tiles masked in-kernel); returns
-    ``(G, M, N)``.  ``epilogue`` flushes fused: ``bias`` (N,) is shared
-    across the batch, ``residual`` is (G, M, N).
+    ``(G, M, N)``.  ``epilogue`` flushes fused: ``bias`` is (N,) shared
+    across the batch or (G, N) per group (the per-expert epilogue), and the
+    same for the dequant ``scale`` vector; ``residual`` is (G, M, N).
     """
     a_batched, b_batched = a.ndim == 3, b.ndim == 3
     assert a_batched or b_batched, (a.shape, b.shape)
@@ -305,15 +356,28 @@ def ftimm_gemm_grouped(
     gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
     grid = ((gsize, gm, gn, gk) if dim_order == "mn"
             else (gsize, gn, gm, gk))
-    a_spec, b_spec, c_spec, bias_spec = _batched_specs(
+    a_spec, b_spec, c_spec, bias_spec, gbias_spec = _batched_specs(
         trans, bm, bn, bk, dim_order, a_batched, b_batched)
+
+    def vec_arg(v):
+        """(N,) shared vs (G, N) per-group (N,)-wide epilogue operand."""
+        if v.ndim == 2:
+            assert v.shape == (gsize, n), (v.shape, gsize, n)
+            return gbias_spec, v
+        return bias_spec, v.reshape(1, n)
+
     in_specs, inputs = [a_spec, b_spec], [a, b]
     if epilogue.bias:
-        in_specs.append(bias_spec)
-        inputs.append(bias.reshape(1, n))
+        spec, arg = vec_arg(bias)
+        in_specs.append(spec)
+        inputs.append(arg)
     if epilogue.residual:
         in_specs.append(c_spec)
         inputs.append(residual)
+    if epilogue.scale_vec:
+        spec, arg = vec_arg(scale.astype(jnp.float32))
+        in_specs.append(spec)
+        inputs.append(arg)
     return pl.pallas_call(
         functools.partial(_batched_kernel, nk=gk, dims=_DIMS[trans],
                           a_batched=a_batched, b_batched=b_batched, bk=bk,
@@ -322,7 +386,7 @@ def ftimm_gemm_grouped(
         in_specs=in_specs,
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct((gsize, m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype, b.dtype))],
         compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
@@ -345,17 +409,18 @@ def ftimm_gemm_batched(
     epilogue: Epilogue = IDENTITY,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """Batched ftIMM GEMM: leading batch grid dim over independent per-entry
     GEMMs, ``(G, M, K) @ (G, K, N) -> (G, M, N)`` (trans variants as in
-    ``ftimm_gemm``).  The fp32 accumulator is revisited across the innermost
+    ``ftimm_gemm``).  The accumulator is revisited across the innermost
     K steps exactly as in the 2-D kernel; each batch entry owns its own
     output block so the batch dim is fully parallel."""
     assert a.ndim == 3 and b.ndim == 3, (a.shape, b.shape)
     return ftimm_gemm_grouped(
         a, b, bm=bm, bn=bn, bk=bk, trans=trans, dim_order=dim_order,
         out_dtype=out_dtype, interpret=interpret, epilogue=epilogue,
-        bias=bias, residual=residual)
+        bias=bias, residual=residual, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -404,21 +469,38 @@ def _ragged_store(gids_ref, tids_ref, valid_ref, offs_ref, o_ref, acc,
 
 
 def _ragged_kernel(gids_ref, tids_ref, valid_ref, offs_ref,
-                   x_ref, w_ref, o_ref, acc_ref, *, nk, bm, dims):
+                   x_ref, w_ref, *rest, nk, bm, dims, epi: Epilogue):
+    i = 0
+    bias_ref = rest[i] if epi.bias else None
+    i += int(epi.bias)
+    scale_ref = rest[i] if epi.scale_vec else None
+    i += int(epi.scale_vec)
+    o_ref, acc_ref = rest[i], rest[i + 1]
     t, k = pl.program_id(1), pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    x_blk, w_blk = _dot_operands(x_ref[...], w_ref[0])
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[0], (dims, ((), ())),
-        preferred_element_type=jnp.float32)
+        x_blk, w_blk, (dims, ((), ())),
+        preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == nk - 1)
     def _flush():
+        # The per-expert bias/scale blocks arrive pre-indexed by this
+        # visit's group id; applying them to the WHOLE tile accumulator is
+        # sound because the masked store below only lands this group's rows
+        # — foreign rows (computed against the wrong panel anyway) drop.
+        acc = acc_ref[...]
+        if not epi.is_identity:
+            acc = epi.apply(
+                acc.astype(jnp.float32),
+                bias=None if bias_ref is None else bias_ref[0],
+                scale=None if scale_ref is None else scale_ref[0])
         _ragged_store(gids_ref, tids_ref, valid_ref, offs_ref, o_ref,
-                      acc_ref[...], t=t, bm=bm)
+                      acc, t=t, bm=bm)
 
 
 def ftimm_gemm_ragged(
@@ -435,17 +517,27 @@ def ftimm_gemm_ragged(
     trans: str = "nn",
     out_dtype=None,
     interpret: bool = False,
+    epilogue: Epilogue = IDENTITY,
+    bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """Ragged grouped GEMM: per-group row chunks against per-group panels.
 
     Grid is (N/bn, NT, K/bk): N outermost so consecutive visits of a shared
     row tile keep the same output block resident (the masked-store protocol
-    above); K innermost revisits the fp32 accumulator as in ``ftimm_gemm``.
+    above); K innermost revisits the accumulator as in ``ftimm_gemm``.
     ``trans`` transposes the per-group panel: "nn" contracts panel rows,
     "nt" panel columns (the dX backward of the "nn" forward).
+
+    ``epilogue`` supports the per-expert operands: ``bias`` (G, N) and the
+    dequant ``scale`` vector (G, N) are indexed by the visit list's group id
+    and applied at the flush (residual is not supported here — the RMW
+    store would double-add it on shared tiles).  Mixed float x int operands
+    dequantize at load (int8 expert panels under bf16 tokens).
     """
     tp, kp = x.shape
     out_dtype = out_dtype or x.dtype
+    assert not epilogue.residual, "ragged kernel has no residual operand"
     if trans == "nn":
         _, kp_w, np_ = w.shape
         dims = ((1,), (0,))
@@ -462,25 +554,41 @@ def ftimm_gemm_ragged(
         x.shape, w.shape, bm, bn, bk)
     nt = group_ids.shape[0]
     gk = kp // bk
+    num_groups = group_offsets.shape[0] - 1
     x_spec = pl.BlockSpec(
         (bm, bk), lambda j, t, k, g_r, t_r, v_r, o_r: (t_r[t], k))
     o_spec = pl.BlockSpec(
         (bm, bn), lambda j, t, k, g_r, t_r, v_r, o_r: (t_r[t], j))
+    # Per-expert (N,)-wide epilogue operand: one row per group, indexed by
+    # the visit's group id exactly like the weight panel.
+    vec_spec = pl.BlockSpec(
+        (1, 1, bn), lambda j, t, k, g_r, t_r, v_r, o_r: (g_r[t], 0, j))
+    in_specs, inputs = [x_spec, w_spec], [x, w]
+    if epilogue.bias:
+        assert bias.shape == (num_groups, np_), (bias.shape, w.shape)
+        in_specs.append(vec_spec)
+        inputs.append(bias.reshape(num_groups, 1, np_))
+    if epilogue.scale_vec:
+        assert scale.shape == (num_groups, np_), (scale.shape, w.shape)
+        in_specs.append(vec_spec)
+        inputs.append(scale.reshape(num_groups, 1, np_).astype(jnp.float32))
     return pl.pallas_call(
-        functools.partial(_ragged_kernel, nk=gk, bm=bm, dims=dims),
+        functools.partial(_ragged_kernel, nk=gk, bm=bm, dims=dims,
+                          epi=epilogue),
         grid_spec=prefetch_scalar_grid_spec(
             num_scalar_prefetch=4,
             grid=(np_ // bn, nt, gk),
-            in_specs=[x_spec, w_spec],
+            in_specs=in_specs,
             out_specs=o_spec,
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((bm, bn),
+                                       _acc_dtype(x.dtype, w.dtype))],
         ),
         out_shape=jax.ShapeDtypeStruct((tp, np_), out_dtype),
         compiler_params=pallas_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(group_ids, tile_ids, valid, group_offsets, x, w)
+    )(group_ids, tile_ids, valid, group_offsets, *inputs)
 
 
 def _ragged_swiglu_kernel(gids_ref, tids_ref, valid_ref, offs_ref,
@@ -662,18 +770,21 @@ def ftimm_gemm_splitk(
     epilogue: Epilogue = IDENTITY,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """K-parallel ftIMM GEMM (paper Alg. 5).
 
-    Returns the REDUCED (M, N) result; the fp32 partials buffer
-    (nsplit, M, N) is produced by the kernel and summed outside it — the
-    TPU analogue of the paper's reduction of per-core partial C through GSM.
-    K need not divide into nsplit * bk-multiples: each split owns
-    ``cdiv(cdiv(K, bk), nsplit)`` K blocks and out-of-range blocks mask to
-    zero contributions.  The epilogue applies AFTER the reduction (its
-    activation is nonlinear, so per-split flushing would be wrong) — still
-    one fused elementwise pass over the fp32 partial sum, not per-op XLA
-    passes over a stored output.
+    Returns the REDUCED (M, N) result; the partials buffer (nsplit, M, N)
+    — fp32, or int32 on the int x int path — is produced by the kernel and
+    summed outside it, the TPU analogue of the paper's reduction of
+    per-core partial C through GSM.  K need not divide into nsplit *
+    bk-multiples: each split owns ``cdiv(cdiv(K, bk), nsplit)`` K blocks
+    and out-of-range blocks mask to zero contributions.  The epilogue
+    applies AFTER the reduction (its activation is nonlinear, so per-split
+    flushing would be wrong; the LINEAR dequant ``scale`` vector commutes
+    with the sum, so applying it post-reduction is exact) — still one fused
+    elementwise pass over the partial sum, not per-op XLA passes over a
+    stored output.
     """
     m, k, n = _mkn(trans, a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
@@ -695,14 +806,15 @@ def ftimm_gemm_splitk(
         b_spec = pl.BlockSpec((bn, bk), lambda s, i, j, k: (j, s * gk + k))
     c_spec = pl.BlockSpec((1, bm, bn), lambda s, i, j, k: (s, i, j))
 
+    acc_dtype = _acc_dtype(a.dtype, b.dtype)
     partials = pl.pallas_call(
         functools.partial(_splitk_kernel, nk=gk, dims=dims, gk=gk, bk=bk,
                           k_total=k, mask_k=mask_k),
         grid=(nsplit, gm, gn, gk),
         in_specs=[a_spec, b_spec],
         out_specs=c_spec,
-        out_shape=jax.ShapeDtypeStruct((nsplit, m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((nsplit, m, n), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
@@ -710,7 +822,8 @@ def ftimm_gemm_splitk(
     )(a, b)
     out = jnp.sum(partials, axis=0)
     if not epilogue.is_identity:
-        out = epilogue.apply(out, bias=bias, residual=residual)
+        out = epilogue.apply(out.astype(jnp.float32), bias=bias,
+                             residual=residual, scale=scale)
     return out.astype(out_dtype)
 
 

@@ -118,12 +118,14 @@ def gemm(
     epilogue: "_k.Epilogue | None" = None,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     edge: str = "masked",
 ) -> jax.Array:
     """General entry: dispatches to the M-parallel or split-K kernel
     (``nsplit > 1`` selects K-parallel) with the epilogue fused at the flush.
     ``edge="masked"`` passes operands through unpadded (in-kernel edge
-    tiles); ``edge="padded"`` pads to block multiples and slices back."""
+    tiles); ``edge="padded"`` pads to block multiples and slices back.
+    ``scale`` is the (N,) dequant vector when ``epilogue.scale_vec``."""
     if interpret is None:
         interpret = _auto_interpret()
     if edge not in ("masked", "padded"):
@@ -148,22 +150,23 @@ def gemm(
             raise ValueError(trans)
         bias_p = None if bias is None else _pad_to(bias, (np_,))
         res_p = None if residual is None else _pad_to(residual, (mp, np_))
+        scale_p = None if scale is None else _pad_to(scale, (np_,))
     else:
         if trans not in ("nn", "tn", "nt"):
             raise ValueError(trans)
-        a_p, b_p, bias_p, res_p = a, b, bias, residual
+        a_p, b_p, bias_p, res_p, scale_p = a, b, bias, residual, scale
 
     if nsplit > 1:
         out = _k.ftimm_gemm_splitk(
             a_p, b_p, bm=bm_, bn=bn_, bk=bk_, nsplit=nsplit, trans=trans,
             out_dtype=out_dtype, interpret=interpret, epilogue=epilogue,
-            bias=bias_p, residual=res_p,
+            bias=bias_p, residual=res_p, scale=scale_p,
         )
     else:
         out = _k.ftimm_gemm(
             a_p, b_p, bm=bm_, bn=bn_, bk=bk_, trans=trans,
             dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
-            epilogue=epilogue, bias=bias_p, residual=res_p,
+            epilogue=epilogue, bias=bias_p, residual=res_p, scale=scale_p,
         )
     return out if edge == "masked" else out[:m, :n]
 
@@ -189,14 +192,15 @@ def batched_gemm(
     epilogue: "_k.Epilogue | None" = None,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     edge: str = "masked",
 ) -> jax.Array:
     """Batched/grouped entry.  Either operand may be 2-D (shared across the
     batch — the grouped-GEMM case); the batch dim itself is never padded (it
     maps 1:1 onto the leading grid dim).  ``edge="masked"`` (default) runs
     the kernel on unpadded per-group panels; ``edge="padded"`` is the legacy
-    pad/slice path.  ``bias`` is (N,) shared across the batch, ``residual``
-    (G, M, N)."""
+    pad/slice path.  ``bias`` and the dequant ``scale`` vector are (N,)
+    shared across the batch or (G, N) per group; ``residual`` (G, M, N)."""
     if interpret is None:
         interpret = _auto_interpret()
     if edge not in ("masked", "padded"):
@@ -212,6 +216,9 @@ def batched_gemm(
         def pad_panels(x, last2):
             return _pad_to(x, x.shape[:-2] + last2)
 
+        def pad_vec(v):
+            return None if v is None else _pad_to(v, v.shape[:-1] + (np_,))
+
         if trans == "nn":
             a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (kp, np_))
         elif trans == "tn":
@@ -220,18 +227,19 @@ def batched_gemm(
             a_p, b_p = pad_panels(a, (mp, kp)), pad_panels(b, (np_, kp))
         else:
             raise ValueError(trans)
-        bias_p = None if bias is None else _pad_to(bias, (np_,))
+        bias_p = pad_vec(bias)
         res_p = None if residual is None else \
             _pad_to(residual, (residual.shape[0], mp, np_))
+        scale_p = pad_vec(scale)
     else:
         if trans not in ("nn", "tn", "nt"):
             raise ValueError(trans)
-        a_p, b_p, bias_p, res_p = a, b, bias, residual
+        a_p, b_p, bias_p, res_p, scale_p = a, b, bias, residual, scale
 
     out = _k.ftimm_gemm_grouped(
         a_p, b_p, bm=bm_, bn=bn_, bk=bk_, trans=trans,
         dim_order=dim_order, out_dtype=out_dtype, interpret=interpret,
-        epilogue=epilogue, bias=bias_p, residual=res_p,
+        epilogue=epilogue, bias=bias_p, residual=res_p, scale=scale_p,
     )
     return out if edge == "masked" else out[:, :m, :n]
 
@@ -347,7 +355,8 @@ def _ragged_metadata(group_offsets: jax.Array, m_tiles: int, bm: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "trans", "out_dtype", "interpret"),
+    static_argnames=("bm", "bn", "bk", "trans", "out_dtype", "interpret",
+                     "epilogue"),
 )
 def ragged_gemm(
     x: jax.Array,                 # (T, K) flat rows, groups contiguous
@@ -360,6 +369,9 @@ def ragged_gemm(
     trans: str = "nn",
     out_dtype=None,
     interpret: bool | None = None,
+    epilogue: "_k.Epilogue | None" = None,
+    bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """Capacity-free grouped GEMM: y[o_g:o_{g+1}] = x[o_g:o_{g+1}] @ W_g.
 
@@ -367,9 +379,11 @@ def ragged_gemm(
     ``offsets[0] == 0`` and ``offsets[G] == x.shape[0]`` — every row belongs
     to exactly one group (the capacity path's token-dropping has no analogue
     here).  Pads rows/cols to block multiples, builds the visit list, runs the
-    scalar-prefetch kernel, un-pads."""
+    scalar-prefetch kernel, un-pads.  ``bias`` / dequant ``scale`` are
+    per-expert (G, N) vectors applied at the flush (``epilogue`` flags)."""
     if interpret is None:
         interpret = _auto_interpret()
+    epilogue = _k.IDENTITY if epilogue is None else epilogue
     out_dtype = out_dtype or x.dtype
     t_rows, k = x.shape
     if trans == "nn":
@@ -389,17 +403,19 @@ def ragged_gemm(
     # The verifier's alignment check decides the edge path: block-aligned
     # shapes skip the pad AND the output slice entirely (zero-copy).
     if block_aligned((t_rows, k, n), (bm_, bk_, bn_)):
-        tp, x_p, w_p = t_rows, x, w
+        tp, x_p, w_p, bias_p, scale_p = t_rows, x, w, bias, scale
     else:
         tp, kp, np_ = _ceil_to(t_rows, bm_), _ceil_to(k, bk_), \
             _ceil_to(n, bn_)
         x_p = _pad_to(x, (tp, kp))
         w_p = _pad_to(w, (g, kp, np_) if trans == "nn" else (g, np_, kp))
+        bias_p = None if bias is None else _pad_to(bias, (g, np_))
+        scale_p = None if scale is None else _pad_to(scale, (g, np_))
     gids, tids, valid = _ragged_metadata(group_offsets, tp // bm_, bm_)
     out = _k.ftimm_gemm_ragged(
         x_p, w_p, gids, tids, valid, group_offsets.astype(jnp.int32),
         bm=bm_, bn=bn_, bk=bk_, trans=trans, out_dtype=out_dtype,
-        interpret=interpret)
+        interpret=interpret, epilogue=epilogue, bias=bias_p, scale=scale_p)
     return out if out.shape == (t_rows, n) else out[:t_rows, :n]
 
 

@@ -23,22 +23,26 @@ from ..core.gemm import Epilogue, project, project_swiglu
 def dense(x: jax.Array, w: jax.Array, compute_dtype=jnp.bfloat16, *,
           bias: jax.Array | None = None,
           residual: jax.Array | None = None,
-          activation: str = "none") -> jax.Array:
+          activation: str = "none",
+          quant: str | None = None) -> jax.Array:
     """y = act(x @ w + bias) + residual with fp32 accumulation; w cast to
     compute dtype at use.  The bias/activation/residual tail (when present)
     is a fused GEMM epilogue — applied to the fp32 accumulator in VMEM, not
-    as separate passes over the stored output."""
+    as separate passes over the stored output.  ``quant`` (a ``core.quant``
+    mode) routes through the managed quantized GEMM: the panel is quantized
+    per channel in-trace, dequant fused at the flush, straight-through
+    backward."""
     epi = Epilogue(bias=bias is not None, activation=activation,
                    residual=residual is not None)
     if epi.is_identity:
         return project(x.astype(compute_dtype), w.astype(compute_dtype),
-                       out_dtype=compute_dtype)
+                       out_dtype=compute_dtype, quant=quant)
     return project(
         x.astype(compute_dtype), w.astype(compute_dtype),
         out_dtype=compute_dtype, epilogue=epi,
         bias=None if bias is None else bias.astype(compute_dtype),
         residual=None if residual is None
-        else residual.astype(compute_dtype))
+        else residual.astype(compute_dtype), quant=quant)
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:

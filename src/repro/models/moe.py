@@ -129,14 +129,28 @@ def moe_mlp(
     capacity_factor: float = 1.25,
     compute_dtype=jnp.bfloat16,
     dispatch: str = "capacity",    # "capacity" | "ragged"
+    quant: str | None = None,      # core.quant mode for the expert panels
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (output (T, D), aux_loss scalar).  See module docstring for
-    the two dispatch modes; ``capacity_factor`` is ignored by "ragged"."""
+    the two dispatch modes; ``capacity_factor`` is ignored by "ragged".
+
+    ``quant`` (a ``core.quant`` mode — "w8"/"w4"/"int8"/...) runs the
+    ragged expert GEMMs with quantized per-expert panels: per-expert
+    per-channel scales fused at the accumulator flush, straight-through
+    backward against the dequantized panels.  Zero-drop int8 experts —
+    ragged dispatch only (the capacity path pads and drops; quantizing it
+    would conflate two approximations in one parity story)."""
+    from ..core import quant as _quant
+    qcfg = _quant.resolve(quant)
     if dispatch == "ragged":
         return _moe_mlp_ragged(x, params, num_experts=num_experts,
-                               top_k=top_k, compute_dtype=compute_dtype)
+                               top_k=top_k, compute_dtype=compute_dtype,
+                               qcfg=qcfg)
     if dispatch != "capacity":
         raise ValueError(f"unknown moe dispatch: {dispatch}")
+    if not qcfg.is_noop:
+        raise ValueError("quantized experts require the ragged (zero-drop) "
+                         f"dispatch, not {dispatch!r}")
     t, d = x.shape
     e = num_experts
     c = capacity(t, e, top_k, capacity_factor, dtype=compute_dtype)
@@ -191,13 +205,23 @@ def _moe_mlp_ragged(
     num_experts: int,
     top_k: int,
     compute_dtype=jnp.bfloat16,
+    qcfg=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Capacity-free dispatch: sort-by-expert + prefix-sum offsets.
 
     Every routed (token, k) copy is kept — per-expert row counts become the
     ragged M dims of the grouped ftIMM GEMMs (the irregular shapes the CMR
     planner exists to exploit), and the gate/up pair runs as ONE fused
-    silu(gate)*up kernel launch."""
+    silu(gate)*up kernel launch.
+
+    ``qcfg`` (a non-noop ``core.quant.QuantConfig``) swaps the expert GEMMs
+    for their quantized ragged forms: gate/up/down each stream int8 (or
+    int4/fp8) per-expert panels with the dequant fused at the flush; the
+    silu*mul runs elementwise between them (the fused-SwiGLU kernel stays
+    full-precision-only — its two panels would need two scale vectors in
+    one flush).  The router is NEVER quantized (T1 is tiny and gate
+    fidelity is the whole zero-drop story).  Expert-parallel meshes keep
+    full-precision panels: the EP pipeline fuses its own exchange."""
     t, d = x.shape
     e = num_experts
     xc = x.astype(compute_dtype)
@@ -229,7 +253,16 @@ def _moe_mlp_ragged(
     if ep_axis is not None:
         # Fused EP pipeline: one d_model-wide exchange each way; the
         # (rows, d_ff) hidden stays on the shard owning the expert.
+        # (Quantized panels deliberately not routed here: the exchange
+        # moves activations, not panels, so quant buys no wire bytes.)
         ys = ep_ragged_moe(xs, wg, wu, wd, offsets, mesh=mesh, axis=ep_axis)
+    elif qcfg is not None and not qcfg.is_noop:
+        hg = ragged_matmul(xs, wg, offsets, quant=qcfg,
+                           out_dtype=jnp.float32)                # (T*K, F)
+        hu = ragged_matmul(xs, wu, offsets, quant=qcfg,
+                           out_dtype=jnp.float32)
+        h = (jax.nn.silu(hg) * hu).astype(compute_dtype)
+        ys = ragged_matmul(h, wd, offsets, quant=qcfg)           # (T*K, D)
     else:
         h = ragged_swiglu(xs, wg, wu, offsets)                   # (T*K, F)
         ys = ragged_matmul(h, wd, offsets)                       # (T*K, D)

@@ -129,7 +129,8 @@ def _mlp_or_moe(h, p, cfg: ModelConfig):
                          num_experts=cfg.num_experts, top_k=cfg.top_k,
                          capacity_factor=cfg.capacity_factor,
                          compute_dtype=_cdt(cfg),
-                         dispatch=cfg.moe_dispatch)
+                         dispatch=cfg.moe_dispatch,
+                         quant=getattr(cfg, "quant", "none"))
         return h + y.reshape(b, s, d), aux
     # Residual add fused into the down projection's epilogue (and the
     # gate/up pair is one fused kernel launch inside swiglu).

@@ -9,11 +9,19 @@ the scheme convergent — EF-SGD/EF21 literature).
 Overflow safety: each device clips its quantized values to +-(127 // n) so
 the integer all-reduce over n devices cannot wrap.  Used inside shard_map
 (see train.train_step.make_compressed_grad_sync).
+
+The symmetric scale fit / clip-round / error-feedback arithmetic lives in
+``core.quant`` — ONE rounding rule shared with the low-precision GEMM
+kernels' quantization, so the ICI compressor and the kernel quant paths can
+never drift apart.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from ..core.quant import (INT8_LEVELS, dequantize, error_residual, quantize,
+                          scale_from_absmax)
 
 
 def compress_allreduce(g: jax.Array, err: jax.Array, axis,
@@ -25,12 +33,12 @@ def compress_allreduce(g: jax.Array, err: jax.Array, axis,
     # Shared scale: global max|g| via a scalar fp32 psum (cheap).
     local_max = jnp.max(jnp.abs(gf))
     global_max = jax.lax.pmax(local_max, axis)
-    level = max(127 // max(num_devices, 1), 1)
-    scale = jnp.maximum(global_max, 1e-30) / level
-    q = jnp.clip(jnp.round(gf / scale), -level, level).astype(jnp.int8)
-    new_err = gf - q.astype(jnp.float32) * scale
+    level = max(INT8_LEVELS // max(num_devices, 1), 1)
+    scale = scale_from_absmax(global_max, level)
+    q = quantize(gf, scale, level)
+    new_err = error_residual(gf, q, scale)
     q_sum = jax.lax.psum(q, axis)                   # s8 on the wire
-    mean = q_sum.astype(jnp.float32) * scale / num_devices
+    mean = dequantize(q_sum, scale) / num_devices
     return mean, new_err
 
 

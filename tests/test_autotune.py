@@ -182,10 +182,12 @@ def test_unknown_engine_rejected():
 
 
 def test_unsupported_operand_width_rejected():
-    """int8 would silently time float32 operands (4x the bytes) and poison
-    both the stored winner and the calibration sample."""
+    """An unknown width would silently time the wrong operand bytes and
+    poison both the stored winner and the calibration sample.  (in_bytes=1
+    is the int8 compute path since the dtype axis landed — supported and
+    covered in tests/test_quant.py.)"""
     with pytest.raises(ValueError, match="unsupported operand width"):
-        autotune.autotune_gemm(64, 64, 64, in_bytes=1, engine="xla",
+        autotune.autotune_gemm(64, 64, 64, in_bytes=8, engine="xla",
                                store=False)
 
 

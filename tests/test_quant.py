@@ -1,0 +1,427 @@
+"""Low-precision GEMM family (ISSUE 8): quantizer units, int8/fp8
+conformance inside the analytic error bound on T1/T2/T3 archetype shapes,
+straight-through VJPs, per-expert bias epilogues (fwd + grad parity),
+zero-drop quantized MoE parity, and the dtype axis of the plan-store key
+(mixed-width round-trip + split-K quarantine)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts
+from repro.core import quant
+from repro.core.gemm import autotune, plan_store, tuner
+from repro.core.gemm import batched_matmul, matmul, ragged_matmul
+from repro.kernels.ftimm.epilogue import Epilogue
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _mk(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.fold_in(KEY, seed), shape,
+                             jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# core.quant units
+# ---------------------------------------------------------------------------
+
+def test_quant_config_validation():
+    with pytest.raises(ValueError, match="unknown quant mode"):
+        quant.QuantConfig(mode="int3")
+    assert quant.resolve(None).is_noop
+    cfg = quant.resolve("w8")
+    assert cfg.weight_only and cfg.weight_bytes == 1
+    assert quant.resolve("w4").levels == quant.INT4_LEVELS
+    assert not quant.resolve("int8").weight_only
+    assert quant.resolve(cfg) is cfg
+
+
+def test_pack_int4_roundtrip():
+    q = jax.random.randint(jax.random.fold_in(KEY, 3), (5, 16), -7, 8,
+                           jnp.int32).astype(jnp.int8)
+    packed = quant.pack_int4(q)
+    assert packed.shape == (5, 8) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(quant.unpack_int4(packed), q)
+    with pytest.raises(ValueError, match="even"):
+        quant.pack_int4(q[:, :15])
+
+
+@pytest.mark.parametrize("mode", ["w8", "w4", "int8"])
+def test_quantize_weights_scale_shapes_and_step(mode):
+    cfg = quant.QuantConfig(mode=mode)
+    w2 = _mk((24, 16), 4)
+    q2, s2 = quant.quantize_weights(w2, cfg)
+    assert s2.shape == (16,) and s2.dtype == jnp.float32
+    # round-to-nearest: per-element decode error <= half a step
+    err = jnp.abs(quant.dequantize(q2, s2) - w2)
+    assert float(jnp.max(err - s2 / 2)) <= 1e-6
+
+    w3 = _mk((3, 24, 16), 5)
+    q3, s3 = quant.quantize_weights(w3, cfg)
+    assert s3.shape == (3, 16)
+    err3 = jnp.abs(quant.dequantize(q3, s3[:, None, :]) - w3)
+    assert float(jnp.max(err3 - s3[:, None, :] / 2)) <= 1e-6
+
+    # per-tensor: one scalar step broadcast to the (N,) operand layout
+    qt, st = quant.quantize_weights(
+        w2, quant.QuantConfig(mode=mode, per_channel=False))
+    assert st.shape == (16,) and float(jnp.ptp(st)) == 0.0
+
+
+@pytest.mark.parametrize("fmt", ["e4m3", "e5m2"])
+def test_fp8_cast_within_step(fmt):
+    x = _mk((32, 16), 6, scale=3.0)
+    q, s = quant.quantize_fp8(x, fmt)
+    assert q.dtype == quant.FP8_FORMATS[fmt][0]
+    amax = float(jnp.max(jnp.abs(x)))
+    err = jnp.abs(q.astype(jnp.float32) * s - x)
+    assert float(jnp.max(err)) <= quant.fp8_step(amax, fmt)
+
+
+def test_dot_error_bound_shape():
+    # weight-only: zero activation step removes the activation term entirely
+    assert quant.dot_error_bound(128, 1.0, 1.0, 0.0, 0.01) == \
+        pytest.approx(128 * 1.0 * 0.005)
+    # bound is linear in K and monotone in the steps
+    assert quant.dot_error_bound(256, 1.0, 1.0, 0.1, 0.1) == \
+        pytest.approx(2 * quant.dot_error_bound(128, 1.0, 1.0, 0.1, 0.1))
+    assert quant.dot_error_bound(64, 1.0, 1.0, 0.2, 0.1) > \
+        quant.dot_error_bound(64, 1.0, 1.0, 0.1, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Conformance: quantized matmul vs fp32 oracle within the analytic bound,
+# on scaled instances of the paper's three irregular archetypes.
+# ---------------------------------------------------------------------------
+
+ARCHETYPES = [
+    ("t1", 2048, 64, 32),      # M >> K ~ N
+    ("t2", 32, 2048, 32),      # K >> M ~ N
+    ("t3", 512, 512, 64),      # M ~ K >> N
+]
+
+QUANT_MODES = ["w8", "w4", "int8", "fp8_e4m3", "fp8_e5m2"]
+
+
+def _analytic_bound(mode: str, a, b) -> float:
+    k = a.shape[1]
+    amax_a = float(jnp.max(jnp.abs(a)))
+    amax_b = float(jnp.max(jnp.abs(b)))
+    cfg = quant.QuantConfig(mode=mode)
+    if mode in ("w8", "w4"):
+        _, s = quant.quantize_weights(b, cfg)
+        return quant.dot_error_bound(k, amax_a, amax_b, 0.0,
+                                     float(jnp.max(s)))
+    if mode == "int8":
+        _, sw = quant.quantize_weights(b, cfg)
+        sa = float(quant.symmetric_scale(a))
+        return quant.dot_error_bound(k, amax_a, amax_b, sa,
+                                     float(jnp.max(sw)))
+    fmt = mode[4:]
+    return quant.dot_error_bound(k, amax_a, amax_b,
+                                 quant.fp8_step(amax_a, fmt),
+                                 quant.fp8_step(amax_b, fmt))
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+@pytest.mark.parametrize("name,m,k,n", ARCHETYPES)
+def test_quantized_matmul_within_bound(name, m, k, n, mode):
+    a = _mk((m, k), 10, scale=0.5)
+    b = _mk((k, n), 11, scale=0.3)
+    got = matmul(a, b, quant=mode, out_dtype=jnp.float32)
+    want = a @ b
+    err = float(jnp.max(jnp.abs(got - want)))
+    bound = _analytic_bound(mode, a, b)
+    assert err <= bound, (name, mode, err, bound)
+    # and the bound is not vacuous: quantization DID perturb the result
+    assert err > 0.0
+
+
+@pytest.mark.parametrize("mode", ["w8", "int8"])
+def test_quantized_matmul_interpret_matches_xla(mode):
+    a = _mk((48, 40), 12, scale=0.5)
+    b = _mk((40, 24), 13, scale=0.3)
+    ref = matmul(a, b, quant=mode, out_dtype=jnp.float32, backend="xla")
+    got = matmul(a, b, quant=mode, out_dtype=jnp.float32,
+                 backend="pallas_interpret")
+    # same quantized operands either way; only the accumulator walk differs
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_quant_rejects_bad_spellings():
+    a, b = _mk((16, 8)), _mk((8, 16), 1)
+    with pytest.raises(ValueError, match="trans='nn'"):
+        matmul(a, b.T, trans="nt", quant="w8")
+    with pytest.raises(ValueError, match="dequant scale"):
+        matmul(a, b, quant="w8", epilogue=Epilogue(scale_vec=True),
+               scale=jnp.ones((16,)))
+
+
+# ---------------------------------------------------------------------------
+# Straight-through VJP: backward runs against the DEQUANTIZED panel
+# ---------------------------------------------------------------------------
+
+def test_quant_vjp_straight_through():
+    a = _mk((64, 32), 20, scale=0.5)
+    b = _mk((32, 48), 21, scale=0.3)
+    ga, gb = jax.grad(
+        lambda a_, b_: matmul(a_, b_, quant="w8",
+                              out_dtype=jnp.float32).sum(),
+        argnums=(0, 1))(a, b)
+    q, s = quant.quantize_weights(b, quant.QuantConfig(mode="w8"))
+    w_dq = quant.dequantize(q, s)
+    ones = jnp.ones((64, 48), jnp.float32)
+    np.testing.assert_allclose(ga, ones @ w_dq.T, rtol=1e-5, atol=1e-5)
+    # dW is straight-through: the cotangent of the full-precision panel
+    np.testing.assert_allclose(gb, a.T @ ones, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp8_e4m3"])
+def test_quant_grads_finite(mode):
+    a = _mk((32, 16), 22, scale=0.5)
+    b = _mk((16, 24), 23, scale=0.3)
+    ga, gb = jax.grad(
+        lambda a_, b_: (matmul(a_, b_, quant=mode,
+                               out_dtype=jnp.float32) ** 2).sum(),
+        argnums=(0, 1))(a, b)
+    assert bool(jnp.all(jnp.isfinite(ga))) and bool(jnp.all(jnp.isfinite(gb)))
+
+
+# ---------------------------------------------------------------------------
+# Per-expert bias epilogue: ragged + batched, forward and VJP parity
+# ---------------------------------------------------------------------------
+
+def _ragged_operands(rows=(5, 0, 7), k=16, n=24):
+    g = len(rows)
+    offsets = jnp.array(np.concatenate([[0], np.cumsum(rows)]), jnp.int32)
+    t = int(offsets[-1])
+    x = _mk((t, k), 30, scale=0.5)
+    w = _mk((g, k, n), 31, scale=0.3)
+    gid = np.repeat(np.arange(g), rows)
+    return x, w, offsets, gid
+
+
+def test_ragged_bias_forward_matches_oracle():
+    x, w, offsets, gid = _ragged_operands()
+    bias = _mk((w.shape[0], w.shape[2]), 32)
+    got = ragged_matmul(x, w, offsets, bias=bias, out_dtype=jnp.float32)
+    want = np.stack([np.asarray(x[i] @ w[gid[i]] + bias[gid[i]])
+                     for i in range(x.shape[0])])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_bias_grad_segment_sums():
+    x, w, offsets, gid = _ragged_operands(rows=(5, 0, 7))
+    bias = _mk((w.shape[0], w.shape[2]), 33)
+    gx, gw, gbias = jax.grad(
+        lambda x_, w_, b_: ragged_matmul(x_, w_, offsets, bias=b_,
+                                         out_dtype=jnp.float32).sum(),
+        argnums=(0, 1, 2))(x, w, bias)
+    # d bias[e] = number of rows expert e saw (sum cotangent = ones)
+    want = np.zeros(bias.shape, np.float32)
+    for i, e in enumerate(gid):
+        want[e] += 1.0
+    np.testing.assert_allclose(gbias, want, rtol=1e-6, atol=1e-6)
+    # dx/dw unchanged by the bias epilogue
+    gx0, gw0 = jax.grad(
+        lambda x_, w_: ragged_matmul(x_, w_, offsets,
+                                     out_dtype=jnp.float32).sum(),
+        argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gx0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gw, gw0, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("per_group", [False, True])
+def test_batched_bias_forward_and_grad(per_group):
+    g, m, k, n = 3, 8, 16, 24
+    a = _mk((g, m, k), 34, scale=0.5)
+    b = _mk((g, k, n), 35, scale=0.3)
+    bias = _mk((g, n), 36) if per_group else _mk((n,), 36)
+    got = batched_matmul(a, b, bias=bias, out_dtype=jnp.float32)
+    bb = bias[:, None, :] if per_group else bias
+    want = jnp.einsum("gmk,gkn->gmn", a, b) + bb
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    gbias = jax.grad(
+        lambda b_: batched_matmul(a, b, bias=b_,
+                                  out_dtype=jnp.float32).sum())(bias)
+    want_g = np.full(bias.shape, float(m if per_group else g * m),
+                     np.float32)
+    np.testing.assert_allclose(gbias, want_g, rtol=1e-6, atol=1e-6)
+
+
+def test_bias_shape_contract_raises():
+    x, w, offsets, _ = _ragged_operands()
+    with pytest.raises(contracts.ContractError, match="bad_bias_shape"):
+        ragged_matmul(x, w, offsets, bias=jnp.ones((w.shape[2] + 1,)),
+                      out_dtype=jnp.float32)
+    a, b = _mk((2, 8, 16)), _mk((2, 16, 24), 1)
+    with pytest.raises(contracts.ContractError, match="bad_bias_shape"):
+        batched_matmul(a, b, bias=jnp.ones((3, 24)), out_dtype=jnp.float32)
+
+
+def test_check_epilogue_vectors_units():
+    epi = Epilogue(bias=True, scale_vec=True)
+    vs = contracts.errors(contracts.check_epilogue_vectors(
+        "dense", (64, 32, 16), epi, bias_shape=(8,), scale_shape=(16,)))
+    assert [v.code for v in vs] == ["bad_bias_shape"]
+    # ragged: both the shared (N,) and per-expert (G, N) layouts are legal
+    ok = contracts.errors(contracts.check_epilogue_vectors(
+        "ragged", (4, 100, 32, 16), epi, bias_shape=(4, 16),
+        scale_shape=(16,)))
+    assert not ok
+    bad = contracts.errors(contracts.check_epilogue_vectors(
+        "ragged", (4, 100, 32, 16), epi, scale_shape=(5, 16)))
+    assert [v.code for v in bad] == ["bad_scale_shape"]
+
+
+# ---------------------------------------------------------------------------
+# Quantized ragged GEMM (the zero-drop MoE expert path)
+# ---------------------------------------------------------------------------
+
+def test_ragged_quant_within_bound_and_grads():
+    x, w, offsets, gid = _ragged_operands(rows=(10, 6, 4), k=32, n=24)
+    got = ragged_matmul(x, w, offsets, quant="w8", out_dtype=jnp.float32)
+    want = np.stack([np.asarray(x[i] @ w[gid[i]])
+                     for i in range(x.shape[0])])
+    cfg = quant.QuantConfig(mode="w8")
+    _, s = quant.quantize_weights(w, cfg)
+    bound = quant.dot_error_bound(
+        x.shape[1], float(jnp.max(jnp.abs(x))), float(jnp.max(jnp.abs(w))),
+        0.0, float(jnp.max(s)))
+    assert float(np.max(np.abs(np.asarray(got) - want))) <= bound
+
+    # straight-through dx: cotangent against the DEQUANTIZED panels
+    gx = jax.grad(lambda x_: ragged_matmul(x_, w, offsets, quant="w8",
+                                           out_dtype=jnp.float32).sum())(x)
+    q, s = quant.quantize_weights(w, cfg)
+    w_dq = quant.dequantize(q, s[:, None, :])
+    want_gx = np.stack([np.asarray(jnp.ones((w.shape[2],)) @ w_dq[e].T)
+                        for e in gid])
+    np.testing.assert_allclose(gx, want_gx, rtol=1e-5, atol=1e-5)
+    gw = jax.grad(lambda w_: (ragged_matmul(x, w_, offsets, quant="w8",
+                                            out_dtype=jnp.float32)
+                              ** 2).sum())(w)
+    assert bool(jnp.all(jnp.isfinite(gw)))
+
+
+def test_ragged_quant_rejects_bias():
+    x, w, offsets, _ = _ragged_operands()
+    with pytest.raises(ValueError, match="does not take a bias"):
+        ragged_matmul(x, w, offsets, quant="w8",
+                      bias=jnp.ones((w.shape[0], w.shape[2])))
+
+
+# ---------------------------------------------------------------------------
+# Zero-drop quantized MoE parity
+# ---------------------------------------------------------------------------
+
+def test_moe_quant_parity_and_identical_routing():
+    from repro.models.moe import init_moe_params, moe_mlp
+    d, f, e = 32, 64, 4
+    params = init_moe_params(KEY, d, f, e)
+    x = _mk((24, d), 40, scale=0.5)
+    ref, aux_ref = moe_mlp(x, params, num_experts=e, top_k=2,
+                           dispatch="ragged", compute_dtype=jnp.float32)
+    got, aux = moe_mlp(x, params, num_experts=e, top_k=2,
+                       dispatch="ragged", compute_dtype=jnp.float32,
+                       quant="w8")
+    # the router is NEVER quantized: identical routing, identical aux loss
+    np.testing.assert_allclose(aux, aux_ref, rtol=0, atol=0)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.05, rel
+
+    gx = jax.grad(lambda x_: moe_mlp(x_, params, num_experts=e, top_k=2,
+                                     dispatch="ragged",
+                                     compute_dtype=jnp.float32,
+                                     quant="int8")[0].sum())(x)
+    assert bool(jnp.all(jnp.isfinite(gx)))
+
+
+def test_moe_capacity_quant_rejected():
+    from repro.models.moe import init_moe_params, moe_mlp
+    params = init_moe_params(KEY, 32, 64, 4)
+    x = _mk((16, 32), 41)
+    with pytest.raises(ValueError, match="ragged"):
+        moe_mlp(x, params, num_experts=4, top_k=1, dispatch="capacity",
+                quant="w8")
+
+
+def test_registry_quant_suffixes():
+    from repro.configs.registry import get_config
+    cfg = get_config("llama4-scout-17b-a16e-w8-smoke")
+    assert cfg.quant == "w8"
+    assert cfg.moe_dispatch == "ragged" or cfg.num_experts > 0
+    assert get_config("gemma3-4b-int8").quant == "int8"
+    assert get_config("gemma3-4b").quant == "none"
+
+
+# ---------------------------------------------------------------------------
+# Plan-store dtype axis: mixed-width keys round-trip; split-K quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state(monkeypatch):
+    monkeypatch.delenv(plan_store.ENV_VAR, raising=False)
+    tuner.clear_plan_cache()
+    yield
+    tuner.clear_plan_cache()
+
+
+def test_dtype_keyed_plan_roundtrip(tmp_path):
+    kw = dict(top_k=2, repeats=1, engine="xla", max_elements=1 << 16)
+    r = autotune.autotune_gemm(4096, 256, 64, 2, 2, b_bytes=1, **kw)
+    assert r.plan.mode == "measured"
+    assert r.in_bytes == 2 and r.b_bytes == 1
+
+    served = tuner.plan_gemm(4096, 256, 64, 2, 2, b_bytes=1)
+    assert served.mode == "cached"
+    # the homogeneous (legacy) key is a DIFFERENT shape signature: the
+    # mixed-width winner must not leak into wide planning
+    assert tuner.plan_gemm(4096, 256, 64, 2, 2).mode == "analytic"
+
+    path = tmp_path / "plans.json"
+    autotune.save_plan_cache(str(path))
+    blob = json.load(open(path))
+    assert any(key.endswith("|bb1") for key in blob["entries"])
+    autotune.clear_plan_store()
+    assert tuner.plan_gemm(4096, 256, 64, 2, 2, b_bytes=1).mode == "analytic"
+    assert autotune.load_plan_cache(str(path)) >= 1
+    again = tuner.plan_gemm(4096, 256, 64, 2, 2, b_bytes=1)
+    assert again.mode == "cached"
+    assert (again.bm, again.bn, again.bk) == (r.plan.bm, r.plan.bn,
+                                              r.plan.bk)
+
+
+def test_int8_key_and_calibration_fraction(tmp_path):
+    kw = dict(top_k=2, repeats=1, engine="xla", max_elements=1 << 16)
+    wide = autotune.autotune_gemm(4096, 256, 64, 4, 4, **kw)
+    narrow = autotune.autotune_gemm(4096, 256, 64, 1, 4, **kw)
+    assert narrow.in_bytes == 1 and narrow.b_bytes is None
+    cal = autotune.calibrate([wide, narrow], store=False)
+    assert cal.flops_frac_int8 is not None and cal.flops_frac_int8 > 0
+    # the int8 fraction survives the JSON round-trip
+    back = plan_store.Calibration.from_json(cal.to_json())
+    assert back.flops_frac_int8 == pytest.approx(cal.flops_frac_int8)
+
+
+def test_mixed_dtype_splitk_record_quarantined(tmp_path):
+    key = "dense|4096x4096x128|ib2|ob2|bb1"
+    good = {"bm": 128, "bn": 128, "bk": 128}
+    assert not contracts.errors(contracts.check_record(key, good))
+    bad = dict(good, nsplit=2)
+    codes = [v.code for v in contracts.errors(
+        contracts.check_record(key, bad))]
+    assert codes == ["splitk_mixed_dtype"]
+
+    path = tmp_path / "cache.json"
+    path.write_text(json.dumps({
+        "schema": plan_store.SCHEMA_VERSION,
+        "device_kind": plan_store.device_kind(),
+        "entries": {key: bad}}))
+    st = plan_store.PlanStore()
+    assert st.load(str(path)) == 0
+    assert st.quarantined[key] == ["splitk_mixed_dtype"]
