@@ -144,6 +144,22 @@ def main() -> None:
     names = args.only.split(",") if args.only else list(SUITES)
     if args.gate:
         names += [g for g in GATED if g not in names]
+        # Fail up front with a clear message when a committed baseline file
+        # is absent — the helpers below return None/{} for unreadable files
+        # (a deliberate grace for partially-populated result dirs), which
+        # would otherwise run the whole gate and pass vacuously.
+        _BASE_FILES = {"moe_ep": "BENCH_moe_ep.json",
+                       "irregular": "BENCH_irregular.json",
+                       "epilogue": "BENCH_epilogue.json",
+                       "quant": "BENCH_quant.json"}
+        missing = [f for f in _BASE_FILES.values()
+                   if not (_RESULTS / f).exists()]
+        if missing:
+            raise SystemExit(
+                "gate: missing committed baseline file(s): "
+                + ", ".join(str(_RESULTS / f) for f in missing)
+                + " — run the gated suites once without --gate and commit "
+                  "the result files to establish baselines")
         baselines = {
             "ep": _ep_ragged_us(_RESULTS / "BENCH_moe_ep.json"),
             "irregular": _last_run(_RESULTS / "BENCH_irregular.json")

@@ -151,3 +151,23 @@ print("pre-quantized spelling agrees; decode bench: "
       "PYTHONPATH=src python -m benchmarks.quant")
 # Zero-drop quantized MoE experts: moe_mlp(..., dispatch="ragged",
 # quant="w8") — or any registry arch as "<arch>-w8" / "-int8".
+
+# 10. Chaos-tested graceful degradation: every failure mode is a seeded,
+#     replayable event (runtime.chaos), and the dispatch ladder degrades
+#     pallas -> XLA / fused -> unfused / EP ring -> gather -> single-device
+#     instead of crashing.  Telemetry counts every degraded serving.
+import warnings
+from repro.core.gemm import plan_mode_stats
+from repro.runtime import chaos
+
+with chaos.chaos(chaos.FaultPlan([chaos.Fault("kernel", at=0)])):
+    with warnings.catch_warnings():         # the rung warns once
+        warnings.simplefilter("ignore", RuntimeWarning)
+        y_deg = matmul(x, w, backend="pallas_interpret")  # kernel "fails"
+np.testing.assert_allclose(y_deg, x @ w, rtol=1e-5, atol=1e-5)
+print("\ninjected kernel fault served by the XLA rung:",
+      plan_mode_stats()["degraded"])        # {'dense:pallas->xla': 1}
+# Subprocess/CI spelling: REPRO_CHAOS="kernel@0;shard_loss@3:chips=4".
+# Elastic training (shard loss -> shrink mesh -> re-plan -> restore ->
+# deterministic replay) lives in repro.runtime.elastic.ElasticRunner;
+# serve containment (retry/quarantine/deadlines) in repro.serve.engine.

@@ -51,8 +51,8 @@ from .cmr import (TPU_V5E, TpuSpec, EpEstimate, PlanEstimate, estimate,
 from .tuner import (GemmPlan, DistPlan, MoeDispatchPlan, Placement, Plan,
                     plan_gemm, plan_batched_gemm, plan_distributed,
                     plan_moe_dispatch, plan_ragged_gemm, tgemm_plan,
-                    clear_plan_cache, effective_spec, epilogue_stats,
-                    plan_mode_stats, preferred_ep_schedule)
+                    clear_plan_cache, degraded_stats, effective_spec,
+                    epilogue_stats, plan_mode_stats, preferred_ep_schedule)
 from .dispatch import (batched_matmul, grouped_matmul, grouped_swiglu,
                        matmul, matmul_swiglu, project, project_swiglu,
                        ragged_matmul, ragged_swiglu)
@@ -73,7 +73,7 @@ __all__ = [
     "plan_gemm", "plan_batched_gemm", "plan_distributed",
     "plan_moe_dispatch", "plan_ragged_gemm", "tgemm_plan",
     "clear_plan_cache",
-    "effective_spec", "epilogue_stats", "plan_mode_stats",
+    "degraded_stats", "effective_spec", "epilogue_stats", "plan_mode_stats",
     "Epilogue", "QuantConfig",
     "matmul", "batched_matmul", "grouped_matmul", "grouped_swiglu",
     "matmul_swiglu", "project", "project_swiglu",

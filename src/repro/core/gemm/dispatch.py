@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,11 +29,53 @@ from ...analysis import contracts as _contracts
 from ...kernels.ftimm import ops as _ops
 from ...kernels.ftimm import ref as _ref
 from ...kernels.ftimm.epilogue import IDENTITY, Epilogue
+from ...runtime import chaos as _chaos
 from .. import quant as _quant
-from .tuner import (note_epilogue, note_plan_use, plan_batched_gemm,
-                    plan_gemm, plan_ragged_gemm)
+from .tuner import (note_degraded, note_epilogue, note_plan_use,
+                    plan_batched_gemm, plan_gemm, plan_ragged_gemm)
 
 _REF = {"nn": _ref.matmul_nn, "tn": _ref.matmul_tn, "nt": _ref.matmul_nt}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch fallback ladder: when a kernel fails (a real launch/trace error
+# or a chaos-injected one), the call degrades one rung instead of taking
+# the request down — pallas -> the XLA oracle with identical fp32-
+# accumulation semantics, fused epilogue -> the unfused two-pass spelling.
+# Every degraded serving is counted in ``tuner.plan_mode_stats()`` and the
+# first occurrence of each rung is logged once.
+# ---------------------------------------------------------------------------
+
+_WARNED_RUNGS: set = set()
+
+
+def _degraded(family: str, rung: str, err: BaseException) -> None:
+    """Count one fallback-ladder serving and log the rung's first use."""
+    note_degraded(family, rung)
+    key = (family, rung)
+    if key not in _WARNED_RUNGS:
+        _WARNED_RUNGS.add(key)
+        warnings.warn(
+            f"gemm dispatch degraded: {family} {rung} "
+            f"({type(err).__name__}: {err})", RuntimeWarning, stacklevel=3)
+
+
+def _wide(x: jax.Array) -> jax.Array:
+    """Upcast narrow-int (quantized) operands for the XLA oracle rungs —
+    values are identical by construction, only the engine changes."""
+    return x.astype(jnp.float32) if jnp.dtype(x.dtype).itemsize == 1 else x
+
+
+def _xla_dense(a: jax.Array, b: jax.Array, trans: str, out_dtype,
+               epi: Epilogue = IDENTITY, bias=None, residual=None,
+               scale=None) -> jax.Array:
+    """The dense XLA oracle rung: fp32-accumulating dot + the epilogue tail
+    applied in the same jit (numerically the unfused planned path)."""
+    if epi.is_identity:
+        return _REF[trans](_wide(a), _wide(b), out_dtype)
+    z = _REF[trans](_wide(a), _wide(b), jnp.float32)
+    return epi.apply(z, bias=bias, residual=residual,
+                     scale=scale).astype(out_dtype)
 
 
 def _check_epi(epi: Epilogue, bias, residual, scale=None) -> None:
@@ -131,21 +174,38 @@ def _run_planned(a: jax.Array, b: jax.Array, trans: str, out_dtype,
             trans=trans, b_bytes=bb)
     note_plan_use("dense", plan)
     if epi.is_identity:
-        return _ops.gemm(
-            a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
-            **plan.kernel_kwargs(),
-        )
+        try:
+            _chaos.fire("kernel")
+            return _ops.gemm(
+                a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
+                **plan.kernel_kwargs(),
+            )
+        except Exception as e:
+            _degraded("dense", "pallas->xla", e)
+            return _xla_dense(a, b, trans, out_dtype)
     note_epilogue("dense", plan.fuse)
     if plan.fuse:
-        return _ops.gemm(
-            a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
-            epilogue=epi, bias=bias, residual=residual, scale=scale,
-            **plan.kernel_kwargs(),
-        )
-    # The plan declined fusion (a measured winner can): identity kernel +
-    # the tail as its own pass, exactly what the tuner priced.
-    z = _ops.gemm(a, b, trans=trans, out_dtype=jnp.float32,
-                  interpret=interpret, **plan.kernel_kwargs())
+        try:
+            _chaos.fire("kernel_fused")
+            return _ops.gemm(
+                a, b, trans=trans, out_dtype=out_dtype, interpret=interpret,
+                epilogue=epi, bias=bias, residual=residual, scale=scale,
+                **plan.kernel_kwargs(),
+            )
+        except Exception as e:
+            # Fused kernel failed: next rung is the unfused spelling below
+            # (identity kernel + separate tail), NOT straight to XLA.
+            _degraded("dense", "fused->unfused", e)
+    # The plan declined fusion (a measured winner can) or the fused kernel
+    # just failed: identity kernel + the tail as its own pass, exactly what
+    # the tuner priced.
+    try:
+        _chaos.fire("kernel")
+        z = _ops.gemm(a, b, trans=trans, out_dtype=jnp.float32,
+                      interpret=interpret, **plan.kernel_kwargs())
+    except Exception as e:
+        _degraded("dense", "pallas->xla", e)
+        return _xla_dense(a, b, trans, out_dtype, epi, bias, residual, scale)
     return epi.apply(z, bias=bias, residual=residual,
                      scale=scale).astype(out_dtype)
 
@@ -412,11 +472,16 @@ def _run_planned_batched(a: jax.Array, b: jax.Array, trans: str, out_dtype,
     note_plan_use("batched", plan)
     if backend == "xla":
         return _ref_batched(a, b, trans, out_dtype)
-    return _ops.batched_gemm(
-        a, b, bm=plan.bm, bn=plan.bn, bk=plan.bk, dim_order=plan.dim_order,
-        trans=trans, out_dtype=out_dtype, edge=plan.edge,
-        interpret=(backend == "pallas_interpret"),
-    )
+    try:
+        _chaos.fire("kernel")
+        return _ops.batched_gemm(
+            a, b, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+            dim_order=plan.dim_order, trans=trans, out_dtype=out_dtype,
+            edge=plan.edge, interpret=(backend == "pallas_interpret"),
+        )
+    except Exception as e:
+        _degraded("batched", "pallas->xla", e)
+        return _ref_batched(_wide(a), _wide(b), trans, out_dtype)
 
 
 @functools.lru_cache(maxsize=None)
@@ -600,7 +665,14 @@ def _make_swiglu_fn(out_dtype, backend: str, family: str, plan_fn, run_fn,
         fused = backend != "xla" and plan.fuse
         note_epilogue(family, backend == "xla" or plan.fuse)
         if fused:
-            return fused_kernel(x, wg, wu, plan)
+            try:
+                _chaos.fire("kernel_fused")
+                return fused_kernel(x, wg, wu, plan)
+            except Exception as e:
+                # Ladder rung: the one-launch SwiGLU kernel failed — fall
+                # back to the two planned GEMMs + elementwise tail (whose
+                # own pallas->xla rung guards the panels' kernels).
+                _degraded(family, "fused->unfused", e)
         a = run_fn(x, wg, "nn", jnp.float32)
         b = run_fn(x, wu, "nn", jnp.float32)
         return (jax.nn.silu(a) * b).astype(out_dtype)
@@ -768,23 +840,37 @@ def _run_planned_ragged(x: jax.Array, w: jax.Array, offsets: jax.Array,
     if not epi.is_identity:
         note_epilogue("ragged", True)
     if backend == "xla":
-        if epi.is_identity:
-            return _xla_ragged(x, w, offsets, trans, out_dtype)
-        # ragged_dot has no narrow-int path on the pinned jax: upcast the
-        # quantized operand(s); the values are identical by construction.
-        xx = x.astype(jnp.float32) if jnp.dtype(x.dtype).itemsize == 1 else x
-        wx = w.astype(jnp.float32) if jnp.dtype(w.dtype).itemsize == 1 else w
-        z = _xla_ragged(xx, wx, offsets, trans, jnp.float32)
-        t = x.shape[0]
-        return epi.apply(
-            z,
-            bias=None if bias is None else _expand_rows(bias, offsets, t),
-            scale=None if scale is None else _expand_rows(scale, offsets, t),
-        ).astype(out_dtype)
-    return _ops.ragged_gemm(
-        x, w, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk, trans=trans,
-        out_dtype=out_dtype, interpret=(backend == "pallas_interpret"),
-        epilogue=None if epi.is_identity else epi, bias=bias, scale=scale)
+        return _xla_ragged_epi(x, w, offsets, trans, out_dtype, epi, bias,
+                               scale)
+    try:
+        _chaos.fire("kernel")
+        return _ops.ragged_gemm(
+            x, w, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk, trans=trans,
+            out_dtype=out_dtype, interpret=(backend == "pallas_interpret"),
+            epilogue=None if epi.is_identity else epi, bias=bias,
+            scale=scale)
+    except Exception as e:
+        _degraded("ragged", "pallas->xla", e)
+        return _xla_ragged_epi(x, w, offsets, trans, out_dtype, epi, bias,
+                               scale)
+
+
+def _xla_ragged_epi(x: jax.Array, w: jax.Array, offsets: jax.Array,
+                    trans: str, out_dtype, epi: Epilogue, bias,
+                    scale) -> jax.Array:
+    """The ragged XLA engine with the per-expert flush vectors row-expanded
+    — both the CPU execution path and the ragged pallas->xla ladder rung."""
+    if epi.is_identity:
+        return _xla_ragged(x, w, offsets, trans, out_dtype)
+    # ragged_dot has no narrow-int path on the pinned jax: upcast the
+    # quantized operand(s); the values are identical by construction.
+    z = _xla_ragged(_wide(x), _wide(w), offsets, trans, jnp.float32)
+    t = x.shape[0]
+    return epi.apply(
+        z,
+        bias=None if bias is None else _expand_rows(bias, offsets, t),
+        scale=None if scale is None else _expand_rows(scale, offsets, t),
+    ).astype(out_dtype)
 
 
 def _run_planned_ragged_dw(x: jax.Array, dy: jax.Array, offsets: jax.Array,
@@ -804,9 +890,15 @@ def _run_planned_ragged_dw(x: jax.Array, dy: jax.Array, offsets: jax.Array,
         # (ragged_dot_general is newer); the masked per-group contraction
         # is the XLA engine here.
         return _ref.ragged_matmul_dw_ref(x, dy, offsets, out_dtype=out_dtype)
-    return _ops.ragged_gemm_dw(
-        x, dy, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk,
-        out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+    try:
+        _chaos.fire("kernel")
+        return _ops.ragged_gemm_dw(
+            x, dy, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+            out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+    except Exception as e:
+        _degraded("ragged", "pallas->xla", e)
+        return _ref.ragged_matmul_dw_ref(_wide(x), _wide(dy), offsets,
+                                         out_dtype=out_dtype)
 
 
 @functools.lru_cache(maxsize=None)
@@ -979,9 +1071,17 @@ def _ragged_swiglu_fn(out_dtype_name: str, backend: str):
             a = _xla_ragged(x, wg, offsets, "nn", jnp.float32)
             b = _xla_ragged(x, wu, offsets, "nn", jnp.float32)
             return (jax.nn.silu(a) * b).astype(out_dtype)
-        return _ops.ragged_gemm_swiglu(
-            x, wg, wu, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk,
-            out_dtype=out_dtype, interpret=(backend == "pallas_interpret"))
+        try:
+            _chaos.fire("kernel_fused")
+            return _ops.ragged_gemm_swiglu(
+                x, wg, wu, offsets, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                out_dtype=out_dtype,
+                interpret=(backend == "pallas_interpret"))
+        except Exception as e:
+            _degraded("ragged", "fused->unfused", e)
+        a = _run_planned_ragged(x, wg, offsets, "nn", jnp.float32, backend)
+        b = _run_planned_ragged(x, wu, offsets, "nn", jnp.float32, backend)
+        return (jax.nn.silu(a) * b).astype(out_dtype)
 
     def fwd(x, wg, wu, offsets):
         return f(x, wg, wu, offsets), (x, wg, wu, offsets)

@@ -61,9 +61,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ...kernels.ftimm.epilogue import IDENTITY, Epilogue
+from ...runtime import chaos as _chaos
 from ..compat import shard_map_unchecked as shard_map
 from . import collective
-from .dispatch import (_backend, _check_epi, _float0_zeros,
+from .dispatch import (_backend, _check_epi, _degraded, _float0_zeros,
                        _run_planned_ragged, _run_planned_ragged_dw,
                        batched_matmul, matmul, ragged_matmul, ragged_swiglu)
 from .tuner import note_plan_use, plan_distributed, preferred_ep_schedule
@@ -676,6 +677,31 @@ def _ep_executor_args(x_p, w, out_dtype, mesh, axis, schedule):
     return axes, schedule, method
 
 
+def _ep_ladder(run, schedule: str, single):
+    """The EP fallback ladder: ring -> gather -> single-device.
+
+    ``run(schedule)`` builds + calls the sharded executor; ``single()`` is
+    the last rung — the plain planned ragged op on the GLOBAL arrays, which
+    is numerically the same computation with the exchange gone (under jit
+    GSPMD gathers sharded operands implicitly).  Each degradation is
+    counted in ``plan_mode_stats()['degraded']`` and logged once.  The
+    ``ep_ring``/``ep_gather`` chaos sites arm here, at trace time, so a
+    jitted program replays its injected degradations deterministically."""
+    if schedule == "ring":
+        try:
+            _chaos.fire("ep_ring")
+            return run("ring")
+        except Exception as e:
+            _degraded("ep", "ring->gather", e)
+            schedule = "gather"
+    try:
+        _chaos.fire("ep_gather")
+        return run(schedule)
+    except Exception as e:
+        _degraded("ep", "gather->single", e)
+        return single()
+
+
 def ep_ragged_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array, *,
                      mesh: Mesh, axis="data", out_dtype=None,
                      backend: str | None = None,
@@ -697,9 +723,17 @@ def ep_ragged_matmul(x: jax.Array, w: jax.Array, group_offsets: jax.Array, *,
     x_p, t, pad_t = _ep_prepare(x, w, mesh, axis)
     axes, schedule, method = _ep_executor_args(x_p, w, out_dtype, mesh,
                                                axis, schedule)
-    fn = _ep_ragged_fn(mesh, axes, out_dtype.name, backend, schedule, method)
-    out = fn(x_p, w, group_offsets.astype(jnp.int32))
-    return out[:t] if pad_t else out
+    offs = group_offsets.astype(jnp.int32)
+
+    def run(sched):
+        fn = _ep_ragged_fn(mesh, axes, out_dtype.name, backend, sched,
+                           method)
+        out = fn(x_p, w, offs)
+        return out[:t] if pad_t else out
+
+    return _ep_ladder(run, schedule,
+                      lambda: ragged_matmul(x, w, offs, out_dtype=out_dtype,
+                                            backend=backend))
 
 
 def ep_ragged_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
@@ -718,10 +752,18 @@ def ep_ragged_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     x_p, t, pad_t = _ep_prepare(x, w_gate, mesh, axis)
     axes, schedule, method = _ep_executor_args(x_p, w_gate, out_dtype, mesh,
                                                axis, schedule)
-    fn = _ep_ragged_swiglu_fn(mesh, axes, out_dtype.name, backend, schedule,
-                              method)
-    out = fn(x_p, w_gate, w_up, group_offsets.astype(jnp.int32))
-    return out[:t] if pad_t else out
+    offs = group_offsets.astype(jnp.int32)
+
+    def run(sched):
+        fn = _ep_ragged_swiglu_fn(mesh, axes, out_dtype.name, backend,
+                                  sched, method)
+        out = fn(x_p, w_gate, w_up, offs)
+        return out[:t] if pad_t else out
+
+    return _ep_ladder(run, schedule,
+                      lambda: ragged_swiglu(x, w_gate, w_up, offs,
+                                            out_dtype=out_dtype,
+                                            backend=backend))
 
 
 def ep_ragged_moe(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
@@ -747,7 +789,17 @@ def ep_ragged_moe(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     x_p, t, pad_t = _ep_prepare(x, w_gate, mesh, axis)
     axes, schedule, method = _ep_executor_args(x_p, w_gate, out_dtype, mesh,
                                                axis, schedule)
-    fn = _ep_ragged_moe_fn(mesh, axes, out_dtype.name, backend, schedule,
-                           method)
-    out = fn(x_p, w_gate, w_up, w_down, group_offsets.astype(jnp.int32))
-    return out[:t] if pad_t else out
+    offs = group_offsets.astype(jnp.int32)
+
+    def run(sched):
+        fn = _ep_ragged_moe_fn(mesh, axes, out_dtype.name, backend, sched,
+                               method)
+        out = fn(x_p, w_gate, w_up, w_down, offs)
+        return out[:t] if pad_t else out
+
+    def single():
+        h = ragged_swiglu(x, w_gate, w_up, offs, backend=backend)
+        return ragged_matmul(h, w_down, offs, out_dtype=out_dtype,
+                             backend=backend)
+
+    return _ep_ladder(run, schedule, single)

@@ -37,6 +37,8 @@ import os
 import tempfile
 from dataclasses import dataclass, field
 
+from ...runtime.chaos import fire as _chaos_fire
+
 SCHEMA_VERSION = 1
 ENV_VAR = "REPRO_PLAN_CACHE"
 
@@ -206,6 +208,9 @@ class PlanStore:
         try:
             with os.fdopen(fd, "w") as fp:
                 json.dump(blob, fp, indent=1, sort_keys=True)
+                fp.flush()
+                os.fsync(fp.fileno())
+            _chaos_fire("plan_save_crash")
             os.replace(tmp, path)
         except BaseException:
             try:

@@ -1020,6 +1020,7 @@ def tgemm_plan(m: int, k: int, n: int,
 
 PLAN_MODE_COUNTS: collections.Counter = collections.Counter()
 EPILOGUE_COUNTS: collections.Counter = collections.Counter()
+DEGRADED_COUNTS: collections.Counter = collections.Counter()
 
 
 def note_plan_use(family: str, plan: Plan) -> None:
@@ -1035,6 +1036,23 @@ def note_epilogue(family: str, fused: bool) -> None:
     ran in the same kernel/jit as the GEMM (the accumulator-flush fusion or
     the single-jit XLA fallback), not as separate output passes."""
     EPILOGUE_COUNTS[(family, "fused" if fused else "separate")] += 1
+
+
+def note_degraded(family: str, rung: str) -> None:
+    """Executors call this when a fallback-ladder rung serves a GEMM the
+    primary engine failed on (kernel launch failure, collective failure,
+    contract-violating plan).  Keyed (family, rung) — e.g. ``("dense",
+    "pallas->xla")`` or ``("ep", "ring->gather")`` — so ``plan_mode_stats``
+    surfaces degraded servings next to the plan modes and serve ``health()``
+    can report degraded mode."""
+    DEGRADED_COUNTS[(family, rung)] += 1
+
+
+def degraded_stats() -> dict[str, int]:
+    """{"family:rung": count} census of fallback-ladder servings (empty ==
+    every planned GEMM ran on its primary engine)."""
+    return {f"{family}:{rung}": count
+            for (family, rung), count in sorted(DEGRADED_COUNTS.items())}
 
 
 def epilogue_stats() -> dict[str, dict[str, int]]:
@@ -1065,6 +1083,10 @@ def plan_mode_stats() -> dict[str, dict[str, int]]:
         epi[kind] = epi.get(kind, 0) + count
     if epi:
         out["epilogue"] = dict(sorted(epi.items()))
+    if DEGRADED_COUNTS:
+        # Degraded servings: how many GEMMs a fallback-ladder rung served
+        # after the primary engine failed (chaos-injected or real).
+        out["degraded"] = degraded_stats()
     return out
 
 
@@ -1083,6 +1105,7 @@ def clear_plan_cache() -> None:
     preferred_ep_schedule.cache_clear()
     PLAN_MODE_COUNTS.clear()
     EPILOGUE_COUNTS.clear()
+    DEGRADED_COUNTS.clear()
     plan_store.reset_store()
     # Executor layers import the tuner; import them lazily to avoid cycles.
     from . import dispatch, distributed

@@ -15,3 +15,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return _compat_make_mesh(shape, axes)
+
+
+def mesh_from_plan(plan, *, devices=None):
+    """The shrunken (data, model) mesh an ``ElasticPlan`` prescribes.
+
+    ``devices`` defaults to the local device list; the mesh takes the first
+    ``plan.chips`` of them — the survivors after elastic exclusion (lost
+    and dropped chips come off the tail).  Raises when fewer devices exist
+    than the plan needs, so a stale plan can't silently oversubscribe."""
+    import jax
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < plan.chips:
+        raise ValueError(
+            f"elastic plan needs {plan.chips} chips but only "
+            f"{len(devs)} devices are visible")
+    return _compat_make_mesh(plan.mesh_shape, ("data", "model"),
+                             devices=devs[:plan.chips])

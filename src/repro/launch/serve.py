@@ -91,12 +91,16 @@ def main() -> None:
     engine.run(reqs)
     for r in reqs:
         print(f"req {r.rid}: {r.out_tokens}")
-    # plan_mode_stats carries an "epilogue" summary entry too; the census is
-    # printed once here as the dedicated coverage line instead.
+    # plan_mode_stats carries "epilogue"/"degraded" summary entries too; the
+    # census and the health snapshot print those dedicated lines instead.
     modes = {fam: v for fam, v in plan_mode_stats().items()
-             if fam != "epilogue"}
+             if fam not in ("epilogue", "degraded")}
     print("plan modes:", modes or "(no planned GEMMs traced)")
     print("epilogue fusion:", fusion_coverage())
+    health = engine.health()
+    print("health:", "DEGRADED" if health["degraded_mode"] else "ok",
+          f"faults={health['faults']}",
+          f"degraded_servings={health['degraded_servings'] or '{}'}")
     print("serving done")
 
 

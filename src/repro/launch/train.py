@@ -1,11 +1,18 @@
 """Training launcher.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b-smoke \
-        --steps 20 [--seq 128 --batch 8] [--mesh 2x4] [--ckpt /tmp/ck]
+        --steps 20 [--seq 128 --batch 8] [--mesh 2x4] [--ckpt /tmp/ck] \
+        [--elastic [--model-parallel 1]]
 
 On real hardware the same entry runs under ``jax.distributed.initialize``
 (multi-host); in this container a ``--mesh AxB`` spawns that many host
-devices (set before jax import via XLA_FLAGS)."""
+devices (set before jax import via XLA_FLAGS).
+
+``--elastic`` runs under ``runtime.elastic.ElasticRunner`` instead of a
+bare ``Trainer``: a ``HostFailure`` mid-run (real, or injected with
+``REPRO_CHAOS="shard_loss@N:chips=K"``) shrinks the mesh to the
+survivors, re-plans the placed GEMMs, restores the latest checkpoint and
+resumes with deterministic data replay.  Requires ``--ckpt``."""
 from __future__ import annotations
 
 import argparse
@@ -23,6 +30,12 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--elastic", action="store_true",
+                    help="recover from HostFailure by re-meshing onto the "
+                         "survivors (checkpoint-restart; needs --ckpt)")
+    ap.add_argument("--model-parallel", type=int, default=None,
+                    help="TP degree preserved across elastic re-meshes "
+                         "(default: the model axis of --mesh, else 1)")
     args = ap.parse_args()
 
     if args.mesh:
@@ -45,6 +58,23 @@ def main() -> None:
     cfg = get_config(args.arch)
     shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
                         kind="train")
+
+    if args.elastic:
+        from ..runtime.elastic import ElasticRunner
+        dims = tuple(int(x) for x in args.mesh.split("x")) if args.mesh \
+            else (len(jax.devices()),)
+        tp = args.model_parallel or (dims[1] if len(dims) == 2 else 1)
+        opt_cfg = OptConfig(lr=args.lr,
+                            warmup_steps=min(100, args.steps // 10 + 1),
+                            total_steps=args.steps)
+        runner = ElasticRunner(cfg, shape, opt_cfg, ckpt_dir=args.ckpt,
+                               model_parallel=tp, seed=args.seed)
+        runner.run(args.steps)
+        for h in runner.history:
+            print("elastic:", h)
+        print("training done")
+        return
+
     mesh = None
     shardings = {}
     if args.mesh:

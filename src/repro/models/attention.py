@@ -149,6 +149,31 @@ def blockwise_attention(
     return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
+def decode_attention(q, ck, cv, *, q_pos, window):
+    """Single-token decode over the full cache with PER-ROW positions.
+
+    ``q`` (B, 1, H, D); ``ck``/``cv`` (B, S, KVH, D); ``q_pos`` (B,) — the
+    cache row each batch entry just wrote.  ``_mask`` broadcasts the (B,)
+    query positions against the (S,) cache positions into a (B, S) per-row
+    mask, so slots at different depths coexist in one fused decode batch:
+    row b attends exactly k <= q_pos[b] under its own window, and rows
+    beyond its depth (zeros, or a previous occupant's remnants) are
+    excluded instead of inflating the softmax denominator."""
+    b, sq, h, d = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    s_ = _bmm_qk(qg, ck) * (d ** -0.5)           # (B, 1, KVH, G, Skv)
+    kv_pos = jnp.arange(ck.shape[1])
+    msk = _mask(q_pos, kv_pos, window, causal=True)       # (B, Skv)
+    s_ = jnp.where(msk[:, None, None, None, :], s_, NEG_INF)
+    m = jnp.max(s_, axis=-1, keepdims=True)
+    p = jnp.exp(s_ - m)
+    out = _bmm_pv(p, cv) / jnp.maximum(jnp.sum(p, axis=-1)[..., None],
+                                       1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
 def flash_decode(
     q: jax.Array,                # (B, 1, H, D) — replicated over model axis
     ck: jax.Array,               # (B, S, KVH, D) — S sharded over model axis
@@ -244,6 +269,9 @@ def attention(
     * training/prefill: kv from x, optionally written into a fresh cache.
     * decode: ``kv_cache`` given + ``cache_index`` = current position; the
       new token's K/V are inserted and attention runs over the whole buffer.
+      ``cache_index`` may be a (B,) vector (continuous batching at mixed
+      depths): each row writes its own cache row and masks under its own
+      causal horizon; ``positions`` is then (B, S).
     * cross-attention: ``cross_kv`` precomputed (B, S_enc, KVH, D) pair.
     * ``residual``: the block's residual stream (B, S, D_model), added in
       the out-projection's fused epilogue — the transformer's ``h + attn``
@@ -251,6 +279,9 @@ def attention(
     """
     b, s, _ = x.shape
     q = dense(x, params["wq"], compute_dtype).reshape(b, s, num_heads, head_dim)
+    # (S,) positions broadcast over the batch; (B, S) are per-row (vector
+    # cache_index decode) and feed rope directly.
+    pos2 = positions if positions.ndim == 2 else positions[None, :]
 
     if cross_kv is not None:
         k, v = cross_kv
@@ -258,7 +289,7 @@ def attention(
         if qk_norm:
             q = rms_norm(q, params["q_norm"])
         if use_rope:
-            q = rope(q, positions[None, :], rope_theta)
+            q = rope(q, pos2, rope_theta)
         out = blockwise_attention(
             q, k, v, q_positions=positions, kv_positions=kv_pos,
             window=0, causal=False, block_kv=block_kv, unroll=unroll)
@@ -270,15 +301,24 @@ def attention(
             q = rms_norm(q, params["q_norm"])
             k = rms_norm(k, params["k_norm"])
         if use_rope:
-            q = rope(q, positions[None, :], rope_theta)
-            k = rope(k, positions[None, :], rope_theta)
+            q = rope(q, pos2, rope_theta)
+            k = rope(k, pos2, rope_theta)
         if kv_cache is not None:
             ck, cv = kv_cache
             assert cache_index is not None
-            ck = jax.lax.dynamic_update_slice(
-                ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+            idx = jnp.asarray(cache_index)
+            if idx.ndim:
+                # Per-row insert: slot b's token lands at ITS depth idx[b],
+                # not at the batch max.
+                upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+                    c, u, (i, 0, 0)))
+                ck = upd(ck, k.astype(ck.dtype), idx)
+                cv = upd(cv, v.astype(cv.dtype), idx)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
             dist = current_dist()
             if s > 1:
                 # Prefill from an empty cache: the freshly computed K/V span
@@ -287,6 +327,10 @@ def attention(
                 out = blockwise_attention(
                     q, k, v, q_positions=positions, kv_positions=positions,
                     window=window, causal=causal, block_kv=block_kv, unroll=unroll)
+            elif idx.ndim:
+                # Mixed-depth fused decode: per-row masks from the (B,)
+                # positions.
+                out = decode_attention(q, ck, cv, q_pos=idx, window=window)
             elif dist is not None and dist.sp_decode and dist.model_size > 1:
                 # K-parallel decode across chips (paper Alg. 5).
                 out = flash_decode(q, ck, cv, pos=cache_index + s - 1,

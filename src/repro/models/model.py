@@ -147,11 +147,14 @@ def prefill(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array, dict]:
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
                 pos: jax.Array) -> tuple[jax.Array, dict]:
     """One-token decode. tokens: (B, 1) int32; pos: scalar int32 = number of
-    positions already in the cache (VLM: including patches).
+    positions already in the cache (VLM: including patches), or a (B,)
+    vector of PER-SLOT depths — continuous batching serves slots at mixed
+    lengths in one fused step, each writing/masking at its own position.
     Returns (logits (B, V), new cache)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     h = embed(tokens, params["embed"], cdt)
-    positions = pos + jnp.arange(1)
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim else pos + jnp.arange(1)
     h, new_cache, _ = stack_cached(params, cfg, h, positions, cache,
                                    cache_index=pos)
     h = rms_norm(h, params["final_norm"])

@@ -1,5 +1,7 @@
+from . import chaos
+from .chaos import Fault, FaultPlan
 from .fault_tolerance import (ElasticPlan, HeartbeatMonitor, HostFailure,
                               TrainSupervisor, plan_elastic_mesh)
 
-__all__ = ["ElasticPlan", "HeartbeatMonitor", "HostFailure",
-           "TrainSupervisor", "plan_elastic_mesh"]
+__all__ = ["ElasticPlan", "Fault", "FaultPlan", "HeartbeatMonitor",
+           "HostFailure", "TrainSupervisor", "chaos", "plan_elastic_mesh"]

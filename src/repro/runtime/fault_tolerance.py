@@ -19,6 +19,7 @@ here, exercised against simulated hosts in tests/test_runtime.py:
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 
 
@@ -57,7 +58,7 @@ class HeartbeatMonitor:
                  for h, st in self.hosts.items() if st.step_times}
         if len(times) < 2:
             return []
-        med = sorted(times.values())[len(times) // 2]
+        med = statistics.median(times.values())
         return [h for h, t in times.items()
                 if t > self.straggler_factor * med]
 
@@ -118,6 +119,9 @@ class TrainSupervisor:
             try:
                 return run_fn(start, plan.mesh_shape)
             except HostFailure as e:
+                self.history.append({"attempt": attempt,
+                                     "failure": type(e).__name__,
+                                     "lost_chips": e.lost_chips})
                 chips = plan.chips - e.lost_chips
         raise RuntimeError("exhausted retries")
 

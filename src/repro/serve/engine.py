@@ -6,14 +6,31 @@ free slots (prefill writes that slot's cache region), and a single fused
 ``decode_step`` advances every active slot one token per tick — finished
 slots are freed and refilled, so decode batches stay full (the serving-side
 analogue of keeping all DSP cores busy).  Sampling is greedy or temperature.
+The decode runs with PER-SLOT positions (a (B,) vector into ``decode_step``)
+so slots at different depths write and mask at their own rows — a freed
+slot's next occupant never sees the previous occupant's cache rows.
+
+Failure containment (chaos-tested; see ``runtime.chaos``):
+
+  * transient decode faults retry with exponential backoff
+    (``transient_decode`` site), counted in ``health()``;
+  * per-request deadlines (``Request.deadline_s``) expire the request and
+    free its slot instead of wedging the batch;
+  * a non-finite-logits guard quarantines the offending slot — its cache
+    region is evicted and the request re-prefills (prompt + tokens so far)
+    instead of emitting garbage (``nan_logits`` site);
+  * the per-length jitted-prefill cache is a small LRU, with evictions
+    counted in the health snapshot.
 
 Decode attention runs as flash-decode (paper K-parallel) whenever a
 DistContext is active — see models.attention.flash_decode.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +38,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.model import decode_step, make_cache, prefill
+from ..runtime import chaos as _chaos
 
 
 @dataclasses.dataclass
@@ -29,13 +47,18 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    deadline_s: float | None = None   # wall-clock budget from submit()
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    timed_out: bool = False
+    submitted_at: float = 0.0
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0,
+                 prefill_cache_size: int = 8, decode_retries: int = 2,
+                 retry_backoff_s: float = 0.02):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
@@ -46,26 +69,50 @@ class ServeEngine:
         self.active: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
         self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
-        self._prefill_cache: dict[int, object] = {}
+        self._prefill_cache: collections.OrderedDict[int, object] = \
+            collections.OrderedDict()
+        self.prefill_cache_size = prefill_cache_size
+        self.decode_retries = decode_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.faults = {"transient_retries": 0, "deadline_expired": 0,
+                       "nonfinite_quarantined": 0, "prefill_evictions": 0}
 
     # -------------------------- request plumbing ------------------------
 
     def submit(self, req: Request) -> None:
+        req.submitted_at = time.monotonic()
         self.queue.append(req)
 
-    def _prefill_one(self, slot: int, req: Request) -> None:
-        s = len(req.prompt)
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+    def _prefill_fn(self, s: int):
+        """One jitted prefill per prompt length, LRU-bounded: serving
+        arbitrary traffic must not grow a compiled-function cache without
+        bound (each entry holds a full executable)."""
+        fn = self._prefill_cache.get(s)
+        if fn is not None:
+            self._prefill_cache.move_to_end(s)
+            return fn
+        fn = jax.jit(functools.partial(prefill, cfg=self.cfg))
+        self._prefill_cache[s] = fn
+        while len(self._prefill_cache) > self.prefill_cache_size:
+            self._prefill_cache.popitem(last=False)
+            self.faults["prefill_evictions"] += 1
+        return fn
+
+    def _prefill_one(self, slot: int, req: Request,
+                     tokens: np.ndarray | None = None) -> None:
+        """Prefill ``tokens`` (default: the prompt) into ``slot`` and sample
+        one continuation token.  The quarantine path re-enters with
+        prompt + generated-so-far after evicting the slot."""
+        toks = np.asarray(req.prompt if tokens is None else tokens, np.int32)
+        s = len(toks)
+        batch = {"tokens": jnp.asarray(toks)[None, :]}
         if self.cfg.family == "encdec":
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.encoder_seq, self.cfg.d_model), jnp.float32)
         if self.cfg.num_patches:
             batch["patch_embeds"] = jnp.zeros(
                 (1, self.cfg.num_patches, self.cfg.d_model), jnp.float32)
-        fn = self._prefill_cache.get(s)
-        if fn is None:
-            fn = jax.jit(functools.partial(prefill, cfg=self.cfg))
-            self._prefill_cache[s] = fn
+        fn = self._prefill_fn(s)
         one_cache = make_cache(self.cfg, 1, self.max_len)
         logits, one_cache = fn(self.params, batch=batch, cache=one_cache)
         # copy slot cache in
@@ -89,6 +136,69 @@ class ServeEngine:
         return np.asarray(jax.random.categorical(
             sub, logits / req.temperature, axis=-1))
 
+    # --------------------------- containment -----------------------------
+
+    def _free(self, slot: int) -> None:
+        self.active[slot] = None
+        self.pos[slot] = 0
+
+    def _evict_slot(self, slot: int) -> None:
+        """Zero the slot's cache region — the quarantined occupant's state
+        (possibly non-finite) must not survive into the re-prefill."""
+        self.cache = jax.tree.map(
+            lambda leaf: leaf.at[:, slot].set(
+                jnp.zeros_like(leaf[:, slot])), self.cache)
+
+    def _expire_deadlines(self) -> None:
+        now = time.monotonic()
+        for slot, r in enumerate(self.active):
+            if (r is not None and r.deadline_s is not None
+                    and now - r.submitted_at > r.deadline_s):
+                r.done = True
+                r.timed_out = True
+                self.faults["deadline_expired"] += 1
+                self._free(slot)
+        kept = []
+        for r in self.queue:
+            if (r.deadline_s is not None
+                    and now - r.submitted_at > r.deadline_s):
+                r.done = True
+                r.timed_out = True
+                self.faults["deadline_expired"] += 1
+            else:
+                kept.append(r)
+        self.queue = kept
+
+    def _decode_with_retry(self, last: np.ndarray, pos: jnp.ndarray):
+        """Run one fused decode, retrying transient faults with exponential
+        backoff (bounded; the last attempt propagates)."""
+        for attempt in range(self.decode_retries + 1):
+            try:
+                _chaos.fire("transient_decode")
+                return self._decode(self.params, tokens=jnp.asarray(last),
+                                    cache=self.cache, pos=pos)
+            except _chaos.TransientFault:
+                self.faults["transient_retries"] += 1
+                if attempt == self.decode_retries:
+                    raise
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+
+    def health(self) -> dict:
+        """Operational snapshot: slot occupancy, fault counters, and the
+        dispatch ladder's degraded-servings telemetry."""
+        from ..core.gemm import plan_mode_stats
+        degraded = plan_mode_stats().get("degraded", {})
+        return {
+            "active_slots": sum(r is not None for r in self.active),
+            "queue_depth": len(self.queue),
+            "slot_pos": [int(p) for p in self.pos],
+            "prefill_cache_size": len(self._prefill_cache),
+            "faults": dict(self.faults),
+            "degraded_servings": dict(degraded),
+            "degraded_mode": bool(degraded)
+                             or any(self.faults.values()),
+        }
+
     # ------------------------------ stepping -----------------------------
 
     def _admit(self) -> None:
@@ -98,6 +208,7 @@ class ServeEngine:
 
     def step(self) -> int:
         """One decode tick across all active slots; returns #active."""
+        self._expire_deadlines()
         self._admit()
         if not any(r is not None for r in self.active):
             return 0
@@ -105,22 +216,35 @@ class ServeEngine:
         for i, r in enumerate(self.active):
             if r is not None and r.out_tokens:
                 last[i, 0] = r.out_tokens[-1]
-        # single fused decode over all slots (pos varies per slot: use max —
-        # per-slot masks come from each slot's own valid length)
-        pos = jnp.int32(int(self.pos.max()))
-        logits, self.cache = self._decode(
-            self.params, tokens=jnp.asarray(last), cache=self.cache, pos=pos)
+        # Single fused decode over all slots with PER-SLOT positions: each
+        # row writes its own cache row and masks under its own horizon, so
+        # mixed-depth slots (and freed-slot reuse) can't cross-contaminate.
+        logits, self.cache = self._decode_with_retry(
+            last, jnp.asarray(self.pos))
+        logits = _chaos.poison_logits(np.asarray(logits))
+        finite = np.isfinite(logits).all(axis=-1)
         n_active = 0
         for i, r in enumerate(self.active):
             if r is None:
                 continue
-            tok = self._sample(logits[i:i + 1], r)
-            r.out_tokens.append(int(tok[0]))
-            self.pos[i] += 1
+            if not finite[i]:
+                # Quarantine: drop the slot's (possibly poisoned) cache and
+                # re-prefill prompt + tokens generated so far — the request
+                # continues instead of emitting garbage.
+                self.faults["nonfinite_quarantined"] += 1
+                self._evict_slot(i)
+                toks = np.concatenate(
+                    [np.asarray(r.prompt, np.int32),
+                     np.asarray(r.out_tokens, np.int32)])
+                self._prefill_one(i, r, tokens=toks)
+            else:
+                tok = self._sample(jnp.asarray(logits[i:i + 1]), r)
+                r.out_tokens.append(int(tok[0]))
+                self.pos[i] += 1
             if (len(r.out_tokens) >= r.max_new_tokens
                     or self.pos[i] >= self.max_len - 1):
                 r.done = True
-                self.active[i] = None
+                self._free(i)
             else:
                 n_active += 1
         return n_active

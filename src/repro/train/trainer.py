@@ -14,6 +14,7 @@ from ..core.dist import DistContext, use_dist
 from ..data.pipeline import Prefetcher, SyntheticLM
 from ..models.model import init_params
 from ..optim.adamw import OptConfig, init_opt_state
+from ..runtime import chaos as _chaos
 from .train_step import make_train_step
 
 
@@ -82,6 +83,11 @@ class Trainer:
             t0 = time.time()
             try:
                 for _ in range(start, num_steps):
+                    # Chaos sites: a step boundary is where production
+                    # notices shard loss / stragglers, so the injected
+                    # HostFailure propagates to the elastic supervisor.
+                    _chaos.fire("shard_loss")
+                    _chaos.maybe_delay("slow_step")
                     step_i, batch = prefetch.next()
                     params, opt, metrics = self._step_fn(params, opt, batch)
                     if self.monitor is not None:
@@ -98,8 +104,13 @@ class Trainer:
                         self.ckpt.save(step_i, {"params": params, "opt": opt})
             finally:
                 prefetch.close()
-                if self.ckpt:
-                    self.ckpt.save(num_steps - 1,
-                                   {"params": params, "opt": opt},
-                                   blocking=True)
+            # Final save only on clean completion: saving in the finally
+            # block labelled a mid-run failure's state as step num_steps-1,
+            # which made an elastic restart resume PAST the steps it never
+            # ran (the checkpoint must never claim steps that didn't
+            # happen).
+            if self.ckpt:
+                self.ckpt.save(num_steps - 1,
+                               {"params": params, "opt": opt},
+                               blocking=True)
             return params, opt

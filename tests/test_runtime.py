@@ -36,6 +36,21 @@ def test_straggler_detection():
     assert mon.stragglers() == ["h2"]
 
 
+def test_straggler_median_even_host_count():
+    """Even host counts take the true median (mean of the middle pair) —
+    the old upper-median let one slow host drag the threshold up and hide
+    a genuine straggler behind its own slowness."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1", "h2", "h3"], straggler_factor=2.0,
+                           clock=clk)
+    for h, t in [("h0", 1.0), ("h1", 1.0), ("h2", 3.0), ("h3", 5.0)]:
+        mon.hosts[h].step_times.append(t)
+        mon.hosts[h].last_step = 1
+    # median of {1,1,3,5} is 2.0 -> threshold 4.0: h3 flagged, h2 not.
+    # The upper median (3.0 -> threshold 6.0) flagged nobody.
+    assert mon.stragglers() == ["h3"]
+
+
 def test_elastic_plan_preserves_tp():
     p = plan_elastic_mesh(240, model_parallel=16, global_batch=256)
     assert p.model == 16
@@ -74,3 +89,28 @@ def test_supervisor_retry_shrink(tmp_path):
     # after losing 64 chips: 192 survive -> dp=12 (256%12!=0 -> 8) => (8,16)
     assert attempts[1][1] == (8, 16)
     assert attempts[1][0] == 11   # resumes AFTER the checkpoint
+
+
+def test_supervisor_history_records_failures(tmp_path):
+    """The supervisor's post-mortem trail: every attempt AND every failure
+    lands in ``history`` (the old loop only logged attempts, so a recovered
+    run was indistinguishable from a clean one)."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    sup = TrainSupervisor(checkpointer=Checkpointer(tmp_path),
+                          model_parallel=16, global_batch=256,
+                          total_chips=256)
+    calls = []
+
+    def run_fn(start_step, mesh_shape):
+        calls.append(start_step)
+        if len(calls) == 1:
+            raise HostFailure(lost_chips=64, msg="rack power loss")
+        return 7
+
+    assert sup.run(run_fn) == 7
+    kinds = [("failure" if "failure" in h else "attempt")
+             for h in sup.history]
+    assert kinds == ["attempt", "failure", "attempt"]
+    fail = sup.history[1]
+    assert fail["failure"] == "HostFailure" and fail["lost_chips"] == 64
+    assert sup.history[2]["mesh"] == (8, 16)

@@ -25,6 +25,32 @@ def test_engine_greedy_matches_single():
         assert s == b, (s, b)
 
 
+def test_engine_slot_reuse_mixed_lengths():
+    """Regression: freed-slot reuse with MIXED prompt lengths / depths.
+    The fused decode used to run every slot at ``max(pos)`` — the shallower
+    slot wrote the wrong KV row and masked under the deeper slot's horizon,
+    so a short request sharing a batch with a long one diverged from its
+    solo decode.  Per-slot position vectors fix it; this pins the fix."""
+    cfg = get_config("qwen3-1.7b-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    lens, mnts = [5, 12, 9, 7], [3, 10, 6, 8]
+    prompts = [rng.integers(2, cfg.vocab_size, s).astype(np.int32)
+               for s in lens]
+
+    def run(reqs, slots):
+        eng = ServeEngine(cfg, params, batch_slots=slots, max_len=48)
+        return eng.run(reqs)
+
+    single = [run([Request(rid=0, prompt=p, max_new_tokens=m)],
+                  slots=1)[0].out_tokens
+              for p, m in zip(prompts, mnts)]
+    batched = run([Request(rid=i, prompt=p, max_new_tokens=m)
+                   for i, (p, m) in enumerate(zip(prompts, mnts))], slots=2)
+    for r, ref in zip(batched, single):
+        assert r.out_tokens == ref, (r.rid, r.out_tokens, ref)
+
+
 def test_engine_queues_beyond_slots():
     cfg = get_config("mamba2-370m-smoke")
     params = init_params(cfg, jax.random.PRNGKey(0))
