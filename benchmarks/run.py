@@ -20,6 +20,10 @@ every ratchet — exit code 1 otherwise:
     load-bearing paper claims, not one-off measurements.
   * ``quant``: the fresh run keeps ``w8_beats_bf16_decode`` and
     ``fused_never_slower`` true — the weight-only int8 decode win.
+  * ``serve``: the fresh run keeps ``overload_sheds``, ``all_terminal``
+    and ``p99_within_2x`` true, and the admitted 1x p99 stays within the
+    1.30x wall-clock margin of the committed baseline — overload safety
+    and tail latency are contract, not best-effort.
 
 Geomeans over whole shape sweeps are far less noisy than single wall
 times, hence the tighter 1.05x margin on the ratio ratchets.
@@ -35,7 +39,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from . import (autotune, collective, common, cpu_compare,  # noqa: E402
                epilogue, microkernel, moe_ep, multi_core, quant,
-               roofline_table, scalability, single_core)
+               roofline_table, scalability, serve, single_core)
 
 SUITES = {
     "fig3": microkernel.run,
@@ -58,11 +62,14 @@ SUITES = {
     # Weight-only int8 decode GEMMs vs the bf16 baseline, fused vs unfused
     # dequant, on the T2/T3 paper shapes (results/BENCH_quant.json).
     "quant": quant.run,
+    # Open-loop overload sweep through the serving engine at 0.5x/1x/2x of
+    # measured capacity (results/BENCH_serve.json).
+    "serve": serve.run,
 }
 
 GATE_MARGIN = 1.30      # wall-clock noise allowance for the EP gate
 RATCHET_MARGIN = 1.05   # sweep-geomean allowance (averages: low noise)
-GATED = ["moe_ep", "irregular", "epilogue", "quant"]
+GATED = ["moe_ep", "irregular", "epilogue", "quant", "serve"]
 _RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
 
 
@@ -129,6 +136,18 @@ def _gate_failures(baselines: dict) -> list[str]:
     for flag in ("w8_beats_bf16_decode", "fused_never_slower"):
         if not qrun.get(flag):
             fails.append(f"quant: {flag} is false")
+
+    srun = _last_run(_RESULTS / "BENCH_serve.json")
+    for flag in ("overload_sheds", "all_terminal", "p99_within_2x"):
+        if not srun.get(flag):
+            fails.append(f"serve: {flag} is false")
+    p99 = srun.get("admitted_p99_1x_s")
+    base = baselines["serve"]
+    if p99 is None:
+        fails.append("serve: no admitted_p99_1x_s in run record")
+    elif base is not None and p99 > base * GATE_MARGIN:
+        fails.append(f"serve: admitted p99 at 1x regressed {p99:.3f}s > "
+                     f"{GATE_MARGIN}x baseline {base:.3f}s")
     return fails
 
 
@@ -151,7 +170,8 @@ def main() -> None:
         _BASE_FILES = {"moe_ep": "BENCH_moe_ep.json",
                        "irregular": "BENCH_irregular.json",
                        "epilogue": "BENCH_epilogue.json",
-                       "quant": "BENCH_quant.json"}
+                       "quant": "BENCH_quant.json",
+                       "serve": "BENCH_serve.json"}
         missing = [f for f in _BASE_FILES.values()
                    if not (_RESULTS / f).exists()]
         if missing:
@@ -166,6 +186,8 @@ def main() -> None:
             .get("geomean_analytic_over_cached"),
             "epilogue": _last_run(_RESULTS / "BENCH_epilogue.json")
             .get("geomean_masked_speedup"),
+            "serve": _last_run(_RESULTS / "BENCH_serve.json")
+            .get("admitted_p99_1x_s"),
         }
     print("name,us_per_call,derived")
     for name in names:

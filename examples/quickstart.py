@@ -171,3 +171,32 @@ print("\ninjected kernel fault served by the XLA rung:",
 # Elastic training (shard loss -> shrink mesh -> re-plan -> restore ->
 # deterministic replay) lives in repro.runtime.elastic.ElasticRunner;
 # serve containment (retry/quarantine/deadlines) in repro.serve.engine.
+
+# 11. Overload-safe serving: length-bucketed batch prefill (one compiled
+#     prefill per bucket, plan-store warmed for exactly those GEMM
+#     signatures at construction), paged KV with an exhaustion-safe
+#     allocator (page pressure preempts the lowest-priority request and
+#     re-prefills it later — never OOM, never a hang), and CMR-priced
+#     admission control: once calibrated, a deadline the projected
+#     completion cannot meet is rejected with a typed Overloaded at
+#     submit() instead of silently eating the queue.
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.serve import Overloaded, Request, ServeEngine
+
+cfg = get_config("qwen3-1.7b-smoke")
+eng = ServeEngine(cfg, init_params(cfg, key), batch_slots=2, max_len=64)
+print(f"\nserve: buckets={list(eng.buckets)} "
+      f"warmed={eng.cost.snapshot()['warmed_signatures']} GEMM signatures, "
+      f"pool={eng.alloc.total} pages x {eng.page_size} rows")
+prompt = np.arange(2, 10, dtype=np.int32)
+reqs = [Request(rid=i, prompt=prompt, max_new_tokens=4) for i in range(4)]
+eng.run(reqs)                               # calibrates the cost model
+assert eng.cost.calibrated()
+try:
+    eng.submit(Request(rid=9, prompt=prompt, max_new_tokens=40,
+                       deadline_s=1e-9))    # projected > deadline
+except Overloaded as e:
+    print(f"admission control: {e} (projected {e.projected_s:.3f}s)")
+# Overload benchmark (0.5x/1x/2x of measured capacity, shed-rate + p99):
+#     PYTHONPATH=src python -m benchmarks.serve

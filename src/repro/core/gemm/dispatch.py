@@ -1136,6 +1136,10 @@ def clear_dispatch_caches() -> None:
     _swiglu_fn.cache_clear()
     _grouped_swiglu_fn.cache_clear()
     _verify_cached.cache_clear()
+    # The warn-once set must reset with everything else: after a full
+    # cache reset a recurring degradation should log again instead of
+    # being silently swallowed by a stale dedup key.
+    _WARNED_RUNGS.clear()
 
 
 def project(x: jax.Array, w: jax.Array, *, out_dtype=None,

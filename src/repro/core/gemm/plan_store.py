@@ -125,15 +125,21 @@ class PlanStore:
     calibration: Calibration | None = None
     path: str | None = None                 # last load/save path
     quarantined: dict = field(default_factory=dict)
+    lookups: int = 0                        # telemetry: lookup() calls
+    hits: int = 0                           # telemetry: lookups that served
 
     def __len__(self) -> int:
         return len(self.entries)
 
     def lookup(self, key: str) -> dict | None:
         """Record for ``key`` if it was measured on the current device kind."""
+        self.lookups += 1
         if not self.entries or self.kind != device_kind():
             return None
-        return self.entries.get(key)
+        rec = self.entries.get(key)
+        if rec is not None:
+            self.hits += 1
+        return rec
 
     def put(self, key: str, record: dict) -> None:
         self.kind = self.kind or device_kind()
@@ -145,6 +151,8 @@ class PlanStore:
         self.quarantined.clear()
         self.calibration = None
         self.kind = ""
+        self.lookups = 0
+        self.hits = 0
 
     # -- persistence ------------------------------------------------------
 

@@ -74,23 +74,42 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--plan-cache", default=None,
                     help="persistent measured-plan cache to load at warmup")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (paged families)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages (default: slots x max pages)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline; admission control prices "
+                         "against it once calibrated")
     args = ap.parse_args()
 
     load_plan_cache(args.plan_cache)
     cfg = get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, batch_slots=args.slots,
-                         max_len=args.prompt_len + args.max_new + 8)
+                         max_len=args.prompt_len + args.max_new + 8,
+                         page_size=args.page_size, num_pages=args.num_pages)
+    if engine.paged:
+        # Constructing the engine priced every bucket through plan_gemm —
+        # the plan cache is now warm for exactly the serving signatures.
+        cost = engine.cost.snapshot()
+        print(f"warmup: buckets={cost['buckets']} "
+              f"warmed {cost['warmed_signatures']} GEMM signatures "
+              f"(plan-store lookups={cost['store_lookups']} "
+              f"hits={cost['store_hits']}), "
+              f"KV pool {engine.alloc.total} pages x {engine.page_size} rows")
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(2, cfg.vocab_size,
                                         args.prompt_len).astype(np.int32),
                     max_new_tokens=args.max_new,
-                    temperature=args.temperature)
+                    temperature=args.temperature,
+                    deadline_s=args.deadline_s)
             for i in range(args.requests)]
     engine.run(reqs)
     for r in reqs:
-        print(f"req {r.rid}: {r.out_tokens}")
+        tag = " SHED" if r.shed else (" TIMEOUT" if r.timed_out else "")
+        print(f"req {r.rid}{tag}: {r.out_tokens}")
     # plan_mode_stats carries "epilogue"/"degraded" summary entries too; the
     # census and the health snapshot print those dedicated lines instead.
     modes = {fam: v for fam, v in plan_mode_stats().items()

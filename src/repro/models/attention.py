@@ -263,6 +263,7 @@ def attention(
     block_kv: int = 1024,
     unroll: bool = False,
     residual: jax.Array | None = None,
+    page_table: jax.Array | None = None,
 ):
     """Full attention layer. Returns (out, new_kv_cache | None).
 
@@ -276,6 +277,13 @@ def attention(
     * ``residual``: the block's residual stream (B, S, D_model), added in
       the out-projection's fused epilogue — the transformer's ``h + attn``
       without a separate elementwise pass over the output.
+    * paged decode: ``page_table`` (B, max_pages) given, ``kv_cache`` is the
+      PHYSICAL page pool (num_pages, page_size, KVH, D) shared by every
+      slot (see ``serve.kv_pages``).  The new token's K/V scatter at the
+      slot's physical row (table[b, idx//page] * page + idx%page) and each
+      slot's logical view is gathered back out of the pool; the reserved
+      null page 0 absorbs inactive slots' writes and is excluded by the
+      per-row position masks (positions past a slot's depth never attend).
     """
     b, s, _ = x.shape
     q = dense(x, params["wq"], compute_dtype).reshape(b, s, num_heads, head_dim)
@@ -303,7 +311,30 @@ def attention(
         if use_rope:
             q = rope(q, pos2, rope_theta)
             k = rope(k, pos2, rope_theta)
-        if kv_cache is not None:
+        if kv_cache is not None and page_table is not None:
+            # Paged single-token decode: scatter the new K/V at the slot's
+            # physical row, gather the logical per-slot view, run the
+            # per-row-masked decode attention over it.
+            ck, cv = kv_cache                  # (num_pages, page, KVH, D)
+            assert cache_index is not None and s == 1
+            idx = jnp.asarray(cache_index)
+            nump, page = ck.shape[0], ck.shape[1]
+            phys = (page_table[jnp.arange(b), idx // page] * page
+                    + idx % page)
+            flat_k = ck.reshape(nump * page, num_kv_heads, head_dim)
+            flat_v = cv.reshape(nump * page, num_kv_heads, head_dim)
+            flat_k = flat_k.at[phys].set(k[:, 0].astype(flat_k.dtype))
+            flat_v = flat_v.at[phys].set(v[:, 0].astype(flat_v.dtype))
+
+            def view(flat):
+                paged = flat.reshape(nump, page, num_kv_heads, head_dim)
+                return paged[page_table].reshape(
+                    b, -1, num_kv_heads, head_dim)
+
+            out = decode_attention(q, view(flat_k), view(flat_v),
+                                   q_pos=idx, window=window)
+            new_cache = (flat_k.reshape(ck.shape), flat_v.reshape(cv.shape))
+        elif kv_cache is not None:
             ck, cv = kv_cache
             assert cache_index is not None
             idx = jnp.asarray(cache_index)

@@ -24,7 +24,7 @@ from .transformer import (init_cache, init_lm_params, stack_cached,
 from .attention import attention
 
 __all__ = ["init_params", "forward_train", "loss_fn", "prefill",
-           "decode_step", "make_cache", "encode"]
+           "prefill_bucket", "decode_step", "make_cache", "encode"]
 
 
 def init_params(cfg: ModelConfig, key) -> dict:
@@ -144,19 +144,47 @@ def prefill(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array, dict]:
     return logits[:, 0], new_cache
 
 
+def prefill_bucket(params, cfg: ModelConfig, batch, cache,
+                   lens: jax.Array) -> tuple[jax.Array, dict]:
+    """Length-bucketed batch prefill: the whole bucket of right-padded
+    prompts runs through ONE compiled stack pass into a bucket-sized
+    contiguous cache, and each row's logits are taken at ITS last valid
+    position (``lens`` (B,) = true prompt lengths, tokens padded to the
+    bucket on the right).  Causality makes this exact: K/V at position i
+    depend only on token i, and row r's logits at lens[r]-1 attend only to
+    positions <= lens[r]-1 — pad tokens never influence a valid row.
+    Returns ((B, V) logits, cache).  Attention-cache families only (SSM
+    state is recurrent — pad tokens would contaminate it)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"bucketed prefill unsupported for {cfg.family}")
+    h, positions = _embed_inputs(params, cfg, batch)
+    h, new_cache, _ = stack_cached(params, cfg, h, positions, cache,
+                                   cache_index=jnp.int32(0))
+    extra = cfg.num_patches or 0
+    idx = jnp.asarray(lens, jnp.int32) - 1 + extra       # (B,)
+    last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    last = rms_norm(last, params["final_norm"])
+    logits = unembed(last, params["embed"], cfg.vocab_size,
+                     jnp.dtype(cfg.compute_dtype))
+    return logits[:, 0], new_cache
+
+
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
-                pos: jax.Array) -> tuple[jax.Array, dict]:
+                pos: jax.Array, page_table: jax.Array | None = None,
+                ) -> tuple[jax.Array, dict]:
     """One-token decode. tokens: (B, 1) int32; pos: scalar int32 = number of
     positions already in the cache (VLM: including patches), or a (B,)
     vector of PER-SLOT depths — continuous batching serves slots at mixed
     lengths in one fused step, each writing/masking at its own position.
+    ``page_table`` (B, max_pages): ``cache`` holds paged KV pools shared by
+    every slot (see ``serve.kv_pages``) instead of per-slot dense buffers.
     Returns (logits (B, V), new cache)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     h = embed(tokens, params["embed"], cdt)
     pos = jnp.asarray(pos)
     positions = pos[:, None] if pos.ndim else pos + jnp.arange(1)
     h, new_cache, _ = stack_cached(params, cfg, h, positions, cache,
-                                   cache_index=pos)
+                                   cache_index=pos, page_table=page_table)
     h = rms_norm(h, params["final_norm"])
     logits = unembed(h, params["embed"], cfg.vocab_size, cdt)
     return logits[:, 0], new_cache

@@ -153,17 +153,19 @@ def _gathered(x, cfg):
 
 def dense_block(h, p, cfg: ModelConfig, *, positions, window,
                 kv=None, cache_index=None, cross_kv=None, causal=True,
-                use_rope=True):
+                use_rope=True, page_table=None):
     """Returns (h, new_kv, aux).  The residual adds around attention (and
     the MLP, see ``_mlp_or_moe``) ride the out-projections' fused epilogues
-    instead of separate elementwise passes over the block output."""
+    instead of separate elementwise passes over the block output.
+    ``page_table`` switches decode to the paged KV pool (serve.kv_pages)."""
     h, new_kv = attention(
         _gathered(rms_norm(h, p["ln1"]), cfg), p["attn"],
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.head_dim_, positions=positions, window=window,
         causal=causal, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
         use_rope=use_rope, kv_cache=kv, cache_index=cache_index,
-        compute_dtype=_cdt(cfg), unroll=cfg.scan_unroll, residual=h)
+        compute_dtype=_cdt(cfg), unroll=cfg.scan_unroll, residual=h,
+        page_table=page_table)
     if cross_kv is not None:
         h, _ = attention(
             rms_norm(h, p["ln_cross"]), p["cross"],
@@ -301,8 +303,10 @@ def _hybrid_train(params, cfg: ModelConfig, h, positions):
 
 
 def stack_cached(params, cfg: ModelConfig, h, positions, cache, cache_index,
-                 *, causal=True, use_rope=True):
-    """Scan with KV/SSM caches (prefill & decode). -> (h, new_cache, aux)."""
+                 *, causal=True, use_rope=True, page_table=None):
+    """Scan with KV/SSM caches (prefill & decode). -> (h, new_cache, aux).
+    ``page_table`` (B, max_pages): the cache leaves are paged pools shared
+    across slots (one table for every layer — it rides the scan closure)."""
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         windows = layer_windows(cfg)
@@ -313,7 +317,7 @@ def stack_cached(params, cfg: ModelConfig, h, positions, cache, cache_index,
             hh, new_kv, a = dense_block(
                 hh, p, cfg, positions=positions, window=w,
                 kv=(k_l, v_l), cache_index=cache_index, causal=causal,
-                use_rope=use_rope)
+                use_rope=use_rope, page_table=page_table)
             return (hh, aux + a), new_kv
 
         (h, aux), (nk, nv) = jax.lax.scan(

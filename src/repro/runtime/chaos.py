@@ -30,6 +30,13 @@ Sites wired in this repo:
                     payload ``delay_s``)
     plan_save_crash plan-store ``save`` between temp-write and rename
                     (the crash-mid-save atomicity test)
+    page_exhaustion serve KV page allocation (forces the allocator to
+                    report exhaustion -> the preempt/re-prefill path even
+                    when free pages remain)
+    bucket_miss     serve prefill bucket lookup (forces a miss -> the
+                    legacy exact-length prefill fallback rung)
+    burst_arrival   the serve benchmark's arrival process (payload
+                    ``burst`` = extra arrivals injected at once)
 
 Activation: ``chaos(plan)`` context manager, or the ``REPRO_CHAOS`` env
 var (``site@occurrence[xcount][:key=value,...]`` specs joined by ``;``,
@@ -45,6 +52,16 @@ import os
 import time
 
 ENV_VAR = "REPRO_CHAOS"
+
+# Every probe site wired in the repo (the docstring above documents each).
+# ``parse_env`` validates against this set so a typo'd CI spec fails loudly
+# at startup instead of silently arming nothing.  Programmatic ``Fault``
+# construction is NOT gated on it (tests invent sites freely).
+KNOWN_SITES = frozenset({
+    "kernel", "kernel_fused", "ep_ring", "ep_gather", "shard_loss",
+    "nan_logits", "transient_decode", "slow_step", "plan_save_crash",
+    "page_exhaustion", "bucket_miss", "burst_arrival",
+})
 
 
 class ChaosError(RuntimeError):
@@ -74,6 +91,7 @@ class Fault:
     chips: int = 1          # shard_loss payload: lost chip count
     slot: int = 0           # nan_logits payload: which serve slot
     delay_s: float = 0.0    # slow_step payload
+    burst: int = 1          # burst_arrival payload: extra arrivals at once
 
 
 class FaultPlan:
@@ -105,28 +123,79 @@ class FaultPlan:
         return f"FaultPlan(seed={self.seed}, faults={self.faults})"
 
 
+_PAYLOAD_KEYS = frozenset({"chips", "slot", "delay_s", "burst"})
+
+
+def _bad_segment(segment: str, why: str) -> ValueError:
+    return ValueError(
+        f"malformed {ENV_VAR} segment {segment!r}: {why} "
+        f"(expected site@occurrence[xcount][:key=value,...])")
+
+
 def parse_env(spec: str) -> FaultPlan:
     """``site@occurrence[xcount][:k=v,...]`` specs joined by ``;``.
-    A bare ``seed=N`` entry sets the plan seed."""
+    A bare ``seed=N`` entry sets the plan seed.
+
+    Malformed specs raise ``ValueError`` naming the offending segment — a
+    typo'd CI chaos leg must fail at startup, not silently arm nothing:
+    unknown site names, non-integer occurrences/counts, unknown payload
+    keys, and empty segments (a trailing/doubled ``;``) are all rejected.
+    """
     faults: list[Fault] = []
     seed = 0
-    for part in filter(None, (p.strip() for p in spec.split(";"))):
-        if part.startswith("seed="):
-            seed = int(part[5:])
+    if not spec.strip():
+        return FaultPlan(faults, seed=seed)
+    segments = [p.strip() for p in spec.split(";")]
+    for i, raw in enumerate(segments):
+        if not raw:
+            if i == len(segments) - 1:
+                raise _bad_segment(spec, "trailing ';' leaves an empty "
+                                         "segment")
+            raise _bad_segment(spec, f"empty segment at position {i}")
+        if raw.startswith("seed="):
+            try:
+                seed = int(raw[5:])
+            except ValueError:
+                raise _bad_segment(raw, "seed must be an integer") from None
             continue
+        part = raw
         payload: dict = {}
         if ":" in part:
             part, kv = part.split(":", 1)
             for item in filter(None, kv.split(",")):
-                k, v = item.split("=")
-                payload[k] = float(v) if k == "delay_s" else int(v)
+                if "=" not in item:
+                    raise _bad_segment(raw, f"payload {item!r} is not "
+                                            "key=value")
+                k, v = item.split("=", 1)
+                if k not in _PAYLOAD_KEYS:
+                    raise _bad_segment(
+                        raw, f"unknown payload key {k!r} "
+                             f"(known: {', '.join(sorted(_PAYLOAD_KEYS))})")
+                try:
+                    payload[k] = float(v) if k == "delay_s" else int(v)
+                except ValueError:
+                    raise _bad_segment(raw, f"payload {k}={v!r} is not "
+                                            "numeric") from None
         at, count = 0, 1
         if "@" in part:
             part, occ = part.split("@", 1)
+            occ_raw, cnt = occ, None
             if "x" in occ:
                 occ, cnt = occ.split("x", 1)
-                count = int(cnt)
-            at = int(occ)
+            try:
+                at = int(occ)
+            except ValueError:
+                raise _bad_segment(raw, f"occurrence {occ_raw!r} is not an "
+                                        "integer") from None
+            if cnt is not None:
+                try:
+                    count = int(cnt)
+                except ValueError:
+                    raise _bad_segment(raw, f"count {cnt!r} is not an "
+                                            "integer") from None
+        if part not in KNOWN_SITES:
+            raise _bad_segment(raw, f"unknown site {part!r} "
+                                    f"(known: {', '.join(sorted(KNOWN_SITES))})")
         faults.append(Fault(site=part, at=at, count=count, **payload))
     return FaultPlan(faults, seed=seed)
 

@@ -1,4 +1,8 @@
-from .engine import Request, ServeEngine
+from .engine import Overloaded, Request, ServeEngine
+from .kv_pages import PageAllocator, PagedKV, PagesExhausted, pages_for
+from .buckets import CostModel, bucket_for, make_buckets
 from ..models.attention import flash_decode
 
-__all__ = ["Request", "ServeEngine", "flash_decode"]
+__all__ = ["Overloaded", "Request", "ServeEngine",
+           "PageAllocator", "PagedKV", "PagesExhausted", "pages_for",
+           "CostModel", "bucket_for", "make_buckets", "flash_decode"]

@@ -43,6 +43,58 @@ def test_parse_env_spec():
     assert d.delay_s == 0.5
 
 
+@pytest.mark.parametrize("spec,needle", [
+    ("kernel@0;", "trailing ';'"),
+    ("kernel@0;;slow_step@1", "empty segment"),
+    ("kernle@0", "unknown site 'kernle'"),
+    ("kernel@x", "occurrence 'x' is not an integer"),
+    ("kernel@0x1.5", "count '1.5' is not an integer"),
+    ("shard_loss@0:chps=4", "unknown payload key 'chps'"),
+    ("slow_step@0:delay_s=fast", "payload delay_s='fast' is not numeric"),
+    ("shard_loss@0:chips", "'chips' is not key=value"),
+    ("seed=pi", "seed must be an integer"),
+])
+def test_parse_env_rejects_malformed_specs(spec, needle):
+    """A typo'd REPRO_CHAOS must fail loudly at startup, naming the
+    offending segment — a chaos CI leg that silently arms nothing would
+    pass while testing nothing."""
+    with pytest.raises(ValueError) as ei:
+        chaos.parse_env(spec)
+    msg = str(ei.value)
+    assert "malformed REPRO_CHAOS segment" in msg
+    assert needle in msg, (needle, msg)
+
+
+def test_parse_env_empty_spec_is_no_plan():
+    assert chaos.parse_env("").faults == []
+    assert chaos.parse_env("   ").faults == []
+
+
+def test_parse_env_new_sites_and_burst_payload():
+    p = chaos.parse_env(
+        "page_exhaustion@2;bucket_miss@0x3;burst_arrival@1:burst=8")
+    sites = {f.site: f for f in p.faults}
+    assert sites["page_exhaustion"].at == 2
+    assert sites["bucket_miss"].count == 3
+    assert sites["burst_arrival"].burst == 8
+
+
+def test_clear_plan_cache_resets_degraded_and_warn_once_state():
+    """Regression: ``clear_plan_cache`` is documented as THE single reset
+    entry point, but the dispatch ladder's warn-once dedup set used to
+    survive it — after a reset, a recurring degradation was silently
+    swallowed instead of logged again."""
+    from repro.core.gemm import dispatch, tuner
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        dispatch._degraded("dense", "pallas->xla", RuntimeError("boom"))
+    assert tuner.DEGRADED_COUNTS
+    assert dispatch._WARNED_RUNGS
+    tuner.clear_plan_cache()
+    assert not tuner.DEGRADED_COUNTS
+    assert not dispatch._WARNED_RUNGS
+
+
 def test_context_manager_restores_state():
     with chaos.chaos(chaos.FaultPlan([chaos.Fault("kernel")])):
         assert chaos.active() is not None
@@ -256,10 +308,12 @@ def test_serve_deadline_expires_and_frees_slot():
 
 
 def test_serve_prefill_cache_lru_bounded():
+    # paged=False pins the legacy exact-length rung: bucketed prefill
+    # would fold all four lengths into one compiled bucket (no LRU churn).
     cfg, params, _, Request, ServeEngine = _serve_bits()
     rng = np.random.default_rng(1)
     eng = ServeEngine(cfg, params, batch_slots=1, max_len=48,
-                      prefill_cache_size=2)
+                      prefill_cache_size=2, paged=False)
     eng.run([Request(rid=i,
                      prompt=rng.integers(2, cfg.vocab_size,
                                          4 + i).astype(np.int32),

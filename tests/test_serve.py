@@ -1,10 +1,16 @@
-"""Serving engine: batched continuous decoding matches single-request decode."""
+"""Serving engine: batched continuous decoding matches single-request decode,
+and the overload-safety machinery (admission, shedding, preemption, the
+bucket-miss rung, off-loop detokenization) behaves under pressure."""
+import time
+
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models.model import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.runtime import chaos
+from repro.serve.engine import Overloaded, Request, ServeEngine
 
 
 def test_engine_greedy_matches_single():
@@ -60,3 +66,156 @@ def test_engine_queues_beyond_slots():
     eng = ServeEngine(cfg, params, batch_slots=2, max_len=24)
     done = eng.run(reqs)
     assert all(len(r.out_tokens) == 4 for r in done)
+
+
+# ----------------------- overload-safety machinery -------------------------
+
+def _bits(seed=0):
+    cfg = get_config("qwen3-1.7b-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    return cfg, params, rng
+
+
+def test_page_exhaustion_preempts_and_recovers_bit_identical():
+    """Forced page exhaustion at a decode-growth allocation preempts the
+    lowest-priority (youngest) victim; after re-queue + re-prefill of
+    prompt + generated-so-far, BOTH requests finish with exactly the
+    tokens of the undisturbed run (greedy decode)."""
+    cfg, params, rng = _bits(5)
+    prompts = [rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(2)]
+    mk = lambda: [Request(rid=i, prompt=p, max_new_tokens=8)
+                  for i, p in enumerate(prompts)]
+    ref = [r.out_tokens for r in ServeEngine(
+        cfg, params, batch_slots=2, max_len=32, page_size=4).run(mk())]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, page_size=4)
+    # occurrences 0/1 are the two admission allocs (never preempt); 2 is
+    # the first decode-growth alloc -> the preemption path.
+    with chaos.chaos(chaos.FaultPlan(
+            [chaos.Fault("page_exhaustion", at=2)])):
+        out = eng.run(mk())
+    assert [r.out_tokens for r in out] == ref
+    assert eng.faults["preemptions"] == 1
+    assert eng.health()["degraded_mode"]
+    eng.alloc.check()
+    assert eng.alloc.available == eng.alloc.total   # drained clean
+
+
+def test_bucket_miss_falls_back_to_exact_prefill():
+    cfg, params, rng = _bits(6)
+    prompt = rng.integers(2, cfg.vocab_size, 9).astype(np.int32)
+    mk = lambda: [Request(rid=0, prompt=prompt, max_new_tokens=4)]
+    ref = ServeEngine(cfg, params, batch_slots=1,
+                      max_len=32).run(mk())[0].out_tokens
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32)
+    with chaos.chaos(chaos.FaultPlan([chaos.Fault("bucket_miss", at=0)])):
+        out = eng.run(mk())[0].out_tokens
+    assert out == ref
+    assert eng.faults["bucket_misses"] == 1
+    assert len(eng._prefill_cache) == 1     # the legacy rung compiled
+
+
+def test_admission_rejects_with_typed_overloaded():
+    """Once the cost model is calibrated, a deadline the projected
+    completion cannot meet is rejected at submit() — typed, immediate,
+    nothing queued.  Uncalibrated engines admit unconditionally."""
+    cfg, params, rng = _bits(7)
+    prompt = rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4,
+                       deadline_s=1e-9))   # uncalibrated: admitted
+    eng.queue.clear()
+    # Two calibration requests: the first prefill/step walls per compiled
+    # shape are compile time and deliberately not fed to the cost model.
+    eng.run([Request(rid=1, prompt=prompt, max_new_tokens=4),
+             Request(rid=11, prompt=prompt, max_new_tokens=4)])
+    assert eng.cost.calibrated()
+    with pytest.raises(Overloaded) as ei:
+        eng.submit(Request(rid=2, prompt=prompt, max_new_tokens=40,
+                           deadline_s=1e-9))
+    assert ei.value.projected_s is not None
+    assert ei.value.projected_s > ei.value.deadline_s
+    assert eng.faults["admission_rejected"] == 1
+    assert eng.queue == []                 # rejected, not queued
+
+
+def test_oversized_request_rejected_up_front():
+    cfg, params, rng = _bits(8)
+    prompt = rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64,
+                      page_size=4, num_pages=2)   # pool: 8 KV rows
+    with pytest.raises(Overloaded, match="KV pages"):
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=60))
+
+
+def test_shedding_drops_infeasible_queued_work_oldest_first():
+    cfg, params, rng = _bits(9)
+    prompt = rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    # Two calibration requests (first walls per shape are compile time and
+    # skipped); shedding is estimate-gated so it needs a calibrated model.
+    eng.run([Request(rid=0, prompt=prompt, max_new_tokens=4),
+             Request(rid=10, prompt=prompt, max_new_tokens=4)])
+    # Hand-queue around submit(): two deadline-infeasible requests and one
+    # feasible one behind them — the infeasible pair sheds, the feasible
+    # survives and completes.
+    # Deadlines NOT yet expired (2s out) but infeasible: 100k tokens of
+    # remaining work prices far beyond 2s at any measured step time.
+    now = time.monotonic()
+    doomed = [Request(rid=1, prompt=prompt, max_new_tokens=100_000,
+                      deadline_s=2.0),
+              Request(rid=2, prompt=prompt, max_new_tokens=100_000,
+                      deadline_s=2.0)]
+    ok = Request(rid=3, prompt=prompt, max_new_tokens=2, deadline_s=60.0)
+    for r in doomed + [ok]:
+        r.submitted_at = now
+        eng.queue.append(r)
+    while eng.queue or any(a is not None for a in eng.active):
+        eng.step()
+    assert all(r.shed and r.done for r in doomed)
+    assert eng.faults["shed"] == 2
+    assert not ok.shed and len(ok.out_tokens) == 2
+
+
+def test_detokenize_runs_off_the_decode_loop():
+    """slow_step-style timing proof: a deliberately slow detokenizer must
+    not stall the decode loop — the worker thread absorbs it, and drain()
+    delivers the complete text afterwards."""
+    cfg, params, rng = _bits(10)
+    prompt = rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+    per_tok = 0.05
+    slow = lambda t: (time.sleep(per_tok), f"<{t}>")[1]
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32,
+                      detokenize=slow)
+    eng.run([Request(rid=0, prompt=prompt, max_new_tokens=3)])  # warm/compile
+    req = Request(rid=1, prompt=prompt, max_new_tokens=9)
+    eng.submit(req)
+    t0 = time.monotonic()
+    while eng.queue or any(a is not None for a in eng.active):
+        eng.step()
+    loop_wall = time.monotonic() - t0
+    total_sleep = per_tok * (req.max_new_tokens + 1)
+    assert loop_wall < total_sleep * 0.8, (loop_wall, total_sleep)
+    eng.drain_detok()
+    assert req.text == "".join(f"<{t}>" for t in req.out_tokens)
+    eng.close()
+
+
+def test_priority_protects_high_priority_from_preemption():
+    """Under forced exhaustion the LOWER-priority active request is the
+    victim, even when it is older."""
+    cfg, params, rng = _bits(11)
+    prompts = [rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(2)]
+    lo = Request(rid=0, prompt=prompts[0], max_new_tokens=8, priority=0)
+    hi = Request(rid=1, prompt=prompts[1], max_new_tokens=8, priority=5)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=32, page_size=4)
+    # occ 0/1: admission allocs; occ 2: lo's growth (succeeds untouched);
+    # occ 3: HI's growth forced-exhausted -> victim must be lo (priority 0)
+    # even though lo is the older request.
+    with chaos.chaos(chaos.FaultPlan(
+            [chaos.Fault("page_exhaustion", at=3)])):
+        eng.run([lo, hi])
+    assert eng.faults["preemptions"] == 1
+    assert len(lo.out_tokens) == 8 and len(hi.out_tokens) == 8
